@@ -1,0 +1,69 @@
+"""Shared benchmark harness utilities.
+
+Every fig*.py exposes ``run(quick: bool) -> dict`` and is invoked by
+benchmarks/run.py; results are dumped to benchmarks/results/*.json and
+summarized in EXPERIMENTS.md §Paper-claims.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.cluster.baselines import SYSTEMS, make_simulator
+from repro.cluster.metrics import compare, summarize
+from repro.cluster.simulator import ClusterConfig, SimResult
+from repro.cluster.trace import TraceConfig, generate, scale_arrivals
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# default evaluation setting: 128-chip cluster (paper default), month-1
+# trace compressed so the cluster sits at realistic multi-tenant load.
+DEFAULT_CHIPS = 128
+DEFAULT_JOBS = 800
+DEFAULT_COMPRESS = 25.0
+
+
+def make_trace(jobs: int = DEFAULT_JOBS, months: int = 1, seed: int = 0,
+               compress: float = DEFAULT_COMPRESS):
+    tr = generate(TraceConfig(months=months, jobs_per_month=jobs, seed=seed))
+    return scale_arrivals(tr, compress)
+
+
+def run_systems(trace, systems=SYSTEMS, chips: int = DEFAULT_CHIPS,
+                max_time_mult: float = 1.5) -> Dict[str, SimResult]:
+    horizon = 1.5 * max(j.arrival_time for j in trace)
+    out = {}
+    for s in systems:
+        sim = make_simulator(s, ClusterConfig(total_chips=chips))
+        t0 = time.time()
+        out[s] = sim.run(trace, max_time=horizon * max_time_mult)
+        print(f"    [{s}] simulated in {time.time()-t0:.1f}s")
+    return out
+
+
+def summarize_systems(results: Dict[str, SimResult]) -> Dict[str, dict]:
+    return {k: summarize(v) for k, v in results.items()}
+
+
+def save(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_np_default)
+    print(f"    wrote {path}")
+
+
+def _np_default(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def banner(title: str):
+    print(f"\n=== {title} " + "=" * max(0, 66 - len(title)))

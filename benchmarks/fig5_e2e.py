@@ -1,0 +1,46 @@
+"""Fig. 5 — end-to-end online workload: cluster training throughput (a)
+and job completion time CDF (b) across all five systems."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster.baselines import SYSTEMS
+from repro.cluster.metrics import compare
+
+from benchmarks.common import (banner, make_trace, run_systems, save,
+                               summarize_systems)
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig 5: end-to-end throughput + JCT")
+    trace = make_trace(jobs=300 if quick else 800)
+    results = run_systems(trace, SYSTEMS)
+    summ = summarize_systems(results)
+    comp = compare(results, baseline="mlora")
+
+    print(f"  {'system':20s} {'tput':>9s} {'avg JCT':>10s} "
+          f"{'p95 JCT':>10s} {'util':>6s} {'done':>5s}")
+    for s in SYSTEMS:
+        d = summ[s]
+        print(f"  {s:20s} {d['throughput_samples_per_sec']:9.2f} "
+              f"{d['avg_jct_sec']:10.1f} {d['p95_jct_sec']:10.1f} "
+              f"{d['utilization']:6.3f} {d['completion_rate']:5.2f}")
+
+    t_impr = comp["tlora"]["throughput_x"]
+    j_impr = comp["tlora"]["jct_speedup_x"]
+    vs_meg = (summ["tlora"]["throughput_samples_per_sec"]
+              / summ["megatron"]["throughput_samples_per_sec"])
+    print(f"  => tLoRA vs mLoRA: throughput x{t_impr:.2f} "
+          f"(paper: 1.41x), JCT x{j_impr:.2f} (paper: 5.4x avg)")
+    print(f"  => tLoRA vs Megatron: throughput x{vs_meg:.2f}")
+
+    jct_cdfs = {s: results[s].jct_cdf().tolist()[:2000] for s in SYSTEMS}
+    out = {"summary": summ, "compare": comp,
+           "tlora_vs_megatron_tput_x": vs_meg,
+           "jct_cdf": {k: v for k, v in jct_cdfs.items()}}
+    save("fig5_e2e", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

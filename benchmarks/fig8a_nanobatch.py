@@ -1,0 +1,74 @@
+"""Fig. 8a — adaptive (AIMD) nano-batching vs fixed nano-batch sizes.
+
+(a) Eq. 1 model: AIMD vs every fixed N under several compute/comm mixes.
+(b) REAL wall-clock: grad-accumulated nano-batch scan on this host —
+    fixed N sweep + the AIMD trajectory from train_loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.core.nanobatch import (AIMDController, optimal_nano,
+                                  simulate_step_time)
+from repro.core.ssm import valid_nano_counts
+from repro.train.train_loop import train_group
+
+from benchmarks.common import banner, save
+
+
+def _aimd_final_time(rows, t_comp, t_comm, steps=40):
+    ctl = AIMDController(rows=rows, max_n=rows)
+    n = ctl.n
+    for _ in range(steps):
+        n = ctl.update(simulate_step_time(n, t_comp=t_comp, t_comm=t_comm))
+    return simulate_step_time(ctl.n, t_comp=t_comp, t_comm=t_comm), ctl.n
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig 8a: AIMD nano-batching vs fixed")
+    rows = 64
+    regimes = [("comm-heavy", 0.010, 0.014),
+               ("balanced", 0.010, 0.010),
+               ("compute-heavy", 0.014, 0.004)]
+    model_rows = []
+    for name, tc, tm in regimes:
+        fixed = {n: simulate_step_time(n, t_comp=tc, t_comm=tm)
+                 for n in valid_nano_counts(rows)}
+        t_aimd, n_aimd = _aimd_final_time(rows, tc, tm)
+        best_n = min(fixed, key=fixed.get)
+        worst = max(fixed.values())
+        model_rows.append({
+            "regime": name, "aimd_n": n_aimd,
+            "aimd_ms": t_aimd * 1e3, "best_fixed_n": best_n,
+            "best_fixed_ms": fixed[best_n] * 1e3,
+            "worst_fixed_ms": worst * 1e3,
+            "aimd_within_pct": 100 * (t_aimd / fixed[best_n] - 1)})
+        print(f"  {name:14s}: AIMD N={n_aimd:3d} {t_aimd*1e3:6.2f}ms | "
+              f"best fixed N={best_n:3d} {fixed[best_n]*1e3:6.2f}ms | "
+              f"worst fixed {worst*1e3:6.2f}ms")
+
+    # real wall-clock on host
+    cfg = get_config("tinyllama-1.1b").reduced()
+    jobs = [LoRAJobSpec(f"j{i}", rank=(4, 8)[i % 2], batch_size=4,
+                        seq_len=32) for i in range(2)]
+    real = {}
+    for n in (1, 2, 4, 8):
+        out = train_group(cfg, jobs, steps=4, impl="ref", block_t=8,
+                          adaptive_nano=False, nano_batches=n, remat=False)
+        real[n] = float(np.mean(out["report"].step_times[1:])) * 1e3
+        print(f"  host fixed N={n}: {real[n]:.1f} ms/step")
+    out_aimd = train_group(cfg, jobs, steps=8 if quick else 12, impl="ref",
+                           block_t=8, adaptive_nano=True, remat=False)
+    traj = out_aimd["report"].nano_history
+    print(f"  host AIMD trajectory: {traj}")
+
+    out = {"model": model_rows, "host_fixed_ms": real,
+           "host_aimd_trajectory": traj}
+    save("fig8a_nanobatch", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

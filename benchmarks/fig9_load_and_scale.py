@@ -1,0 +1,51 @@
+"""Fig. 9 / Figs. 12-13 — robustness to system load (arrival-rate
+scaling 0.5x/1x/2x/5x) and to cluster size (32..256 chips)."""
+from __future__ import annotations
+
+from repro.cluster.trace import scale_arrivals
+
+from benchmarks.common import (banner, make_trace, run_systems, save,
+                               summarize_systems)
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig 9: load scaling + cluster size")
+    base = make_trace(jobs=250 if quick else 500, seed=4)
+
+    load_rows = {}
+    for mult in ((1.0, 2.0) if quick else (0.5, 1.0, 2.0, 5.0)):
+        tr = scale_arrivals(base, mult)
+        results = run_systems(tr, ("tlora", "mlora"))
+        summ = summarize_systems(results)
+        ratio = (summ["tlora"]["throughput_samples_per_sec"]
+                 / max(summ["mlora"]["throughput_samples_per_sec"], 1e-9))
+        load_rows[f"x{mult}"] = {"tlora": summ["tlora"],
+                                 "mlora": summ["mlora"],
+                                 "tput_ratio": ratio}
+        print(f"  load x{mult}: tlora/mlora throughput x{ratio:.2f} "
+              f"(paper: 1.2-1.8x), jct {summ['tlora']['avg_jct_sec']:.0f}s"
+              f" vs {summ['mlora']['avg_jct_sec']:.0f}s")
+
+    size_rows = {}
+    for chips in ((64, 128) if quick else (32, 64, 128, 256)):
+        results = run_systems(base, ("tlora",), chips=chips)
+        summ = summarize_systems(results)
+        size_rows[chips] = summ["tlora"]
+        print(f"  {chips:4d} chips: tput "
+              f"{summ['tlora']['throughput_samples_per_sec']:8.1f} "
+              f"jct {summ['tlora']['avg_jct_sec']:8.0f}s "
+              f"done {summ['tlora']['completion_rate']:.2f}")
+
+    tputs = [size_rows[c]["throughput_samples_per_sec"]
+             for c in sorted(size_rows)]
+    monotone = all(a <= b * 1.15 for a, b in zip(tputs, tputs[1:]))
+    print(f"  => throughput scales with cluster size: {monotone}")
+
+    out = {"load": load_rows,
+           "cluster_size": {str(k): v for k, v in size_rows.items()}}
+    save("fig9_load_and_scale", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

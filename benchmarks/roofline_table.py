@@ -1,0 +1,49 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table dryrun_single.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def fmt_ms(v) -> str:
+    return f"{float(v)*1e3:.1f}"
+
+
+def render(results: List[dict]) -> str:
+    ok = [r for r in results if r.get("status") == "ok"]
+    sk = [r for r in results if r.get("status") == "skipped"]
+    fail = [r for r in results if r.get("status") == "fail"]
+
+    lines = []
+    lines.append("| arch | shape | mesh | GB/dev | t_comp ms | t_mem ms "
+                 "| t_coll ms | bottleneck | useful | collectives |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['mem_gb_per_device']:.2f} "
+            f"| {fmt_ms(r['t_compute_s'])} | {fmt_ms(r['t_memory_s'])} "
+            f"| {fmt_ms(r['t_collective_s'])} | {r['bottleneck']} "
+            f"| {r['useful_flops_frac']:.3f} "
+            f"| {r.get('collectives', '')[:60]} |")
+    for r in sk:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                     f"| — | — | — | — | SKIP: {r['reason']} | — | — |")
+    for r in fail:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                     f"| FAIL | {r.get('error', '')[:70]} | | | | | |")
+    lines.append("")
+    lines.append(f"{len(ok)} ok / {len(sk)} skipped / {len(fail)} failed "
+                 f"of {len(results)}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    allr = []
+    for path in sys.argv[1:]:
+        allr.extend(json.load(open(path)))
+    print(render(allr))

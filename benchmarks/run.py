@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5_e2e]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    "fig2_naive_batching",
+    "fig5_e2e",
+    "fig6_utilization",
+    "fig7_kernel_ablation",
+    "fig8a_nanobatch",
+    "fig8b_traces",
+    "fig9_load_and_scale",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    mods = [args.only] if args.only else MODULES
+    status = {}
+    t_all = time.time()
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=args.quick)
+            status[name] = f"ok ({time.time()-t0:.0f}s)"
+        except Exception as e:
+            traceback.print_exc()
+            status[name] = f"FAIL: {type(e).__name__}: {e}"
+    print(f"\n=== benchmark suite ({time.time()-t_all:.0f}s) ===")
+    for name, s in status.items():
+        print(f"  {name:24s} {s}")
+    if any(s.startswith("FAIL") for s in status.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense model
+with four fused LoRA jobs for a few hundred steps, with per-job
+checkpointing and AIMD nano-batching.
+
+By default runs a budget-friendly variant (--steps 30, seq 128); pass
+--full for the ~100M/300-step run.
+
+    PYTHONPATH=src python examples/multi_job_training.py [--full]
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import restore_job, save_job
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.jobs import LoRAJobSpec
+from repro.core.throughput import param_counts
+from repro.train.train_loop import train_group
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "_ckpts")
+
+
+def hundred_m_config() -> ModelConfig:
+    """~100M-param llama-style dense model (trainable on CPU, slowly)."""
+    return dataclasses.replace(
+        get_config("smollm-360m"),
+        name="smol-100m", num_layers=12, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=1536, vocab_size=32768,
+        tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 300 steps (minutes-hours on CPU)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = hundred_m_config()
+        steps = args.steps or 300
+        seq = 256
+    else:
+        cfg = dataclasses.replace(get_config("smollm-360m").reduced(),
+                                  name="smol-demo")
+        steps = args.steps or 30
+        seq = 128
+
+    total, _ = param_counts(cfg)
+    print(f"backbone: {cfg.name}  ({total/1e6:.1f}M params, "
+          f"{cfg.num_layers}L d={cfg.d_model})")
+
+    jobs = [
+        LoRAJobSpec("tenant-0", rank=16, batch_size=2, seq_len=seq),
+        LoRAJobSpec("tenant-1", rank=8, batch_size=2, seq_len=seq),
+        LoRAJobSpec("tenant-2", rank=4, batch_size=1, seq_len=seq),
+        LoRAJobSpec("tenant-3", rank=2, batch_size=1, seq_len=seq),
+    ]
+    t0 = time.time()
+    out = train_group(cfg, jobs, steps=steps, lr=2e-3, impl="ref",
+                      block_t=8, adaptive_nano=True,
+                      log=lambda s: print(s) if "0 " in s[:9] else None)
+    rep = out["report"]
+    print(f"\ntrained {steps} fused steps in {time.time()-t0:.1f}s "
+          f"(AIMD settled at N={rep.nano_history[-1]})")
+
+    # per-job checkpoints (the decouple/re-fuse path, §3.4)
+    os.makedirs(CKPT_DIR, exist_ok=True)
+    for k, job in enumerate(jobs):
+        path = os.path.join(CKPT_DIR, f"{job.job_id}.npz")
+        save_job(path, job.job_id, k, job.rank, out["adapters"],
+                 opt_state=out["opt_state"], step=steps)
+        print(f"  checkpointed {job.job_id} -> {path}")
+
+    # simulate job 2 leaving and re-fusing at a different slot
+    adapters, opt, step = restore_job(
+        os.path.join(CKPT_DIR, "tenant-2.npz"), 0, out["adapters"],
+        out["opt_state"])
+    print(f"re-fused tenant-2 at slot 0 (step {step}) — adapters intact")
+
+    print("\nfinal per-job losses:",
+          np.round(rep.per_job_losses[-1], 3).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Batched multi-adapter serving over one SSM: requests tagged with
+different adapters prefill + decode together through the fused kernel
+(the S-LoRA-style serving counterpart the paper builds on).
+
+    PYTHONPATH=src python examples/serve_adapters.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.train.serve import Request, serve_batch
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    adapters = [
+        LoRAJobSpec("prod/summarize", rank=16, batch_size=1),
+        LoRAJobSpec("prod/translate", rank=8, batch_size=1),
+        LoRAJobSpec("canary/rewrite", rank=4, batch_size=1),
+    ]
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(6):
+        prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 14),
+                              dtype=np.int32)
+        reqs.append(Request(prompt=prompt, adapter_id=i % 3,
+                            max_new_tokens=8))
+        print(f"request {i}: adapter={adapters[i % 3].job_id:16s} "
+              f"prompt_len={len(prompt)}")
+
+    tokens = serve_batch(cfg, adapters, reqs, impl="ref", block_t=8)
+    print("\ngenerated token ids (one fused decode stream, 3 adapters):")
+    for i, row in enumerate(tokens):
+        print(f"  req {i} [{adapters[i % 3].job_id:16s}] {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import save_job, restore_job, slice_job, insert_job
+
+__all__ = ["save_job", "restore_job", "slice_job", "insert_job"]

@@ -1,0 +1,118 @@
+"""Checkpointing: per-job adapter extract/save/restore + optimizer state.
+
+A fused group trains one stacked adapter tree; checkpoints must remain
+*per-job* so a job can leave a group (decouple), resume in a different
+group (re-fuse at a different K/index/r_pad), or ship its adapter.  We
+therefore save each job's un-padded (A, B) slices + its Adam moments,
+keyed by the adapter tree path — not the fused stack.
+
+Format: one ``.npz`` per job (portable, offline-friendly).
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWState
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        seq = [_unflatten_into(v, flat, f"{prefix}{i}/")
+               for i, v in enumerate(template)]
+        return type(template)(seq) if isinstance(template, tuple) else seq
+    return jnp.asarray(flat[prefix[:-1]]).astype(template.dtype)
+
+
+def slice_job(adapters: dict, idx: int, rank: int) -> dict:
+    """Extract job *idx*'s un-padded adapter slices from the fused stack.
+
+    Leaves are {"A": (..., K, d, r_pad), "B": (..., K, r_pad, d)} — the
+    job axis is -3 for A / -3 for B; rank axis is last for A, -2 for B.
+    """
+    def f(path_leaf):
+        name, leaf = path_leaf
+        if name.endswith("/A") or name == "A":
+            return leaf[..., idx, :, :rank]
+        return leaf[..., idx, :rank, :]
+    flat = _flatten(adapters)
+    return {k: f((k, v)) for k, v in flat.items()}
+
+
+def insert_job(adapters: dict, idx: int, rank: int, flat_slices: dict) -> dict:
+    """Write a job's saved slices back into a fused stack (re-fuse)."""
+    flat = _flatten(adapters)
+    out = {}
+    for k, leaf in flat.items():
+        s = jnp.asarray(flat_slices[k]).astype(leaf.dtype)
+        if k.endswith("/A") or k == "A":
+            out[k] = leaf.at[..., idx, :, :rank].set(s)
+        else:
+            out[k] = leaf.at[..., idx, :rank, :].set(s)
+    return _unflatten_into(adapters, out)
+
+
+def save_job(path: str, job_id: str, idx: int, rank: int,
+             adapters: dict, opt_state: Optional[AdamWState] = None,
+             step: int = 0, meta: Optional[dict] = None):
+    """Persist job *idx*'s adapter (and its Adam moments) to ``path``."""
+    payload = {f"adapter/{k}": np.asarray(v)
+               for k, v in slice_job(adapters, idx, rank).items()}
+    if opt_state is not None:
+        payload.update({f"mu/{k}": np.asarray(v) for k, v in
+                        slice_job(opt_state.mu, idx, rank).items()})
+        payload.update({f"nu/{k}": np.asarray(v) for k, v in
+                        slice_job(opt_state.nu, idx, rank).items()})
+    payload["__step__"] = np.asarray(step)
+    payload["__rank__"] = np.asarray(rank)
+    payload["__job_id__"] = np.asarray(job_id)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        np.savez(f, **payload)
+
+
+def load_job(path: str) -> dict:
+    with np.load(path, allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+def restore_job(path: str, idx: int, adapters: dict,
+                opt_state: Optional[AdamWState] = None
+                ) -> Tuple[dict, Optional[AdamWState], int]:
+    """Insert a saved job checkpoint at stack index *idx* (possibly a
+    different index / K / r_pad than it was saved under)."""
+    z = load_job(path)
+    rank = int(z["__rank__"])
+    ad = {k[len("adapter/"):]: v for k, v in z.items()
+          if k.startswith("adapter/")}
+    adapters = insert_job(adapters, idx, rank, ad)
+    if opt_state is not None:
+        mu = {k[3:]: v for k, v in z.items() if k.startswith("mu/")}
+        nu = {k[3:]: v for k, v in z.items() if k.startswith("nu/")}
+        if mu:
+            opt_state = AdamWState(
+                opt_state.step,
+                insert_job(opt_state.mu, idx, rank, mu),
+                insert_job(opt_state.nu, idx, rank, nu))
+    return adapters, opt_state, int(z["__step__"])

@@ -1,0 +1,3 @@
+from repro.cluster import baselines, metrics, simulator, trace
+
+__all__ = ["baselines", "metrics", "simulator", "trace"]

@@ -1,0 +1,243 @@
+"""Trace-driven discrete-event cluster simulator (paper §4.1).
+
+Stands in for the Sailor simulator: replays a job trace against a cluster
+of ``total_chips``, invoking a pluggable grouping policy at each
+scheduling horizon (arrival / completion / periodic).  Step times come
+from the calibrated analytic cost model (core/throughput) — the same
+two-level methodology the paper uses (micro-benchmark profiles feeding a
+trace-driven emulator).
+
+Emits the paper's three metrics: cluster training throughput
+(samples/sec), per-job completion time, and average accelerator
+utilization — consumed by benchmarks/fig5..fig9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.core.jobs import JobRuntimeState, LoRAJobSpec
+from repro.core.scheduler import AdapterScheduler, Group, SchedulerConfig
+from repro.core import throughput as tp
+
+
+@dataclass
+class ClusterConfig:
+    total_chips: int = 128
+    chips_per_node: int = 8
+    horizon: float = 300.0               # scheduling horizon (s)
+    concurrency_cap: int = 128           # runnable-job cap (paper A.1)
+    hw: tp.HardwareSpec = tp.V5E
+    kernel_fused: bool = True
+    reduced_models: bool = False         # price full cfgs (analytic, cached)
+
+
+@dataclass
+class JobLog:
+    spec: LoRAJobSpec
+    arrival: float
+    start: Optional[float] = None
+    finish: Optional[float] = None
+    steps_done: int = 0
+    grouped_steps: int = 0               # steps executed while co-located
+
+    @property
+    def jct(self) -> Optional[float]:
+        return None if self.finish is None else self.finish - self.arrival
+
+    @property
+    def grouping_ratio(self) -> float:
+        return self.grouped_steps / max(self.steps_done, 1)
+
+
+@dataclass
+class SimResult:
+    logs: Dict[str, JobLog]
+    makespan: float
+    samples_done: float
+    busy_chip_seconds: float
+    useful_chip_seconds: float
+    total_chips: int
+    throughput_series: List[Tuple[float, float]] = field(default_factory=list)
+
+    @property
+    def avg_throughput(self) -> float:
+        return self.samples_done / max(self.makespan, 1e-9)
+
+    @property
+    def avg_jct(self) -> float:
+        jcts = [l.jct for l in self.logs.values() if l.jct is not None]
+        return float(np.mean(jcts)) if jcts else float("inf")
+
+    def jct_cdf(self) -> np.ndarray:
+        return np.sort([l.jct for l in self.logs.values()
+                        if l.jct is not None])
+
+    @property
+    def utilization(self) -> float:
+        """Average *useful* accelerator utilization (compute-busy fraction
+        of provisioned chip-time while the cluster had work)."""
+        return self.useful_chip_seconds / max(self.busy_chip_seconds, 1e-9)
+
+    @property
+    def completion_rate(self) -> float:
+        done = sum(1 for l in self.logs.values() if l.finish is not None)
+        return done / max(len(self.logs), 1)
+
+
+GroupPolicy = Callable[[List[JobRuntimeState], ClusterConfig, bool],
+                       List[Group]]
+
+
+def tlora_policy(cfg_of: Callable[[str], ModelConfig],
+                 kernel_fused: bool = True) -> GroupPolicy:
+    """The paper's Adapter Scheduler (Algorithm 1) as a policy."""
+    def policy(jobs: List[JobRuntimeState], cc: ClusterConfig,
+               pressure: bool = False) -> List[Group]:
+        groups: List[Group] = []
+        # groups can only fuse jobs sharing a base model
+        by_model: Dict[str, List[JobRuntimeState]] = {}
+        for j in jobs:
+            by_model.setdefault(j.spec.base_model, []).append(j)
+        for model, js in by_model.items():
+            sched = AdapterScheduler(
+                cfg_of(model),
+                SchedulerConfig(hw=cc.hw, kernel_fused=kernel_fused))
+            node_of = _node_assigner(js, cc)
+            groups.extend(sched.schedule(js, node_of=node_of,
+                                         pressure=pressure))
+        return groups
+    return policy
+
+
+def _node_assigner(jobs: Sequence[JobRuntimeState],
+                   cc: ClusterConfig) -> Callable[[str], int]:
+    """First-fit chip placement -> node id per job (grouping tiers)."""
+    placement: Dict[str, int] = {}
+    cursor = 0
+    for j in jobs:
+        placement[j.spec.job_id] = cursor // cc.chips_per_node
+        cursor += j.spec.gpus
+    return lambda job_id: placement.get(job_id, 0)
+
+
+class ClusterSimulator:
+    def __init__(self, cluster: ClusterConfig, policy: GroupPolicy,
+                 cfg_of: Optional[Callable[[str], ModelConfig]] = None):
+        self.cc = cluster
+        self.policy = policy
+        self._cfg_cache: Dict[str, ModelConfig] = {}
+        self._cfg_of = cfg_of or self._default_cfg_of
+
+    def _default_cfg_of(self, model: str) -> ModelConfig:
+        if model not in self._cfg_cache:
+            cfg = get_config(model)
+            self._cfg_cache[model] = cfg.reduced() if self.cc.reduced_models \
+                else cfg
+        return self._cfg_cache[model]
+
+    # ----------------------------------------------------------- pricing
+    def _group_step_time(self, g: Group) -> float:
+        cfg = self._cfg_of(g.jobs[0].spec.base_model)
+        return tp.group_step_cost(
+            cfg, g.specs, g.chips, hw=self.cc.hw,
+            spans_nodes=g.spans_nodes,
+            kernel_fused=self.cc.kernel_fused).total
+
+    def _group_compute_time(self, g: Group) -> float:
+        cfg = self._cfg_of(g.jobs[0].spec.base_model)
+        return tp.group_step_cost(
+            cfg, g.specs, g.chips, hw=self.cc.hw,
+            spans_nodes=g.spans_nodes,
+            kernel_fused=self.cc.kernel_fused).t_compute_ideal
+
+    # ---------------------------------------------------------------- run
+    def run(self, trace: Sequence[LoRAJobSpec],
+            max_time: Optional[float] = None) -> SimResult:
+        logs = {j.job_id: JobLog(j, j.arrival_time) for j in trace}
+        states = {j.job_id: JobRuntimeState(spec=j) for j in trace}
+        for s in states.values():
+            s.standalone_step_time = tp.standalone_step_time(
+                self._cfg_of(s.spec.base_model), s.spec, hw=self.cc.hw,
+                kernel_fused=self.cc.kernel_fused)
+
+        pending = sorted(trace, key=lambda j: j.arrival_time)
+        active: List[JobRuntimeState] = []
+        t = 0.0
+        samples = 0.0
+        busy = 0.0          # chip-seconds allocated to running groups
+        useful = 0.0        # chip-seconds of saturated-efficiency compute
+        series: List[Tuple[float, float]] = []
+
+        while pending or active:
+            while (pending and pending[0].arrival_time <= t and
+                   len(active) < self.cc.concurrency_cap):
+                active.append(states[pending.pop(0).job_id])
+            if not active:
+                if pending:
+                    t = pending[0].arrival_time
+                    continue
+                break
+
+            # group all active jobs; allocate cluster chips group-by-group
+            # (urgency first); groups that do not fit queue this horizon.
+            pressure = bool(pending and pending[0].arrival_time <= t) or \
+                len(active) > self.cc.concurrency_cap // 2
+            groups = self.policy(active, self.cc, pressure)
+            groups.sort(key=lambda g: -g.urgency())
+            free = self.cc.total_chips
+            running: List[Group] = []
+            for g in groups:
+                if g.chips <= free:
+                    running.append(g)
+                    free -= g.chips
+            running_ids = {j.spec.job_id for g in running for j in g.jobs}
+            for jid in running_ids:
+                if logs[jid].start is None:
+                    logs[jid].start = t
+
+            # advance to the next FUTURE arrival or a full horizon; jobs
+            # already arrived but blocked by the concurrency cap queue.
+            next_arrival = next((j.arrival_time for j in pending
+                                 if j.arrival_time > t), float("inf"))
+            horizon_end = min(t + self.cc.horizon, max(next_arrival, t + 1.0))
+            if max_time is not None:
+                horizon_end = min(horizon_end, max_time)
+            dt = horizon_end - t
+
+            for g in running:
+                step_t = self._group_step_time(g)
+                comp_t = self._group_compute_time(g)
+                steps = int(dt / step_t)
+                grouped = len(g.jobs) > 1
+                for s in g.jobs:
+                    remaining = s.spec.steps_budget - s.steps_done
+                    done = min(steps, remaining)
+                    s.steps_done += done
+                    s.current_step_time = step_t
+                    lg = logs[s.spec.job_id]
+                    lg.steps_done += done
+                    if grouped:
+                        lg.grouped_steps += done
+                    samples += done * s.spec.batch_size
+                    if s.done and lg.finish is None:
+                        lg.finish = t + done * step_t
+                busy += g.chips * dt
+                useful += g.chips * min(dt, steps * comp_t)
+
+            active = [j for j in active if not j.done]
+            series.append((t, samples / max(t + dt, 1e-9)))
+            t = horizon_end
+            if max_time is not None and t >= max_time:
+                break
+
+        return SimResult(logs=logs, makespan=t, samples_done=samples,
+                         busy_chip_seconds=busy, useful_chip_seconds=useful,
+                         total_chips=self.cc.total_chips,
+                         throughput_series=series)

@@ -1,0 +1,5 @@
+from repro.core.jobs import JobRuntimeState, LoRAJobSpec
+from repro.core.lora import MultiLoRA
+from repro.core.ssm import SharedSuperModel
+
+__all__ = ["JobRuntimeState", "LoRAJobSpec", "MultiLoRA", "SharedSuperModel"]

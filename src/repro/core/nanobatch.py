@@ -1,0 +1,85 @@
+"""Adaptive nano-batching: the AIMD controller of paper §3.3 (Eq. 2).
+
+    N_{t+1} = N_t + alpha            if T_t <= T_{t-1} - tau
+            = max(1, floor(beta N))  otherwise
+
+The controller is host-side (it only reads end-to-end step wall time and
+emits the next N), so it works unchanged on CPU, GPU, or TPU.  N is a
+*static* compile parameter of the train step; legal values are divisors
+of the fused row count, and the controller snaps to the nearest legal
+value.  Convergence is O(log N) adjustments — each adjustment step still
+makes training progress, so the tuning overhead is amortized to nothing
+over thousands of iterations (paper §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.ssm import valid_nano_counts
+
+
+@dataclass
+class AIMDController:
+    rows: int                       # fused batch rows (defines legal N)
+    alpha: int = 4                  # additive step (paper default)
+    beta: float = 0.5               # multiplicative backoff (paper default)
+    tau_frac: float = 0.02          # stability margin, fraction of T
+    n: int = 1                      # current nano-batch count
+    max_n: Optional[int] = None
+
+    _last_t: Optional[float] = field(default=None, repr=False)
+    history: List[tuple] = field(default_factory=list, repr=False)
+
+    def __post_init__(self):
+        self._legal = valid_nano_counts(self.rows, self.max_n)
+        self.n = self._snap(self.n)
+
+    def _snap(self, n: int) -> int:
+        return min(self._legal, key=lambda v: (abs(v - n), v))
+
+    def update(self, step_time: float) -> int:
+        """Feed the measured end-to-end batch time; returns next N."""
+        prev = self._last_t
+        if prev is None:
+            # first observation: probe upward
+            nxt = self._snap(self.n + self.alpha)
+        else:
+            tau = self.tau_frac * prev
+            if step_time <= prev - tau:
+                nxt = self._snap(self.n + self.alpha)      # additive increase
+            elif step_time > prev + tau:
+                nxt = self._snap(max(1, int(self.beta * self.n)))  # back off
+            else:
+                nxt = self.n                               # within noise band
+        self.history.append((self.n, step_time))
+        self._last_t = step_time
+        self.n = nxt
+        return nxt
+
+    def converged(self, window: int = 4) -> bool:
+        if len(self.history) < window:
+            return False
+        ns = [n for n, _ in self.history[-window:]]
+        return len(set(ns)) == 1
+
+
+def simulate_step_time(n: int, *, t_comp: float, t_comm: float,
+                       launch_overhead: float = 2e-4) -> float:
+    """Analytic Eq. 1 model used by tests/benchmarks to exercise AIMD
+    without real hardware: per-nano compute and comm overlap perfectly
+    except for the first nano's comm exposure, plus per-launch overhead.
+
+        T(N) = max(T_comp, T_comm) + min(T_comp, T_comm)/N + c*N
+    """
+    bubble = min(t_comp, t_comm) / n
+    return max(t_comp, t_comm) + bubble + launch_overhead * n
+
+
+def optimal_nano(rows: int, *, t_comp: float, t_comm: float,
+                 launch_overhead: float = 2e-4,
+                 max_n: Optional[int] = None) -> int:
+    legal = valid_nano_counts(rows, max_n)
+    return min(legal, key=lambda n: simulate_step_time(
+        n, t_comp=t_comp, t_comm=t_comm, launch_overhead=launch_overhead))

@@ -1,0 +1,208 @@
+"""Adapter Scheduler — Algorithm 1 (paper §3.4).
+
+Online, residual-capacity-aware grouping:
+
+  * sort active jobs by urgency (desc) then residual capacity (asc);
+  * seed with the most constrained job; binary-cut search the residual-
+    sorted tail for the cutoff where adding members stops improving the
+    predicted joint throughput;
+  * enforce per-job progress: reject any merge that pushes a member past
+    its bounded-slowdown constraint Δ_j(G) ≤ Δ_j^max;
+  * hierarchical tiers (node → cross-node → rank): merges that span a
+    wider tier pay the wider tier's bandwidth in the cost model, pruning
+    the combinatorial space bottom-up;
+  * pack-and-reinsert until no beneficial merge remains: O(K log K).
+
+The throughput oracle T̂(G) is core/throughput.group_throughput — the same
+three-term roofline model the dry-run §Roofline uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.jobs import JobRuntimeState, LoRAJobSpec
+from repro.core import throughput as tp
+
+
+@dataclass
+class Group:
+    """A (possibly singleton) set of co-located jobs with pooled chips."""
+    jobs: List[JobRuntimeState]
+    chips: int
+    spans_nodes: bool = False
+
+    @property
+    def specs(self) -> List[LoRAJobSpec]:
+        return [j.spec for j in self.jobs]
+
+    @property
+    def job_ids(self) -> Tuple[str, ...]:
+        return tuple(j.spec.job_id for j in self.jobs)
+
+    def urgency(self) -> float:
+        return max(j.urgency() for j in self.jobs)
+
+    def residual(self, cfg: ModelConfig, hw: tp.HardwareSpec) -> float:
+        cost = tp.group_step_cost(cfg, self.specs, self.chips, hw=hw,
+                                  spans_nodes=self.spans_nodes)
+        return max(0.0, 1.0 - cost.useful_fraction)
+
+
+@dataclass
+class SchedulerConfig:
+    hw: tp.HardwareSpec = tp.V5E
+    kernel_fused: bool = True
+    min_gain: float = 1.02        # merge must beat sum-of-parts by ≥2%
+    max_group: int = 8            # SSM stack width cap (K)
+
+
+class AdapterScheduler:
+    """Hierarchical incremental grouping (Algorithm 1, lines 4-16)."""
+
+    def __init__(self, cfg: ModelConfig,
+                 sched: Optional[SchedulerConfig] = None):
+        self.cfg = cfg
+        self.sched = sched or SchedulerConfig()
+
+    # ------------------------------------------------------------ oracle
+    def throughput(self, group: Group) -> float:
+        return tp.group_throughput(self.cfg, group.specs, group.chips,
+                                   hw=self.sched.hw,
+                                   spans_nodes=group.spans_nodes,
+                                   kernel_fused=self.sched.kernel_fused)
+
+    def _merged(self, a: Group, b: Group, spans: bool) -> Group:
+        return Group(a.jobs + b.jobs, a.chips + b.chips,
+                     spans_nodes=a.spans_nodes or b.spans_nodes or spans)
+
+    def _feasible(self, g: Group) -> bool:
+        if len(g.jobs) > self.sched.max_group:
+            return False
+        if len({j.spec.seq_len for j in g.jobs}) != 1:
+            return False       # fused batch layout requires shared seq_len
+        deltas = tp.slowdowns(self.cfg, g.specs, g.chips, hw=self.sched.hw,
+                              spans_nodes=g.spans_nodes,
+                              kernel_fused=self.sched.kernel_fused)
+        return all(deltas[j.spec.job_id] <= j.spec.max_slowdown
+                   for j in g.jobs)
+
+    # --------------------------------------------------------- binary cut
+    def _binary_cut(self, seed: Group, tail: List[Group], spans: bool,
+                    pressure: bool = False) -> int:
+        """Largest prefix of *tail* whose cumulative merge keeps improving
+        predicted efficiency: O(log n) probes over a unimodal gain curve.
+
+        Under queue pressure the objective is throughput PER CHIP of the
+        elastically shrunk group (freed chips admit queued jobs); otherwise
+        plain joint throughput vs independent execution."""
+        def eff(k: int) -> float:
+            g = seed
+            for cand in tail[:k]:
+                g = self._merged(g, cand, spans)
+            if k and not self._feasible(g):
+                return -1.0
+            parts = [seed] + tail[:k]
+            if pressure:
+                gs = self.shrink(g) if len(g.jobs) > 1 else g
+                base = sum(self.throughput(c) for c in parts) \
+                    / max(sum(c.chips for c in parts), 1)
+                return (self.throughput(gs) / max(gs.chips, 1)) \
+                    / max(base, 1e-12)
+            base = sum(self.throughput(c) for c in parts)
+            return self.throughput(g) / max(base, 1e-12)
+
+        lo, hi = 0, len(tail)
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if eff(mid) >= eff(mid - 1) and eff(mid) > 0:
+                lo = mid
+            else:
+                hi = mid - 1
+        # require net gain over independent execution
+        return lo if lo and eff(lo) >= self.sched.min_gain - 1e-9 else 0
+
+    # ------------------------------------------------------------ shrink
+    def shrink(self, g: Group, margin: float = 0.95) -> Group:
+        """Elastic contribution (§3.4): a fused group shares ONE backbone
+        copy, so under queue pressure it can release chips as long as every
+        member stays within (margin x) its slowdown bound.  Freed chips let
+        the cluster admit more jobs — the capacity story behind the paper's
+        JCT gains."""
+        floor = max(tp.min_chips(self.cfg, hw=self.sched.hw), 1)
+
+        def ok(c: int) -> bool:
+            deltas = tp.slowdowns(self.cfg, g.specs, c, hw=self.sched.hw,
+                                  spans_nodes=g.spans_nodes,
+                                  kernel_fused=self.sched.kernel_fused)
+            return all(deltas[j.spec.job_id] <= margin * j.spec.max_slowdown
+                       for j in g.jobs)
+
+        # slowdown is monotone in chips -> bisect the smallest feasible c
+        lo, hi = floor, g.chips
+        if ok(lo):
+            return Group(g.jobs, lo, g.spans_nodes)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if ok(mid):
+                hi = mid
+            else:
+                lo = mid + 1
+        return Group(g.jobs, hi, g.spans_nodes)
+
+    # ---------------------------------------------------------- schedule
+    def schedule(self, jobs: Sequence[JobRuntimeState],
+                 node_of: Optional[Callable[[str], int]] = None,
+                 pressure: bool = False) -> List[Group]:
+        """One scheduling round: runnable jobs -> final groups.
+
+        pressure: jobs are queueing — shrink group allocations to free
+        chips (elastic contribution)."""
+        singles = [Group([j], max(j.spec.gpus, 1)) for j in jobs]
+        node_of = node_of or (lambda job_id: 0)
+
+        # tier 1: within-node; tier 2: across nodes (wider bandwidth cost)
+        finals: List[Group] = []
+        by_node: Dict[int, List[Group]] = {}
+        for g in singles:
+            by_node.setdefault(node_of(g.job_ids[0]), []).append(g)
+        tier1 = [self._pack(gs, spans=False, pressure=pressure)
+                 for gs in by_node.values()]
+        lifted = [g for gs in tier1 for g in gs]
+        finals = self._pack(lifted, spans=True, pressure=pressure) \
+            if len(by_node) > 1 else lifted
+        if pressure:
+            finals = [self.shrink(g) if len(g.jobs) > 1 else g
+                      for g in finals]
+        return finals
+
+    def _pack(self, queue: List[Group], spans: bool,
+              pressure: bool = False) -> List[Group]:
+        """Incremental pack-and-reinsert loop within one tier."""
+        # sort: urgency desc, residual asc (Algorithm 1 line 5)
+        queue = sorted(queue, key=lambda g: (-g.urgency(),
+                                             g.residual(self.cfg,
+                                                        self.sched.hw)))
+        finals: List[Group] = []
+        while queue:
+            seed = queue.pop(0)
+            # candidates sorted by residual DESC: most slack first — they
+            # are the complementary partners for a constrained seed.
+            tail = sorted(queue,
+                          key=lambda g: -g.residual(self.cfg, self.sched.hw))
+            cut = self._binary_cut(seed, tail, spans, pressure=pressure)
+            if cut == 0:
+                finals.append(seed)
+                continue
+            g = seed
+            for cand in tail[:cut]:
+                g = self._merged(g, cand, spans)
+                queue.remove(cand)
+            # re-insert the merged group for further packing (line 12)
+            queue.insert(0, g)
+            if len(g.jobs) >= self.sched.max_group:
+                queue.remove(g)
+                finals.append(g)
+        return finals

@@ -1,0 +1,208 @@
+"""Shared Super-Model (SSM) — the paper's core abstraction (§3.2).
+
+``SharedSuperModel`` consolidates K LoRA jobs sharing one frozen backbone
+into a single executable model:
+
+  * backbone operators run once over the *union* of all jobs' batches
+    (job-major concatenation, tile-aligned — see data/pipeline.FusedBatcher);
+  * adapters stay job-private branches, stacked ``(L, K, d, r_pad)`` and
+    executed by the fused multi-LoRA kernel (§3.3);
+  * per-job loss normalization keeps forward/backward/optimizer semantics
+    *identical* to isolated training (the paper's lossless claim —
+    validated by tests/test_lossless.py).
+
+The fused model is handed as ONE composite function to the existing
+parallelism planner — here XLA GSPMD via ``jax.jit`` + ``NamedSharding``
+(DESIGN.md §3: the JAX-native analogue of Megatron/Metis planning).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.jobs import LoRAJobSpec
+from repro.core.lora import MultiLoRA, pad_rank
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@dataclass
+class SharedSuperModel:
+    """One fused group: frozen backbone + K stacked adapters."""
+    cfg: ModelConfig
+    jobs: List[LoRAJobSpec]
+    impl: str = "ref"            # fused-LoRA kernel impl (ref|pallas|xla|loop)
+    block_t: int = 8             # token tile (128 on real TPU)
+
+    ranks: np.ndarray = field(init=False)
+    scalings: np.ndarray = field(init=False)
+    r_pad: int = field(init=False)
+
+    def __post_init__(self):
+        assert self.jobs, "SSM needs at least one job"
+        self.ranks = np.array([j.rank for j in self.jobs], np.int32)
+        self.scalings = np.array([j.scaling for j in self.jobs], np.float32)
+        # pad ranks to a small sublane multiple, NOT the token tile: ranks
+        # are a contraction dim; padding 16 -> 128 would 8x the LoRA flops
+        # (§Perf iteration 3 in EXPERIMENTS.md).
+        self.r_pad = pad_rank(int(self.ranks.max()),
+                              multiple=min(self.block_t, 16))
+
+    # -------------------------------------------------------------- build
+    @property
+    def num_jobs(self) -> int:
+        return len(self.jobs)
+
+    def init(self, key) -> Tuple[dict, dict]:
+        """(frozen backbone params, trainable fused adapter stack)."""
+        k1, k2 = jax.random.split(key)
+        params = M.init_model(k1, self.cfg)
+        adapters = M.init_adapters(k2, self.cfg,
+                                   jnp.asarray(self.ranks), r_pad=self.r_pad)
+        return params, adapters
+
+    def _rows_for(self, job: LoRAJobSpec) -> int:
+        """Tile-aligned row count per job (mirrors FusedBatcher layout)."""
+        import math
+        if job.batch_size * job.seq_len % self.block_t == 0:
+            return job.batch_size
+        lcm = self.block_t // math.gcd(self.block_t, job.seq_len)
+        return ((job.batch_size + lcm - 1) // lcm) * lcm
+
+    def lora_ctx(self, adapter_ids: jax.Array) -> MultiLoRA:
+        rows = [self._rows_for(j) for j in self.jobs]
+        return MultiLoRA(adapter_ids=adapter_ids,
+                         ranks=jnp.asarray(self.ranks),
+                         scalings=jnp.asarray(self.scalings),
+                         impl=self.impl, block_t=self.block_t,
+                         seg_rows=max(rows),
+                         equal_segments=len(set(rows)) == 1)
+
+    # --------------------------------------------------------- train step
+    def make_train_step(self, *, lr_fn: Callable, nano_batches: int = 1,
+                        remat: bool = True,
+                        weight_decay: float = 0.0) -> Callable:
+        """Build the fused train step (grad-accumulated over nano-batches).
+
+        Nano-batching (§3.3) splits the fused batch along the batch dim
+        into N slices executed under ``lax.scan``; adapter grads accumulate
+        across slices and the optimizer applies once.  Per-job token
+        denominators are computed over the FULL batch first, so the result
+        is bit-comparable to N=1 (lossless under re-granulation).
+        """
+        cfg, K = self.cfg, self.num_jobs
+
+        def train_step(params, adapters, opt_state, batch):
+            denom = _per_job_token_counts(batch, K, causal=cfg.causal)
+
+            def nano_loss(ad, nb):
+                lora = self.lora_ctx(nb["adapter_ids"])
+                return M.loss_fn(cfg, params, ad, lora, nb, remat=remat,
+                                 per_job_denom=denom)
+
+            grad_fn = jax.grad(nano_loss, has_aux=True)
+
+            if nano_batches == 1:
+                grads, aux = grad_fn(adapters, batch)
+                per_job = aux["per_job"]
+            else:
+                nb_batch = _reshape_nano(batch, nano_batches)
+                zero_g = jax.tree.map(
+                    lambda a: jnp.zeros(a.shape, jnp.float32), adapters)
+
+                def body(carry, nb):
+                    g_acc, pj_acc = carry
+                    g, aux = grad_fn(adapters, nb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, pj_acc + aux["per_job"]), None
+
+                (grads, per_job), _ = jax.lax.scan(
+                    body, (zero_g, jnp.zeros((K,), jnp.float32)), nb_batch)
+
+            lr = lr_fn(opt_state.step)
+            new_adapters, new_opt = adamw.update(
+                grads, opt_state, adapters, lr=lr,
+                weight_decay=weight_decay)
+            metrics = {"loss": per_job.sum(), "per_job_loss": per_job,
+                       "lr": lr}
+            return new_adapters, new_opt, metrics
+
+        return train_step
+
+    # --------------------------------------------------------- serve steps
+    def make_prefill_step(self, shape: InputShape, *, ring: bool = False,
+                          with_cache: bool = True) -> Callable:
+        def prefill_step(params, adapters, batch):
+            lora = self.lora_ctx(batch["adapter_ids"])
+            model_in = {k: v for k, v in batch.items()
+                        if k not in ("adapter_ids", "labels", "loss_mask")}
+            if with_cache:
+                B = batch["adapter_ids"].shape[0]
+                caches = M.init_caches(self.cfg, B, shape.seq_len, ring)
+                logits, _, new_caches, _ = M.forward(
+                    self.cfg, params, adapters, lora, model_in,
+                    caches=caches, cache_pos=0, ring=ring)
+                return logits[:, -1:], new_caches
+            logits, _, _, _ = M.forward(self.cfg, params, adapters, lora,
+                                        model_in)
+            return logits[:, -1:], None
+
+        return prefill_step
+
+    def make_serve_step(self, *, ring: bool = False) -> Callable:
+        def serve_step(params, adapters, caches, batch, pos):
+            lora = self.lora_ctx(batch["adapter_ids"])
+            logits, new_caches = M.decode_step(
+                self.cfg, params, adapters, lora, batch["tokens"], pos,
+                caches, ring=ring)
+            return logits, new_caches
+        return serve_step
+
+    # ------------------------------------------------------------- inputs
+    def decode_buf(self, shape: InputShape) -> int:
+        return (min(shape.seq_len, self.cfg.sliding_window)
+                if shape.sliding_window_variant else shape.seq_len)
+
+    def init_decode_caches(self, shape: InputShape,
+                           batch: Optional[int] = None) -> list:
+        B = batch or shape.global_batch
+        return M.init_caches(self.cfg, B, self.decode_buf(shape),
+                             ring=shape.sliding_window_variant)
+
+
+# --------------------------------------------------------------- helpers
+def _per_job_token_counts(batch: dict, K: int, causal: bool) -> jax.Array:
+    """Full-batch per-job loss-token counts (denominators)."""
+    ids = batch["adapter_ids"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        key = "labels" if "labels" in batch else "tokens"
+        S = batch[key].shape[-1] - (1 if causal else 0)
+        counts = jnp.full(ids.shape, S, jnp.float32)
+    else:
+        m = mask[:, 1:] if causal else mask
+        counts = m.astype(jnp.float32).sum(-1)
+    onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
+    return jnp.clip(onehot.T @ counts, 1)
+
+
+def _reshape_nano(batch: dict, n: int) -> dict:
+    """(R, ...) -> (n, R/n, ...) for scan over nano-batches."""
+    def f(x):
+        assert x.shape[0] % n == 0, (x.shape, n)
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def valid_nano_counts(rows: int, max_n: Optional[int] = None) -> List[int]:
+    """Divisors of the fused row count (legal nano-batch counts)."""
+    out = [n for n in range(1, rows + 1) if rows % n == 0]
+    return [n for n in out if max_n is None or n <= max_n]

@@ -1,0 +1,294 @@
+"""Analytic throughput / cost model (scheduler + simulator + roofline).
+
+Two-level methodology per paper §4.1: micro-benchmark-calibrated analytic
+model standing in for the Sailor simulator.  The model prices one fused
+group step as the max of three roofline terms (compute / HBM / collective)
+on TPU-v5e constants, plus kernel-launch overheads — the same three terms
+the dry-run roofline analysis derives from compiled HLO, so scheduler
+decisions and EXPERIMENTS.md §Roofline speak the same language.
+
+Key behaviours it must reproduce (paper §2, Fig. 2):
+  * memory-bound (small-batch) jobs batch for ~free — weight reads
+    amortize over the union batch;
+  * compute-saturated jobs gain nothing and can regress when grouping
+    forces cross-node collectives;
+  * unfused per-adapter execution (mLoRA / w/o-Kernel-Fuser ablation)
+    pays per-adapter launch overhead and loses overlap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from functools import lru_cache
+
+from repro.configs.base import ModelConfig
+from repro.core.jobs import LoRAJobSpec
+
+
+# ----------------------------------------------------------- hardware
+@dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e (assignment constants)."""
+    peak_flops: float = 197e12          # bf16 / chip
+    hbm_bw: float = 819e9               # bytes/s / chip
+    ici_bw: float = 50e9                # bytes/s / link (intra-pod)
+    dcn_bw: float = 6.25e9              # bytes/s / chip (cross-pod/node)
+    chips_per_node: int = 8             # grouping tier granularity
+    mfu_cap: float = 0.55               # achievable fraction of peak
+    # small-GEMM efficiency: eff = mfu_cap * t/(t + sat_tokens) where t is
+    # tokens-per-chip — mild occupancy penalty for tiny batches
+    # (calibrated against the §4.1 micro-benchmarks, EXPERIMENTS.md).
+    sat_tokens: float = 512.0
+    launch_overhead: float = 30e-6      # per-kernel dispatch cost (s)
+    kernels_per_layer: int = 8          # fused-path launches per layer
+    sync_latency: float = 15e-6         # per-collective latency (s)
+    step_overhead: float = 0.025        # per-step framework cost (s):
+    # host dispatch, optimizer, data feed — amortized across a fused group
+    hbm_capacity: float = 16e9          # bytes / chip (feasibility)
+
+
+V5E = HardwareSpec()
+
+
+# ----------------------------------------------------------- param math
+@lru_cache(maxsize=256)
+def param_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active-per-token) backbone parameter counts."""
+    d = cfg.d_model
+    total = cfg.vocab_size * d
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d
+    from repro.models.model import layer_specs
+    for spec in layer_specs(cfg):
+        if spec.mixer in ("attn", "local_attn"):
+            t = d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+        elif spec.mixer == "mla":
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            t = (d * cfg.num_heads * qk
+                 + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                 + cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_dim
+                                                       + cfg.v_head_dim)
+                 + cfg.num_heads * cfg.v_head_dim * d)
+        elif spec.mixer == "ssd":
+            di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+            d_in_proj = 2 * di + 2 * 8 * N + H
+            t = d * d_in_proj + di * d + cfg.ssm_conv * (di + 2 * 8 * N)
+        elif spec.mixer == "rglru":
+            w = cfg.lru_width
+            t = d * w * 2 + w * d + 2 * w * w + cfg.conv1d_width * w
+        else:
+            raise ValueError(spec.mixer)
+        total += t
+        if spec.ffn == "swiglu":
+            total += 3 * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            per_e = 3 * d * cfg.moe_d_ff
+            total += cfg.num_experts * per_e + d * cfg.num_experts
+            total += cfg.num_shared_experts * per_e
+    return int(total), _active_params(cfg)
+
+
+@lru_cache(maxsize=256)
+def _active_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    act = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    from repro.models.model import layer_specs
+    for spec in layer_specs(cfg):
+        if spec.mixer in ("attn", "local_attn"):
+            act += d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+        elif spec.mixer == "mla":
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            act += (d * cfg.num_heads * qk
+                    + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                    + cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_dim
+                                                          + cfg.v_head_dim)
+                    + cfg.num_heads * cfg.v_head_dim * d)
+        elif spec.mixer == "ssd":
+            di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+            act += d * (2 * di + 2 * 8 * N + H) + di * d
+        elif spec.mixer == "rglru":
+            w = cfg.lru_width
+            act += d * w * 2 + w * d + 2 * w * w
+        if spec.ffn == "swiglu":
+            act += 3 * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            act += (cfg.num_experts_per_tok + cfg.num_shared_experts) \
+                * 3 * d * cfg.moe_d_ff
+    return int(act)
+
+
+@lru_cache(maxsize=1024)
+def lora_param_count(cfg: ModelConfig, rank: int) -> int:
+    from repro.models.model import adapter_param_count
+    return adapter_param_count(cfg, [rank])
+
+
+# ----------------------------------------------------------- step model
+@dataclass(frozen=True)
+class StepCost:
+    t_compute: float          # at workload-dependent efficiency
+    t_compute_ideal: float    # at saturated mfu_cap (useful compute)
+    t_memory: float
+    t_comm: float
+    t_overhead: float
+    overlap: bool = True      # fused kernel + nano-batching hide comm
+
+    @property
+    def total(self) -> float:
+        # fused path: comm overlaps with compute (nano-batch pipelining,
+        # Eq. 1); naive/unfused execution exposes it additively.  The
+        # memory floor (weight streaming) can't be hidden twice.
+        if self.overlap:
+            exposed = max(self.t_compute, self.t_comm)
+        else:
+            exposed = self.t_compute + self.t_comm
+        return max(exposed, self.t_memory) + self.t_overhead
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_comm, "overhead": self.t_overhead}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        """Fraction of the step doing saturated-efficiency compute — the
+        'GPU utilization' the paper reports."""
+        return min(1.0, self.t_compute_ideal / max(self.total, 1e-12))
+
+
+def group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                    chips: int, *, hw: HardwareSpec = V5E,
+                    spans_nodes: bool = False,
+                    kernel_fused: bool = True,
+                    nano_batches: int = 4) -> StepCost:
+    """Price one fused step of *jobs* co-located on *chips* accelerators.
+
+    Memoized on the workload signature — the scheduler probes the same
+    candidate groups many times per round."""
+    sig = (cfg.name, tuple(sorted((j.rank, j.batch_size, j.seq_len)
+                                  for j in jobs)),
+           chips, hw, spans_nodes, kernel_fused, nano_batches)
+    hit = _COST_CACHE.get(sig)
+    if hit is not None:
+        return hit
+    cost = _group_step_cost(cfg, jobs, chips, hw=hw,
+                            spans_nodes=spans_nodes,
+                            kernel_fused=kernel_fused,
+                            nano_batches=nano_batches)
+    if len(_COST_CACHE) > 200_000:
+        _COST_CACHE.clear()
+    _COST_CACHE[sig] = cost
+    return cost
+
+
+_COST_CACHE: Dict = {}
+
+
+def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                     chips: int, *, hw: HardwareSpec = V5E,
+                     spans_nodes: bool = False,
+                     kernel_fused: bool = True,
+                     nano_batches: int = 4) -> StepCost:
+    assert chips >= 1
+    total_p, active_p = param_counts(cfg)
+    tokens = sum(j.batch_size * j.seq_len for j in jobs)
+
+    # LoRA training ≈ 2ND fwd + 2ND dx backprop; adapter wgrad negligible.
+    flops = 4 * active_p * tokens
+    # attention quadratic extra (full-attention layers, causal ÷2)
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "full_attn")
+    for j in jobs:
+        flops += 4 * 2 * n_attn * cfg.q_dim * j.seq_len ** 2 * j.batch_size / 2
+
+    # efficiency saturates with per-chip workload (small-GEMM occupancy —
+    # the residual capacity complementarity exploits, §3.4)
+    tpc = tokens / chips
+    eff = hw.mfu_cap * tpc / (tpc + hw.sat_tokens)
+    t_compute = flops / (chips * hw.peak_flops * max(eff, 1e-6))
+    t_compute_ideal = flops / (chips * hw.peak_flops * hw.mfu_cap)
+
+    # weight traffic: every chip streams its weight shard once per pass
+    # (fwd + bwd-recompute + bwd) per nano-batch — batching amortizes this
+    # across the union batch; isolated small jobs pay it alone.
+    wbytes = total_p * 2 / chips
+    t_memory = wbytes * 3 * max(1, nano_batches if kernel_fused else 1) \
+        / hw.hbm_bw
+    act_bytes = tokens * cfg.d_model * 2 * 12 / chips
+    t_memory = max(t_memory, act_bytes / hw.hbm_bw)
+
+    # collectives: TP activation all-reduces (2/layer fwd, 2 bwd) over the
+    # model axis + DP adapter-grad all-reduce (tiny — the tLoRA win).
+    tp = min(chips, 16)
+    bw = hw.dcn_bw if spans_nodes else hw.ici_bw
+    L = cfg.num_layers
+    ar_bytes = 4 * L * (tokens / max(chips // tp, 1)) * cfg.d_model * 2 \
+        * 2 * (tp - 1) / tp
+    lora_bytes = sum(lora_param_count(cfg, j.rank) for j in jobs) * 4
+    dp = max(chips // tp, 1)
+    ar_bytes += 2 * lora_bytes * (dp - 1) / dp
+    n_colls = 4 * L * max(1, nano_batches)
+    t_comm = ar_bytes / (tp * bw) + n_colls * hw.sync_latency * \
+        (4.0 if spans_nodes else 1.0)
+    if not kernel_fused:
+        # unfused: per-adapter GEMM pairs serialize against comm (no
+        # nano-overlap) — model as comm fully exposed.
+        t_comm *= 2.0
+
+    # kernel launches: fused = const per layer; unfused = + per adapter.
+    launches = L * hw.kernels_per_layer * max(1, nano_batches)
+    if not kernel_fused:
+        launches += L * 4 * len(jobs) * max(1, nano_batches)
+    t_overhead = launches * hw.launch_overhead + hw.step_overhead
+
+    return StepCost(t_compute, t_compute_ideal, t_memory, t_comm,
+                    t_overhead, overlap=kernel_fused)
+
+
+def standalone_step_time(cfg: ModelConfig, job: LoRAJobSpec, *,
+                         hw: HardwareSpec = V5E,
+                         kernel_fused: bool = True) -> float:
+    return group_step_cost(cfg, [job], max(job.gpus, 1), hw=hw,
+                           kernel_fused=kernel_fused).total
+
+
+def group_throughput(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                     chips: int, *, hw: HardwareSpec = V5E,
+                     spans_nodes: bool = False,
+                     kernel_fused: bool = True) -> float:
+    """Samples/sec of the fused group (the scheduler objective T̂(G))."""
+    t = group_step_cost(cfg, jobs, chips, hw=hw, spans_nodes=spans_nodes,
+                        kernel_fused=kernel_fused).total
+    return sum(j.batch_size for j in jobs) / t
+
+
+def slowdowns(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], chips: int,
+              *, hw: HardwareSpec = V5E, spans_nodes: bool = False,
+              kernel_fused: bool = True) -> Dict[str, float]:
+    """Δ_j(G): per-job step-time inflation vs standalone execution."""
+    t_g = group_step_cost(cfg, jobs, chips, hw=hw, spans_nodes=spans_nodes,
+                          kernel_fused=kernel_fused).total
+    return {j.job_id: t_g / standalone_step_time(cfg, j, hw=hw,
+                                                 kernel_fused=kernel_fused)
+            for j in jobs}
+
+
+def residual_capacity(cfg: ModelConfig, job: LoRAJobSpec, *,
+                      hw: HardwareSpec = V5E) -> float:
+    """r_j in [0, 1): fraction of the job's allocation left idle when it
+    runs alone — the complementarity signal of §3.4."""
+    c = group_step_cost(cfg, [job], max(job.gpus, 1), hw=hw)
+    return max(0.0, 1.0 - c.useful_fraction)
+
+
+def min_chips(cfg: ModelConfig, *, hw: HardwareSpec = V5E) -> int:
+    """Smallest chip count whose HBM holds the bf16 backbone shard."""
+    total, _ = param_counts(cfg)
+    need = total * 2 * 1.3          # +30% activations/fragmentation slack
+    c = 1
+    while need / c > hw.hbm_capacity:
+        c *= 2
+    return c

@@ -1,0 +1,3 @@
+from repro.data.pipeline import FusedBatcher, JobStream
+
+__all__ = ["FusedBatcher", "JobStream"]

@@ -1,0 +1,3 @@
+from repro.kernels import ops, ref, fused_lora
+
+__all__ = ["ops", "ref", "fused_lora"]

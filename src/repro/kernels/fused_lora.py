@@ -1,0 +1,121 @@
+"""Pallas TPU kernels for fused heterogeneous multi-LoRA (paper §3.3).
+
+TPU adaptation of the paper's Triton kernel (see DESIGN.md §3):
+
+* The SSM lays each group's tokens out contiguously per adapter and pads
+  every job's token count to a multiple of ``block_t``, so each token tile
+  belongs to exactly one adapter.  The tile→adapter map is a small int32
+  vector delivered via **scalar prefetch** (``PrefetchScalarGridSpec``) —
+  BlockSpec index_maps use it to DMA the right A_i/B_i slab into VMEM.
+* Per grid step the compact ``(block_t, r_pad)`` intermediate lives only in
+  a VMEM scratch buffer: ``ΔW = A_i B_iᵀ`` and full-size temporaries are
+  never materialized (the paper's core kernel contract).
+* ``r_pad`` is lane-aligned; a rank mask zeroes lanes ≥ r_i so heterogeneous
+  ranks share one launch (rank-aware tiles).
+* Grid = (token_tiles, dout_tiles) with dout fastest; the x·A product is
+  computed once per token tile (at i_o == 0) and reused from scratch for
+  all dout tiles — the VMEM analogue of Triton's shared-memory reuse.
+
+Validated in interpret mode on CPU against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ----------------------------------------------------------------- fwd
+def _fused_lora_kernel(tile_map_ref, ranks_ref, x_ref, a_ref, b_ref,
+                       o_ref, xa_scratch):
+    i_t = pl.program_id(0)
+    i_o = pl.program_id(1)
+
+    @pl.when(i_o == 0)
+    def _compute_xa():
+        x = x_ref[...]
+        a = a_ref[0]                                    # (d_in, r_pad)
+        xa = jnp.dot(x, a, preferred_element_type=jnp.float32)
+        rank = ranks_ref[tile_map_ref[i_t]]
+        lane = jax.lax.broadcasted_iota(jnp.int32, xa.shape, 1)
+        xa_scratch[...] = jnp.where(lane < rank, xa, 0.0)
+
+    xa = xa_scratch[...].astype(x_ref.dtype)
+    b = b_ref[0]                                        # (r_pad, block_o)
+    o_ref[...] = jnp.dot(xa, b,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def fused_lora_pallas(x: jax.Array, A: jax.Array, B: jax.Array,
+                      tile_map: jax.Array, ranks: jax.Array,
+                      *, block_t: int = 128, block_o: int = 512,
+                      interpret: bool = True) -> jax.Array:
+    """x: (T, d_in), A: (K, d_in, r_pad), B: (K, r_pad, d_out),
+    tile_map: (T//block_t,) adapter id per token tile.
+
+    Returns (T, d_out) *unscaled* LoRA output (scaling applied by caller).
+    """
+    T, d_in = x.shape
+    K, _, r_pad = A.shape
+    d_out = B.shape[-1]
+    assert T % block_t == 0, (T, block_t)
+    block_o = min(block_o, d_out)
+    assert d_out % block_o == 0, (d_out, block_o)
+    grid = (T // block_t, d_out // block_o)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # tile_map, ranks
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_in), lambda i, j, tm, rk: (i, 0)),
+            pl.BlockSpec((1, d_in, r_pad), lambda i, j, tm, rk: (tm[i], 0, 0)),
+            pl.BlockSpec((1, r_pad, block_o), lambda i, j, tm, rk: (tm[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_o), lambda i, j, tm, rk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_t, r_pad), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _fused_lora_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d_out), x.dtype),
+        interpret=interpret,
+    )(tile_map, ranks, x, A, B)
+
+
+# ------------------------------------------------------------- grouped mm
+def _grouped_mm_kernel(tile_map_ref, x_ref, w_ref, o_ref):
+    del tile_map_ref
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[0],
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def grouped_matmul_pallas(x: jax.Array, W: jax.Array, tile_map: jax.Array,
+                          *, block_t: int = 128, block_o: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """y_t = x_t @ W[adapter(t)] with one adapter per token tile.
+    Used for the dx passes of the custom VJP."""
+    T, d_in = x.shape
+    K, _, d_out = W.shape
+    assert T % block_t == 0, (T, block_t)
+    block_o = min(block_o, d_out)
+    assert d_out % block_o == 0, (d_out, block_o)
+    grid = (T // block_t, d_out // block_o)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_in), lambda i, j, tm: (i, 0)),
+            pl.BlockSpec((1, d_in, block_o), lambda i, j, tm: (tm[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_o), lambda i, j, tm: (i, j)),
+    )
+    return pl.pallas_call(
+        _grouped_mm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d_out), x.dtype),
+        interpret=interpret,
+    )(tile_map, x, W)

@@ -1,0 +1,160 @@
+"""jit-ready wrappers around the fused multi-LoRA kernels.
+
+``fused_lora`` dispatches between:
+  * "pallas" — the TPU kernel (interpret-mode on CPU), custom VJP whose
+    wgrad uses a fused one-hot einsum (LoRA wgrad FLOPs are negligible
+    next to the backbone, see DESIGN.md).
+  * "xla"    — ragged_dot formulation: the distributed/GSPMD path used by
+    the dry-run (the CPU backend cannot compile Mosaic kernels). Exactly
+    the same math, auto-differentiated.
+  * "ref"    — gather oracle (tests, small scale).
+  * "loop"   — per-adapter GEMM pair, the *unfused* baseline (Fig. 7).
+
+Contract required by "pallas"/"xla": tokens sorted by adapter id,
+contiguous segments, each segment length a multiple of block_t (the SSM
+batch layout guarantees this — see core/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_impl
+from repro.kernels import fused_lora as pk
+
+_INTERPRET = True   # flipped to False on real TPU backends
+
+
+def _tile_map(ids: jax.Array, block_t: int) -> jax.Array:
+    return ids.reshape(ids.shape[0] // block_t, block_t)[:, 0]
+
+
+def _group_sizes(ids: jax.Array, K: int) -> jax.Array:
+    return jnp.bincount(ids, length=K)
+
+
+# ------------------------------------------------------------------ xla
+def fused_lora_xla(x, A, B, ids, ranks, scalings, capacity=None,
+                   equal_segments: bool = False):
+    """Segment-dense grouped GEMM pair — the GSPMD/dry-run path.
+
+    The SSM layout sorts tokens by adapter into contiguous segments.  When
+    the scheduler hands us EQUAL segments (the production layout: every
+    job contributes the same padded row count), dispatch is a comm-free
+    reshape (T, d) -> (K, T/K, d) followed by two dense batched einsums
+    with bf16 inputs + f32 accumulation — FLOPs = the ideal 2*T*d*r and
+    zero collectives (§Perf iteration 3b; scatter-based dispatch was
+    collective-bound, ragged_dot's non-TPU fallback densified over all K
+    adapters in f32).
+
+    Unequal segments fall back to a masked dense-over-K formulation
+    (exact; K x r extra flops — fine for K<=8 test-scale groups)."""
+    T, d_in = x.shape
+    K, _, r_pad = A.shape
+    lane = jnp.arange(r_pad)
+
+    if equal_segments and T % K == 0:
+        buf = x.reshape(K, T // K, d_in)                   # adapter-major
+        xa = jnp.einsum("kcd,kdr->kcr", buf, A,
+                        preferred_element_type=jnp.float32)
+        xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                       xa, 0.0).astype(x.dtype)
+        y = jnp.einsum("kcr,kro->kco", xa, B,
+                       preferred_element_type=jnp.float32)
+        y = y * scalings[:, None, None]
+        return y.reshape(T, -1).astype(x.dtype)
+
+    # fallback: dense over K with a one-hot combine (exact, no scatter)
+    onehot = jax.nn.one_hot(ids, K, dtype=x.dtype)         # (T, K)
+    xa = jnp.einsum("td,kdr->tkr", x, A,
+                    preferred_element_type=jnp.float32)
+    xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                   xa, 0.0).astype(x.dtype)
+    y = jnp.einsum("tkr,kro->tko", xa, B,
+                   preferred_element_type=jnp.float32)
+    y = y * scalings[None, :, None]
+    return jnp.einsum("tko,tk->to", y, onehot.astype(jnp.float32)
+                      ).astype(x.dtype)
+
+
+# --------------------------------------------------------------- pallas
+@functools.lru_cache(maxsize=32)
+def _make_pallas_fn(block_t: int):
+    """Build the custom-VJP pallas path for a static token-tile size."""
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, ranks, scalings):
+        y = pk.fused_lora_pallas(x, A, B, _tile_map(ids, block_t), ranks,
+                                 block_t=block_t, interpret=_INTERPRET)
+        return (y.astype(jnp.float32) * scalings[ids][:, None]).astype(x.dtype)
+
+    def _fwd(x, A, B, ids, ranks, scalings):
+        return f(x, A, B, ids, ranks, scalings), (x, A, B, ids, ranks,
+                                                  scalings)
+
+    def _bwd(res, dy):
+        x, A, B, ids, ranks, scalings = res
+        K = A.shape[0]
+        tm = _tile_map(ids, block_t)
+        dy_s = (dy.astype(jnp.float32) * scalings[ids][:, None]).astype(dy.dtype)
+
+        # dx = ((dy_s @ B^T) * mask) @ A^T — two grouped-mm kernel launches
+        dxa = pk.grouped_matmul_pallas(dy_s, jnp.swapaxes(B, 1, 2), tm,
+                                       block_t=block_t, interpret=_INTERPRET)
+        dxa = ref_impl.rank_mask(dxa.astype(jnp.float32), ids,
+                                 ranks).astype(x.dtype)
+        dx = pk.grouped_matmul_pallas(dxa, jnp.swapaxes(A, 1, 2), tm,
+                                      block_t=block_t, interpret=_INTERPRET)
+
+        # wgrads: fused one-hot einsums (K small; negligible FLOPs)
+        onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
+        xa = pk.grouped_matmul_pallas(x, A, tm, block_t=block_t,
+                                      interpret=_INTERPRET)
+        xa = ref_impl.rank_mask(xa.astype(jnp.float32), ids, ranks)
+        dA = jnp.einsum("tk,td,tr->kdr", onehot, x.astype(jnp.float32),
+                        dxa.astype(jnp.float32))
+        dB = jnp.einsum("tk,tr,to->kro", onehot, xa, dy_s.astype(jnp.float32))
+
+        # d(scaling): s is alpha/r (never trained) but keep the VJP exact.
+        y_uns = pk.grouped_matmul_pallas(xa.astype(x.dtype), B, tm,
+                                         block_t=block_t,
+                                         interpret=_INTERPRET)
+        ds = jnp.einsum("tk,to,to->k", onehot, y_uns.astype(jnp.float32),
+                        dy.astype(jnp.float32))
+
+        f0 = jax.dtypes.float0
+        return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
+                np.zeros(ids.shape, f0), np.zeros(ranks.shape, f0),
+                ds.astype(scalings.dtype))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
+def _fused_lora_pallas(x, A, B, ids, ranks, scalings, block_t):
+    return _make_pallas_fn(int(block_t))(x, A, B, ids, ranks, scalings)
+
+
+# ------------------------------------------------------------- dispatch
+def fused_lora(x: jax.Array, A: jax.Array, B: jax.Array, ids: jax.Array,
+               ranks: jax.Array, scalings: jax.Array,
+               impl: str = "ref", block_t: int = 128,
+               capacity=None, equal_segments: bool = False) -> jax.Array:
+    """Fused heterogeneous multi-LoRA: y_t = s_a ((x_t A_a) B_a), a=ids[t].
+
+    x (T, d_in) -> (T, d_out). See module docstring for impl semantics.
+    """
+    if impl == "pallas":
+        return _fused_lora_pallas(x, A, B, ids, ranks, scalings, block_t)
+    if impl == "xla":
+        return fused_lora_xla(x, A, B, ids, ranks, scalings,
+                              capacity=capacity,
+                              equal_segments=equal_segments)
+    if impl == "loop":
+        return ref_impl.fused_lora_loop(x, A, B, ids, ranks, scalings)
+    if impl == "ref":
+        return ref_impl.fused_lora_ref(x, A, B, ids, ranks, scalings)
+    raise ValueError(f"unknown fused_lora impl {impl!r}")

@@ -1,0 +1,3 @@
+from repro.launch import mesh, roofline
+
+__all__ = ["mesh", "roofline"]

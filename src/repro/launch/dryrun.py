@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles the SSM train/prefill/serve step for every assigned
+(architecture x input shape) on the production mesh — 16x16 single-pod
+and 2x16x16 multi-pod — using ShapeDtypeStruct stand-ins (no allocation).
+``memory_analysis()`` proves the plan fits; ``cost_analysis()`` + the
+collective-bytes HLO parse feed EXPERIMENTS.md §Roofline.
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks
+the device count on first backend init.
+
+Usage:
+    python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, applicable, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.configs.registry import get_shape
+from repro.core.jobs import LoRAJobSpec
+from repro.core.ssm import SharedSuperModel
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis as HA
+from repro.launch import roofline as RL
+from repro.optim import adamw
+from repro.optim.schedule import constant
+from repro.sharding import rules, use_mesh
+from repro.models import model as M
+
+# paper §4.1: ranks sampled from {2,4,8,16} — the dry-run group uses one
+# of each so the fused kernel sees heterogeneous ranks.
+GROUP_RANKS = (16, 8, 4, 2)
+
+
+def make_group(cfg: ModelConfig, shape: InputShape) -> List[LoRAJobSpec]:
+    B = shape.global_batch
+    K = min(len(GROUP_RANKS), B)
+    while B % K:                      # equal segments (comm-free dispatch)
+        K -= 1
+    jobs = [LoRAJobSpec(job_id=f"dry-{i}", rank=GROUP_RANKS[i % 4],
+                        batch_size=B // K, seq_len=shape.seq_len,
+                        base_model=cfg.name)
+            for i in range(K)]
+    return jobs
+
+
+def _adapter_ids_np(jobs) -> np.ndarray:
+    return np.concatenate([np.full(j.batch_size, k, np.int32)
+                           for k, j in enumerate(jobs)])
+
+
+def build(arch: str, shape_name: str, multi_pod: bool,
+          nano_batches: int = 1, remat: bool = True,
+          sharding_profile: str = "default"):
+    """Returns (fn, args, in_shardings, seq_over_batch, training)."""
+    import dataclasses
+    # TPU path: capacity-based expert dispatch (GShard-style); the ragged
+    # formulation is exact but XLA's non-TPU fallback expands it densely.
+    cfg = dataclasses.replace(get_config(arch), moe_impl="capacity")
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ssm = SharedSuperModel(cfg, make_group(cfg, shape), impl="xla",
+                           block_t=128)
+
+    params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    adapters = jax.eval_shape(
+        lambda: M.init_adapters(jax.random.PRNGKey(1), cfg,
+                                jnp.asarray(ssm.ranks), r_pad=ssm.r_pad))
+    p_sh = rules.param_shardings(mesh, params)
+    a_sh = rules.replicated(mesh, adapters)
+
+    batch = M.input_specs(cfg, shape)
+    batch["adapter_ids"] = jax.ShapeDtypeStruct(
+        (sum(j.batch_size for j in ssm.jobs),), jnp.int32)
+    seq_over_batch = shape.global_batch < 16   # long_500k: seq-parallel
+
+    if shape.kind == "train":
+        opt = jax.eval_shape(lambda: adamw.init(adapters))
+        o_sh = rules.replicated(mesh, opt)
+        b_sh = rules.batch_shardings(mesh, batch, seq_axis=seq_over_batch)
+        fn = ssm.make_train_step(lr_fn=constant(1e-3),
+                                 nano_batches=nano_batches, remat=remat)
+        return (fn, (params, adapters, opt, batch),
+                (p_sh, a_sh, o_sh, b_sh), mesh, seq_over_batch)
+
+    if shape.kind == "prefill":
+        b_sh = rules.batch_shardings(mesh, batch, seq_axis=seq_over_batch)
+        fn = ssm.make_prefill_step(shape, with_cache=True)
+        return (fn, (params, adapters, batch), (p_sh, a_sh, b_sh),
+                mesh, seq_over_batch)
+
+    # decode: ONE new token against a seq_len cache
+    ring = shape.sliding_window_variant
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, ssm.decode_buf(shape),
+                              ring))
+    c_sh = rules.cache_shardings(mesh, caches, cfg)
+    b_sh = rules.batch_shardings(mesh, batch, seq_axis=False)
+    pos = shape.seq_len - 1
+    step = ssm.make_serve_step(ring=ring)
+    fn = lambda params, adapters, caches, batch: step(params, adapters,
+                                                      caches, batch, pos)
+    return (fn, (params, adapters, caches, batch),
+            (p_sh, a_sh, c_sh, b_sh), mesh, seq_over_batch)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True, nano_batches: int = 1,
+               remat: bool = True, drill: int = 0,
+               dump_hlo: Optional[str] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not applicable(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "encoder-only arch has no decode step"}
+    t0 = time.time()
+    try:
+        fn, args, shardings, mesh, sob = build(
+            arch, shape_name, multi_pod, nano_batches=nano_batches,
+            remat=remat)
+        with mesh, use_mesh(mesh, seq_over_batch=sob):
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        hrep = HA.analyze(hlo)           # scan-aware per-device profile
+        chips = int(np.prod(list(mesh.shape.values())))
+        rep = RL.RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=hrep.flops,
+            hlo_flops_f32=hrep.flops_f32,
+            hlo_bytes=hrep.bytes_accessed,
+            coll_bytes=hrep.total_collective_bytes,
+            model_flops=RL.model_flops_estimate(cfg, shape,
+                                                shape.kind == "train"),
+            bytes_per_device=RL.parse_memory_analysis(mem),
+            collectives=None)
+        out = {"status": "ok", "compile_s": time.time() - t0,
+               "collectives": hrep.describe_collectives(),
+               "raw_cost_flops": float(cost.get("flops", 0.0)),
+               "raw_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+               **rep.row()}
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"({out['compile_s']:.1f}s compile)")
+            print(f"  memory_analysis: "
+                  f"{rep.bytes_per_device/1e9:.2f} GB/device peak")
+            print(f"  per-device: flops={rep.hlo_flops:.3e} "
+                  f"(f32 dots: {rep.hlo_flops_f32/max(rep.hlo_flops,1):.0%}) "
+                  f"bytes={rep.hlo_bytes:.3e} "
+                  f"(raw cost_analysis flops={out['raw_cost_flops']:.3e})")
+            print(f"  collectives: {out['collectives']}")
+            print(f"  roofline: compute={rep.t_compute*1e3:.2f}ms "
+                  f"memory={rep.t_memory*1e3:.2f}ms "
+                  f"collective={rep.t_collective*1e3:.2f}ms "
+                  f"-> {rep.bottleneck}-bound  "
+                  f"useful={rep.useful_flops_frac:.2f}")
+        if drill:
+            print("  -- top collective contributors --")
+            for name, b, op in sorted(hrep.top_collectives,
+                                      key=lambda x: -x[1])[:drill]:
+                print(f"    {b/1e9:8.2f} GB  {op[:100]}")
+            print("  -- top memory contributors --")
+            for name, b, op in sorted(hrep.top_bytes,
+                                      key=lambda x: -x[1])[:drill]:
+                print(f"    {b/1e9:8.2f} GB  {op[:100]}")
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo)
+        return out
+    except Exception as e:
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] FAIL: {e}")
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "fail", "error": f"{type(e).__name__}: {e}",
+                "compile_s": time.time() - t0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--nano-batches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--drill", type=int, default=0,
+                    help="print top-N collective/memory contributors")
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(dryrun_one(arch, shape, mp,
+                                          nano_batches=args.nano_batches,
+                                          remat=not args.no_remat,
+                                          drill=args.drill,
+                                          dump_hlo=args.dump_hlo))
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    fail = [r for r in results if r["status"] == "fail"]
+    print(f"\n=== dry-run: {ok} ok / {sk} skipped / {len(fail)} failed "
+          f"of {len(results)} ===")
+    for r in fail:
+        print(f"  FAIL {r['arch']} x {r['shape']} x {r['mesh']}: {r['error']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        print(f"wrote {args.out}")
+    return 0 if not fail else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

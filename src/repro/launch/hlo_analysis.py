@@ -1,0 +1,333 @@
+"""Scan-aware HLO analyzer — the dry-run 'profiler'.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so for
+scanned-layer models it under-reports FLOPs/bytes by ~num_layers x
+(verified in EXPERIMENTS.md §Dry-run methodology).  This module parses the
+post-SPMD HLO text, builds the computation call graph, extracts each while
+loop's static trip count from its condition, and accumulates
+
+  * dot/convolution FLOPs            (operand shapes resolved through a
+                                      per-computation symbol table),
+  * approximate HBM bytes            (operand+result sizes of top-level
+                                      instructions; fusion internals skipped
+                                      — they live in registers/VMEM),
+  * collective bytes by kind         (operand sizes of all-gather /
+                                      all-reduce / reduce-scatter /
+                                      all-to-all / collective-permute),
+
+each weighted by the product of enclosing while trip counts.  All
+quantities are per-device (the input is the post-SPMD partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPND_NAME = re.compile(r"%([\w.\-]+)")
+_CALL_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CALL_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALL_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_TRIP_CFG = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+
+# call-site ops whose result/operand bytes we skip (either bookkeeping or
+# counted inside the callee with the right multiplier)
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "iota",
+               "while", "call", "conditional", "fusion"}
+
+
+def _nbytes(shapes: List[Tuple[str, str]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, str]]
+    operand_names: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+    root: Optional[str] = None
+
+    def operand_shapes(self, ins: Instr) -> List[Tuple[str, str]]:
+        out = []
+        for n in ins.operand_names:
+            out.extend(self.shapes.get(n, []))
+        return out
+
+    def fusion_bytes(self) -> int:
+        """HBM traffic of one fusion execution: root write + parameter
+        reads, where a parameter consumed only through slicing ops counts
+        its slice size (loop-carried stacked buffers read per-iteration)."""
+        params = {i.name: _nbytes(i.result_shapes)
+                  for i in self.instrs if i.opcode == "parameter"}
+        read: Dict[str, int] = {p: 0 for p in params}
+        full: Dict[str, bool] = {p: False for p in params}
+        for ins in self.instrs:
+            if ins.opcode == "parameter":
+                continue
+            for n in ins.operand_names:
+                if n not in params:
+                    continue
+                if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                    read[n] += _nbytes(ins.result_shapes)
+                elif ins.opcode == "dynamic-update-slice":
+                    read[n] += (2 * _nbytes(self.shapes.get(
+                        ins.operand_names[1], []))
+                        if len(ins.operand_names) > 1 else 0)
+                else:
+                    full[n] = True
+        total = sum(params[p] if full[p] else min(read[p], params[p])
+                    for p in params)
+        if self.root and self.root in self.shapes:
+            total += _nbytes(self.shapes[self.root])
+        elif self.instrs:
+            total += _nbytes(self.instrs[-1].result_shapes)
+        return total
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    is_root = line.startswith("ROOT ")
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    del is_root  # root tracked by caller via line prefix
+    om = re.search(r"\)?\s*([a-z][a-z0-9\-]*)\(", rhs)
+    if not om:
+        return None
+    opcode = om.group(1)
+    result_part = rhs[:om.start(1)]
+    operand_part = rhs[om.end(1):]
+    depth, end = 0, len(operand_part)
+    for i, ch in enumerate(operand_part):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = _OPND_NAME.findall(operand_part[:end + 1])
+    return Instr(name, opcode, _SHAPE_RE.findall(result_part), operands, rhs)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        ls = line.strip().rstrip(",")
+        if not ls or ls.startswith("//"):
+            continue
+        if not line.startswith(" ") and "{" in line and ("->" in line
+                                                         or "ENTRY" in line):
+            m = _COMP_HDR.match(ls)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if ls.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if ls == "}":
+            cur = None
+            continue
+        if cur is not None:
+            ins = _parse_instr(ls)
+            if ins:
+                cur.instrs.append(ins)
+                cur.shapes[ins.name] = ins.result_shapes
+                if ls.startswith("ROOT"):
+                    cur.root = ins.name
+    return comps, entry
+
+
+def _instr_bytes(comp: Computation, ins: Instr) -> int:
+    """Approximate HBM traffic of one instruction (operands + result),
+    with slice-aware ops touching only the slice, not the buffer."""
+    op = ins.opcode
+    if op == "dynamic-slice" or op == "slice" or op == "gather":
+        return _nbytes(ins.result_shapes)
+    if op == "dynamic-update-slice":
+        # read + write of the update region (buffer aliased in place)
+        upd = (comp.shapes.get(ins.operand_names[1], [])
+               if len(ins.operand_names) > 1 else [])
+        return 2 * _nbytes(upd)
+    if op == "scatter":
+        upd = (comp.shapes.get(ins.operand_names[-1], [])
+               if ins.operand_names else [])
+        return 2 * _nbytes(upd)
+    return _nbytes(ins.result_shapes) + _nbytes(comp.operand_shapes(ins))
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    if ins.opcode not in ("dot", "convolution"):
+        return 0.0
+    if not ins.result_shapes:
+        return 0.0
+    res_n = 1
+    for d in ins.result_shapes[0][1].split(","):
+        if d:
+            res_n *= int(d)
+    opnds = [comp.shapes.get(n) for n in ins.operand_names]
+    opnds = [o for o in opnds if o]
+    if not opnds:
+        return 0.0
+    lhs_dims = [int(x) for x in opnds[0][0][1].split(",") if x]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    if m and lhs_dims:
+        k = 1
+        for i in (int(x) for x in m.group(1).split(",") if x):
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    else:
+        k = max(1, math.prod(lhs_dims) // max(res_n, 1))
+    return 2.0 * res_n * k
+
+
+def _dot_is_f32(comp: Computation, ins: Instr) -> bool:
+    """True if the dot's LHS operand is stored f32 (half-rate on MXU)."""
+    for n in ins.operand_names:
+        shapes = comp.shapes.get(n)
+        if shapes:
+            return shapes[0][0] in ("f32", "f64")
+    return ins.result_shapes[0][0] in ("f32", "f64") \
+        if ins.result_shapes else False
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_INT.finditer(ins.raw):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class HLOReport:
+    flops: float = 0.0
+    flops_f32: float = 0.0       # subset of `flops` executed as f32 dots
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    # drill-down: (comp, instr, opcode, metadata-op_name) -> weighted bytes
+    top_collectives: List[Tuple[str, float, str]] = field(default_factory=list)
+    top_bytes: List[Tuple[str, float, str]] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def describe_collectives(self) -> str:
+        return "; ".join(
+            f"{k}: {self.collective_counts[k]:.0f}x "
+            f"{self.collective_bytes[k]/1e6:.1f}MB"
+            for k in sorted(self.collective_bytes)) or "none"
+
+
+def analyze(text: str) -> HLOReport:
+    comps, entry = parse_hlo(text)
+    rep = HLOReport()
+    if entry is None:
+        return rep
+    stack: List[str] = []
+
+    def walk(comp: Computation, mult: float, count_bytes: bool):
+        if comp.name in stack:
+            return
+        stack.append(comp.name)
+        for ins in comp.instrs:
+            fl = _dot_flops(comp, ins)
+            rep.flops += mult * fl
+            if fl and _dot_is_f32(comp, ins):
+                rep.flops_f32 += mult * fl
+            if count_bytes and ins.opcode not in _SKIP_BYTES:
+                b = mult * _instr_bytes(comp, ins)
+                rep.bytes_accessed += b
+                if b > 1e8:
+                    rep.top_bytes.append(
+                        (f"{comp.name}/{ins.name}", b, _op_name(ins)))
+            kind = _collective_kind(ins)
+            if kind:
+                b = _nbytes(comp.operand_shapes(ins)) \
+                    or _nbytes(ins.result_shapes)
+                rep.collective_bytes[kind] = \
+                    rep.collective_bytes.get(kind, 0.0) + mult * b
+                rep.collective_counts[kind] = \
+                    rep.collective_counts.get(kind, 0.0) + mult
+                if mult * b > 1e7:
+                    rep.top_collectives.append(
+                        (f"{comp.name}/{ins.name}", mult * b, _op_name(ins)))
+            if ins.opcode == "while":
+                bm, cm = _CALL_BODY.search(ins.raw), _CALL_COND.search(ins.raw)
+                tm = _TRIP_CFG.search(ins.raw)          # backend_config
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _trip_count(comps[cm.group(1)]) \
+                        if cm and cm.group(1) in comps else 1
+                if bm and bm.group(1) in comps:
+                    walk(comps[bm.group(1)], mult * trip, count_bytes)
+            elif ins.opcode == "fusion":
+                fm = _CALL_CALLS.search(ins.raw)
+                if fm and fm.group(1) in comps:
+                    body = comps[fm.group(1)]
+                    if count_bytes:
+                        rep.bytes_accessed += mult * body.fusion_bytes()
+                    walk(body, mult, count_bytes=False)
+            elif ins.opcode in ("call", "conditional"):
+                for name in _CALL_CALLS.findall(ins.raw):
+                    if name in comps:
+                        walk(comps[name], mult, count_bytes)
+        stack.pop()
+
+    walk(comps[entry], 1.0, True)
+    return rep
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_name(ins: Instr) -> str:
+    m = _OPNAME_RE.search(ins.raw)
+    return m.group(1) if m else ins.opcode
+
+
+def _collective_kind(ins: Instr) -> Optional[str]:
+    for k in COLLECTIVE_KINDS:
+        if ins.opcode == k or ins.opcode == k + "-start":
+            return k
+    return None

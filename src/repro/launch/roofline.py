@@ -1,0 +1,205 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+No accelerator in the container, so wall-time MFU cannot be measured;
+instead the three roofline terms are derived from the compiled HLO:
+
+    compute    = HLO_FLOPs        / (chips * 197 TF/s bf16)
+    memory     = HLO_bytes        / (chips * 819 GB/s HBM)
+    collective = collective_bytes / (chips * 50 GB/s ICI per link)
+
+``compiled.cost_analysis()`` supplies flops / bytes accessed of the
+per-device partitioned module (verified against 6ND napkin math in
+EXPERIMENTS.md).  Collective bytes are NOT in cost_analysis: we parse the
+post-SPMD HLO text, build a shape symbol table, and sum *operand* sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# ----------------------------------------------------------- constants
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "%name = TYPE[SHAPE]{layout} opcode(...operands...)"
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\]")
+_TUPLE_DEF_RE = re.compile(r"%?([\w.\-]+)\s*=\s*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def __str__(self):
+        parts = [f"{k}: {self.count_by_kind[k]}x {self.bytes_by_kind[k]/1e6:.1f}MB"
+                 for k in sorted(self.bytes_by_kind)]
+        return "; ".join(parts) or "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in (post-SPMD) HLO text."""
+    # symbol table: instruction name -> size in bytes (tuples: sum parts)
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _DEF_RE.match(line)
+        if m and "=" in line:
+            name = m.group(1)
+            rhs = line.split("=", 1)[1]
+            # size of this instruction's *result* (sum shapes before opcode)
+            head = rhs.split(" ", 2)
+            shapes = _SHAPE_RE.findall(rhs[:rhs.find(")") + 1]
+                                       if rhs.lstrip().startswith("(")
+                                       else head[1] if len(head) > 1 else rhs)
+            first = _SHAPE_RE.findall(rhs)
+            if first:
+                if rhs.lstrip().startswith("("):
+                    close = rhs.find(")")
+                    tuple_shapes = _SHAPE_RE.findall(rhs[:close + 1])
+                    sizes[name] = sum(_shape_bytes(t, s)
+                                      for t, s in tuple_shapes)
+                else:
+                    t, s = first[0]
+                    sizes[name] = _shape_bytes(t, s)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = _DEF_RE.match(ls)
+        if not m:
+            continue
+        rhs = ls.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            # opcode occurs right before the '(' of the operand list
+            if re.search(rf"(?:^|\s){kind}(?:-start)?\(", rhs):
+                args = rhs[rhs.find("("):]
+                ops = _OPND_RE.findall(args.split(", channel_id")[0]
+                                       .split(", replica_groups")[0])
+                b = sum(sizes.get(o, 0) for o in ops)
+                if b == 0:
+                    # fallback: result size (all-reduce: result == operand)
+                    b = sizes.get(m.group(1), 0)
+                stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+                stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+                break
+    return stats
+
+
+# ------------------------------------------------------------- report
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per-device
+    hlo_flops_f32: float          # subset executed as f32 dots (half-rate)
+    hlo_bytes: float              # per-device
+    coll_bytes: float             # per-device
+    model_flops: float            # 6*N_active*D global (napkin)
+    bytes_per_device: float       # from memory_analysis
+    collectives: Optional[CollectiveStats] = None
+
+    @property
+    def t_compute(self) -> float:
+        # priced flat at bf16 peak: the CPU dry-run backend float-
+        # normalizes bf16 compute to f32, so the HLO's dot dtypes reflect
+        # CPU lowering, not TPU codegen; hlo_flops_f32 is reported as
+        # informational only (see EXPERIMENTS.md §Methodology).
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips * per-device HLO flops)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the step spent on the dominant term vs total —
+        1.0 means perfectly bound by one resource (no additive waste)."""
+        terms = [self.t_compute, self.t_memory, self.t_collective]
+        tot = sum(terms)
+        return max(terms) / tot if tot else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mem_gb_per_device": self.bytes_per_device / 1e9,
+        }
+
+
+def model_flops_estimate(cfg, shape, training: bool) -> float:
+    """6*N_active*D for train (fwd+bwd), 2*N_active*D for inference."""
+    from repro.core.throughput import param_counts
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch * 1            # one decode step
+    return 2.0 * active * tokens
+
+
+def parse_memory_analysis(mem) -> float:
+    """Per-device peak bytes from compiled.memory_analysis()."""
+    if hasattr(mem, "peak_memory_in_bytes"):
+        return float(mem.peak_memory_in_bytes)
+    if hasattr(mem, "temp_size_in_bytes"):
+        return float(getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0))
+    m = re.search(r"([\d.]+)\s*GB", str(mem))
+    return float(m.group(1)) * 1e9 if m else 0.0

@@ -1,0 +1,3 @@
+from repro.models import model
+
+__all__ = ["model"]

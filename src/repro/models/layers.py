@@ -1,0 +1,132 @@
+"""Common neural-net building blocks (pure functional JAX).
+
+Params are plain nested dicts of jnp arrays. Backbone params live in
+``cfg.dtype`` (bf16 by default); norms/softmax/losses accumulate in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rms_norm_init(d: int) -> jax.Array:
+    # stored as (gamma - 1) so zeros-init == identity scale
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def swiglu_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype),
+        "up": dense_init(k2, d, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = x @ params["gate"]
+    u = x @ params["up"]
+    g = shard(g, "batch", "seq", "tp")
+    u = shard(u, "batch", "seq", "tp")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = h @ params["down"]
+    return shard(out, "batch", "sp", None)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d, d_ff, dtype),
+            "down": dense_init(k2, d_ff, d, dtype)}
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = x @ params["up"]
+    h = shard(h, "batch", "seq", "tp")
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = h @ params["down"]
+    return shard(out, "batch", "sp", None)
+
+
+# ------------------------------------------------------------- grad cast
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=8)
+def _make_grad_cast(dtype_str: str):
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    f.defvjp(lambda x: (x, None),
+             lambda _, g: (g.astype(dtype_str),))
+    return f
+
+
+def grad_cast(x: jax.Array) -> jax.Array:
+    """Identity whose COTANGENT is cast to x.dtype — stops f32 cotangent
+    chains from forcing f32 backward dots/storage (§Perf iteration 5)."""
+    return _make_grad_cast(str(x.dtype))(x)
+
+
+# ---------------------------------------------------------------- losses
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-level CE, f32. logits (..., V); labels (...,) int32.
+
+    Returns per-token loss (...,) with mask applied (0 where masked).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # sharding-friendly label pick: masked reduction instead of
+    # take_along_axis (no all-gather when the vocab dim is model-sharded)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0).sum(-1)
+    loss = lse - picked
+    if mask is not None:
+        loss = loss * mask.astype(jnp.float32)
+    return loss

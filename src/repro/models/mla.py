@@ -1,0 +1,164 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with absorbed decode.
+
+Train/prefill: expand the compressed KV latent to full per-head K/V and
+run chunked flash attention.  Decode: the *absorbed* formulation — scores
+are computed directly against the (B, S, kv_lora) latent cache, so the
+cache is an order of magnitude smaller than GQA's and the per-step work
+is O(S · kv_lora).  LoRA targets: q, kv_a (the d→kv_lora down-projection),
+and o — the MLA-specific adaptation noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import MultiLoRA, proj
+from repro.models.attention import chunked_attention
+from repro.models.layers import apply_rope, dense_init, rms_norm, rms_norm_init
+from repro.sharding import shard
+
+
+class MLACache(NamedTuple):
+    latent: jax.Array     # (B, Smax, kv_lora)
+    rope: jax.Array       # (B, Smax, qk_rope_dim)
+
+    @staticmethod
+    def init(batch, buf, cfg, dtype, layers: Optional[int] = None):
+        ls = (layers,) if layers is not None else ()
+        return MLACache(
+            jnp.zeros(ls + (batch, buf, cfg.kv_lora_rank), dtype),
+            jnp.zeros(ls + (batch, buf, cfg.qk_rope_dim), dtype))
+
+
+def mla_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    H = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, H * qk, dt),
+        "w_kv_a": dense_init(ks[1], cfg.d_model,
+                             cfg.kv_lora_rank + cfg.qk_rope_dim, dt),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank),
+        "w_kv_b": dense_init(ks[2], cfg.kv_lora_rank,
+                             H * (cfg.qk_nope_dim + cfg.v_head_dim), dt),
+        "wo": dense_init(ks[3], H * cfg.v_head_dim, cfg.d_model, dt),
+    }
+
+
+def _project_qkv_a(cfg, params, x, positions, lora, la):
+    """Shared front: q heads + compressed latent + shared rope key."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = proj(x, params["wq"], None, lora, la.get("q")).reshape(B, S, H, qk)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = proj(x, params["w_kv_a"], None, lora, la.get("kv_a"))
+    latent, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    latent = rms_norm(latent, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, latent, k_rope
+
+
+def _expand_attend(cfg, params, q_nope, q_rope, latent, k_rope, chunk):
+    """Expand latent to per-head K/V and run chunked flash attention."""
+    B, S = latent.shape[:2]
+    H = cfg.num_heads
+    kv = latent @ params["w_kv_b"]
+    kv = kv.reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, cfg.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = shard(q, "batch", "seq", "tp")
+    k = shard(k, "batch", "seq", "tp")
+    return chunked_attention(q, k, v, q_offset=0, kv_len=S,
+                             causal=True, window=None, chunk=chunk)
+
+
+def mla_block(cfg, params: dict, x: jax.Array, *, positions,
+              lora: Optional[MultiLoRA] = None, lora_ab: Optional[dict] = None,
+              cache: Optional[MLACache] = None, cache_pos=None,
+              ring: bool = False,
+              chunk: int = 1024) -> Tuple[jax.Array, Optional[MLACache]]:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    la = lora_ab or {}
+    q_nope, q_rope, latent, k_rope = _project_qkv_a(
+        cfg, params, x, positions, lora, la)
+
+    if cache is not None and S > 1:
+        # ---- prefill-with-cache: store latent, compute via expand path ----
+        buf = cache.latent.shape[1]
+        idx = (cache_pos + jnp.arange(S)) % buf if ring else None
+        if ring:
+            lat = cache.latent.at[:, idx].set(latent.astype(cache.latent.dtype))
+            rop = cache.rope.at[:, idx].set(k_rope.astype(cache.rope.dtype))
+        else:
+            lat = jax.lax.dynamic_update_slice(
+                cache.latent, latent.astype(cache.latent.dtype),
+                (0, cache_pos, 0))
+            rop = jax.lax.dynamic_update_slice(
+                cache.rope, k_rope.astype(cache.rope.dtype), (0, cache_pos, 0))
+        out = _expand_attend(cfg, params, q_nope, q_rope, latent, k_rope,
+                             chunk)
+        out = out.reshape(B, S, H * cfg.v_head_dim)
+        y = proj(out, params["wo"], None, lora, la.get("o"))
+        return shard(y, "batch", "sp", None), MLACache(lat, rop)
+
+    if cache is None:
+        # ---- train/prefill: expand latent to per-head K/V, flash attn ----
+        out = _expand_attend(cfg, params, q_nope, q_rope, latent, k_rope,
+                             chunk)
+        new_cache = None
+    else:
+        # ---- absorbed decode (S == 1): score against the latent cache ----
+        buf = cache.latent.shape[1]
+        if ring:
+            idx = (cache_pos + jnp.arange(S)) % buf
+            lat = cache.latent.at[:, idx].set(latent.astype(cache.latent.dtype))
+            rop = cache.rope.at[:, idx].set(k_rope.astype(cache.rope.dtype))
+            kv_len = jnp.minimum(cache_pos + S, buf)
+        else:
+            lat = jax.lax.dynamic_update_slice(
+                cache.latent, latent.astype(cache.latent.dtype),
+                (0, cache_pos, 0))
+            rop = jax.lax.dynamic_update_slice(
+                cache.rope, k_rope.astype(cache.rope.dtype), (0, cache_pos, 0))
+            kv_len = cache_pos + S
+        new_cache = MLACache(lat, rop)
+
+        w_kv_b = params["w_kv_b"].reshape(
+            cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim)
+        w_k = w_kv_b[..., :cfg.qk_nope_dim]          # (kvr, H, nope)
+        w_v = w_kv_b[..., cfg.qk_nope_dim:]          # (kvr, H, v)
+        # absorb W_kb into q:  q' = q_nope @ W_k^T  -> (B, S, H, kvr)
+        q_lat = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                           w_k.astype(jnp.float32))
+        scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+        s = (jnp.einsum("bshc,btc->bhst", q_lat, lat.astype(jnp.float32)) +
+             jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                        rop.astype(jnp.float32))) * scale
+        t_idx = jnp.arange(lat.shape[1])
+        if ring:
+            # ring holds the last `buf` tokens; attention is permutation-
+            # invariant over keys, so count-masking suffices.
+            valid = jnp.broadcast_to(t_idx[None, :] < kv_len,
+                                     (S, lat.shape[1]))
+        else:
+            qpos = cache_pos + jnp.arange(S)
+            valid = (t_idx[None, :] < kv_len) & (t_idx[None, :] <= qpos[:, None])
+        s = jnp.where(valid[None, None, :, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btc->bshc", p, lat.astype(jnp.float32))
+        out = jnp.einsum("bshc,chv->bshv", ctx, w_v.astype(jnp.float32))
+        out = out.astype(x.dtype)
+
+    out = out.reshape(B, S, H * cfg.v_head_dim)
+    y = proj(out, params["wo"], None, lora, la.get("o"))
+    return shard(y, "batch", "sp", None), new_cache

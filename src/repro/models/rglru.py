@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs the elementwise linear recurrence with
+``jax.lax.associative_scan`` (log-depth — the TPU-idiomatic replacement
+for the paper family's custom linear-scan CUDA kernel).  Decode carries
+(h, conv-tail) state: O(1) per token -> long_500k native.
+
+Block: x -> [W_x -> causal conv -> RG-LRU] * gelu(W_gate x) -> W_out.
+LoRA targets: ``rg_in``, ``rg_gate``, ``rg_out``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import MultiLoRA, proj
+from repro.models.layers import dense_init
+from repro.models.ssd import _causal_conv
+from repro.sharding import shard
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array      # (B, width) f32
+    conv: jax.Array   # (B, cw-1, width)
+
+    @staticmethod
+    def init(batch, cfg, layers: Optional[int] = None):
+        w = cfg.lru_width
+        ls = (layers,) if layers is not None else ()
+        return RGLRUCache(
+            jnp.zeros(ls + (batch, w), jnp.float32),
+            jnp.zeros(ls + (batch, cfg.conv1d_width - 1, w),
+                      jnp.dtype(cfg.dtype)))
+
+
+def rglru_init(key, cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    # Lambda init so a^c in ~(0.9, 0.999) (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / (2 * _C)) - 1.0)  # softplus^-1
+    return {
+        "w_x": dense_init(ks[1], d, w, dt),
+        "w_gate": dense_init(ks[2], d, w, dt),
+        "w_out": dense_init(ks[3], w, d, dt),
+        "conv_w": (jax.random.normal(ks[4], (cfg.conv1d_width, w),
+                                     jnp.float32) * 0.2).astype(dt),
+        "lam": lam,
+        "w_a": dense_init(ks[5], w, w, dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(jax.random.fold_in(key, 7), w, w, dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _lru_scan(a: jax.Array, b: jax.Array,
+              h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1 (log-depth associative scan)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h + a_cum * h0[:, None, :]
+    return h
+
+
+def rglru_block(cfg, params: dict, x: jax.Array, *,
+                lora: Optional[MultiLoRA] = None,
+                lora_ab: Optional[dict] = None,
+                cache: Optional[RGLRUCache] = None
+                ) -> Tuple[jax.Array, Optional[RGLRUCache]]:
+    """x: (B, S, d) -> (y, new_cache)."""
+    B, S, _ = x.shape
+    la = lora_ab or {}
+    u = proj(x, params["w_x"], None, lora, la.get("rg_in"))
+    gate = proj(x, params["w_gate"], None, lora, la.get("rg_gate"))
+    u = shard(u, "batch", "seq", "tp")
+    gate = shard(gate, "batch", "seq", "tp")
+
+    new_conv = None
+    if cache is not None:
+        new_conv = jnp.concatenate([cache.conv, u], axis=1)[:, -(cfg.conv1d_width - 1):]
+        u = _causal_conv(u, params["conv_w"], cache.conv)
+    else:
+        u = _causal_conv(u, params["conv_w"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) in log space for stability near a≈1
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+    b = beta * (i * uf)
+
+    if cache is not None and S == 1:
+        h = a[:, 0] * cache.h + b[:, 0]
+        y = h[:, None]
+        new_cache = RGLRUCache(h, new_conv)
+    else:
+        y = _lru_scan(a, b, cache.h if cache is not None else None)
+        new_cache = (RGLRUCache(y[:, -1], new_conv)
+                     if cache is not None else None)
+
+    y = y.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = proj(y, params["w_out"], None, lora, la.get("rg_out"))
+    return shard(out, "batch", "sp", None), new_cache

@@ -1,0 +1,195 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan [arXiv:2405.21060].
+
+Training/prefill uses the SSD block decomposition: quadratic attention-like
+work inside length-`chunk` blocks + a linear recurrence over chunk states.
+Decode carries a (B, H, P, N) state — O(1) per token, which is what makes
+the long_500k shape tractable for this family.
+
+LoRA targets: the in/out dense projections (``ssd_in`` / ``ssd_out``) —
+see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import MultiLoRA, proj
+from repro.models.layers import dense_init, rms_norm, rms_norm_init
+from repro.sharding import shard
+
+NGROUPS = 8   # B/C projection groups (shardable over the model axis)
+
+
+class SSDCache(NamedTuple):
+    state: jax.Array   # (B, H, P, N) f32
+    conv: jax.Array    # (B, conv_w-1, conv_dim) — causal-conv tail
+
+    @staticmethod
+    def init(batch, cfg, layers: Optional[int] = None):
+        H, P, N = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.ssm_d_inner + 2 * NGROUPS * N
+        ls = (layers,) if layers is not None else ()
+        return SSDCache(
+            jnp.zeros(ls + (batch, H, P, N), jnp.float32),
+            jnp.zeros(ls + (batch, cfg.ssm_conv - 1, conv_dim),
+                      jnp.dtype(cfg.dtype)))
+
+
+def ssd_init(key, cfg) -> dict:
+    d, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    H = cfg.ssm_nheads
+    conv_dim = di + 2 * NGROUPS * N
+    d_in_proj = 2 * di + 2 * NGROUPS * N + H      # z, xBC, dt
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_in": dense_init(ks[0], d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.2).astype(dt),
+        "A_log": jnp.zeros((H,), jnp.float32),     # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": rms_norm_init(di),
+        "w_out": dense_init(ks[2], di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B, S, C); w: (cw, C).
+    tail: (B, cw-1, C) previous inputs for decode continuity."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(cw))
+    return out
+
+
+def _segsum_decay(dA_cs: jax.Array) -> jax.Array:
+    """L[i, j] = exp(dA_cs[..., i] - dA_cs[..., j]) for i >= j else 0.
+    dA_cs: (..., L). Returns (..., L, L)."""
+    L = dA_cs.shape[-1]
+    diff = dA_cs[..., :, None] - dA_cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array, chunk: int,
+             init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bm/Cm: (B,S,H,N) (already head-broadcast). Returns (y, final_state)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    r = lambda t: t.reshape(Bsz, nc, chunk, *t.shape[2:])
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bm), r(Cm)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,L,H)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    xdt = xc * dtc[..., None]                          # x·dt (B,nc,L,H,P)
+
+    # intra-chunk (quadratic in L) — bf16 MXU inputs/storage with f32
+    # accumulation (§Perf iteration 5: the (B,nc,H,L,L) decay/score
+    # tensors dominate the SSD memory term; bf16 storage halves it)
+    dt_lp = x.dtype
+    Lmat = _segsum_decay(dA_cs.transpose(0, 1, 3, 2))  # (B,nc,H,L,L)
+    CB = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    CBL = (CB * Lmat).astype(dt_lp)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", CBL, xdt.astype(dt_lp),
+                        preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_s exp(dA_cs[L-1] - dA_cs[s]) B_s (x·dt)_s
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (B,nc,L,H)
+    xdt_w = (xdt * decay_out[..., None]).astype(dt_lp)
+    states = jnp.einsum("bcshn,bcshp->bchpn", Bc.astype(dt_lp), xdt_w,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk linear recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])          # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(carry, inp):
+        dec, st = inp                                  # (B,H), (B,H,P,N)
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev                                # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        body, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)           # (B,nc,H,P,N)
+
+    # inter-chunk output: y_off = C_s exp(dA_cs[s]) S_prev
+    decay_in = jnp.exp(dA_cs)                          # (B,nc,L,H)
+    Cdec = (Cc.astype(jnp.float32) * decay_in[..., None]).astype(dt_lp)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", Cdec,
+                       prev_states.astype(dt_lp),
+                       preferred_element_type=jnp.float32)
+
+    # store the residual-stream result in the model dtype and cut the f32
+    # cotangent chain at the boundary (backward runs bf16, f32-accumulated)
+    from repro.models.layers import grad_cast
+    y = grad_cast((y_diag + y_off).astype(dt_lp)).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssd_block(cfg, params: dict, x: jax.Array, *,
+              lora: Optional[MultiLoRA] = None, lora_ab: Optional[dict] = None,
+              cache: Optional[SSDCache] = None,
+              chunk: Optional[int] = None) -> Tuple[jax.Array, Optional[SSDCache]]:
+    """Full Mamba-2 mixer. x: (B, S, d) -> (y, new_cache)."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    la = lora_ab or {}
+    zxbcdt = proj(x, params["w_in"], None, lora, la.get("ssd_in"))
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * NGROUPS * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    new_conv = None
+    if cache is not None:
+        new_conv = jnp.concatenate([cache.conv, xBC], axis=1)[:, -(cfg.ssm_conv - 1):]
+        xBC = _causal_conv(xBC, params["conv_w"], cache.conv)
+    else:
+        xBC = _causal_conv(xBC, params["conv_w"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + NGROUPS * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    xs = shard(xs, "batch", "seq", "tp")
+    # broadcast groups to heads
+    hpg = H // NGROUPS
+    Bm = jnp.repeat(Bm.reshape(B, S, NGROUPS, N), hpg, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B, S, NGROUPS, N), hpg, axis=2)
+
+    A = -jnp.exp(params["A_log"])
+    if cache is not None and S == 1:
+        # ---- single-step decode ----
+        dA = jnp.exp(dt[:, 0] * A[None, :])            # (B,H)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0],
+                         xs[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32))
+        state = cache.state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+        y = y[:, None]                                 # (B,1,H,P)
+        new_cache = SSDCache(state, new_conv)
+    else:
+        ck = chunk or cfg.ssm_chunk
+        y, final = ssd_scan(xs, dt, A, Bm, Cm, min(ck, S),
+                            init_state=cache.state if cache is not None else None)
+        new_cache = SSDCache(final, new_conv) if cache is not None else None
+
+    y = (y.astype(jnp.float32)
+         + params["D"][None, None, :, None] * xs.astype(jnp.float32))
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["gate_norm"], cfg.norm_eps)
+    out = proj(y, params["w_out"], None, lora, la.get("ssd_out"))
+    return shard(out, "batch", "sp", None), new_cache

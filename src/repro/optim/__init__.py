@@ -1,0 +1,4 @@
+from repro.optim import adamw, schedule
+from repro.optim.adamw import AdamWState
+
+__all__ = ["adamw", "schedule", "AdamWState"]

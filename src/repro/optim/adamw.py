@@ -1,0 +1,46 @@
+"""AdamW for LoRA adapter trees (the backbone is frozen — no state for it).
+
+Plain functional implementation over pytrees; moments in f32 regardless of
+param dtype (master-weight discipline from DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+           b2: float = 0.999, eps: float = 1e-8,
+           weight_decay: float = 0.0) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    tf = jnp.float32
+
+    def upd(g, m, v, p):
+        g = g.astype(tf)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step.astype(tf))
+        vhat = v / (1 - b2 ** step.astype(tf))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(tf)
+        return (p.astype(tf) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step, new_m, new_v)

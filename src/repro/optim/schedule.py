@@ -1,0 +1,18 @@
+"""LR schedules (linear warmup + cosine decay), pure functions of step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f

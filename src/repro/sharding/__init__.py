@@ -1,0 +1,3 @@
+from repro.sharding.specs import shard, use_mesh, spec_for, named_sharding, logical_to_mesh
+
+__all__ = ["shard", "use_mesh", "spec_for", "named_sharding", "logical_to_mesh"]

@@ -1,0 +1,200 @@
+"""Name-driven parameter/cache sharding rules for the production mesh.
+
+The Model Fuser hands the SSM to GSPMD as one composite function; these
+rules provide the in_shardings.  Rules are keyed by leaf *name* and apply
+to the trailing dims — leading stack axes (scan n_cycles, adapter K) stay
+unsharded.  Divisibility-aware: an axis that does not divide the dim is
+dropped (smollm's 15 heads, hubert's 504-way head, ...).
+
+Weight layout (DESIGN.md §5): up-projections shard the output dim over
+"model", down-projections the input dim (Megatron 1D TP layout — the
+activation stays sharded through the pair with one all-reduce after the
+down-projection).  Experts shard the expert dim ("expert parallelism").
+Embeddings shard the vocab dim.  LoRA adapters/optimizer state replicate
+(tiny — that IS the paper's memory win).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.attention import KVCache
+from repro.models.mla import MLACache
+from repro.models.rglru import RGLRUCache
+from repro.models.ssd import SSDCache
+
+# leaf-name -> (trailing-dims spec), applied right-aligned.
+# "M" = model axis, "D" = data axis (FSDP-style second weight axis), "B" =
+# batch axes (pod, data), None = replicated.
+#
+# Weights shard 2-D (D x M): the Megatron TP dim over "model" plus the
+# other matmul dim over "data" (ZeRO-3/FSDP — GSPMD all-gathers each
+# layer's slab inside the scan).  This is what lets qwen1.5-110b's 220 GB
+# of bf16 weights fit 16 GB/chip (§Perf iteration 0 in EXPERIMENTS.md).
+_W_RULES = {
+    # embeddings / heads
+    "embed": ("M", "D"),
+    "head": ("D", "M"),
+    "frontend": ("D", "M"),
+    # attention
+    "wq": ("D", "M"), "wk": ("D", "M"), "wv": ("D", "M"),
+    "wo": ("M", "D"),
+    "bq": ("M",), "bk": ("M",), "bv": ("M",),
+    # MLA
+    "w_kv_a": ("D", "M"), "w_kv_b": ("D", "M"),
+    # dense FFN
+    "gate": ("D", "M"), "up": ("D", "M"), "down": ("M", "D"),
+    # MoE: expert dim sharded (expert parallelism) + d over data
+    "router": (None, None),
+    "w_in": ("M", "D", None), "w_out": ("M", None, "D"),
+    # SSD (mamba2) — w_in/w_out shadowed by MoE names; SSD uses 2-D leaves
+    "conv_w": (None, "M"),
+    # RG-LRU
+    "w_x": ("D", "M"), "w_gate": ("D", "M"),
+    "w_a": ("D", "M"), "w_i": ("D", "M"),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _resolve(mesh: Mesh, tag) -> Tuple:
+    if tag == "M":
+        return ("model",) if "model" in mesh.axis_names else ()
+    if tag == "D":
+        return ("data",) if "data" in mesh.axis_names else ()
+    if tag == "B":
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ()
+
+
+def _spec(mesh: Mesh, shape: Sequence[int], tags: Sequence) -> P:
+    """Right-aligned tags -> PartitionSpec with divisibility dropping."""
+    entries = [None] * len(shape)
+    for i, tag in enumerate(tags):
+        dim_idx = len(shape) - len(tags) + i
+        if dim_idx < 0 or tag is None:
+            continue
+        axes = _resolve(mesh, tag)
+        if not axes:
+            continue
+        size = math.prod(_axis_size(mesh, a) for a in axes)
+        if shape[dim_idx] % size == 0 and shape[dim_idx] > 0:
+            entries[dim_idx] = axes if len(axes) > 1 else axes[0]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            return str(k.key)
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            return str(k.name)
+    return ""
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    """NamedSharding tree for a frozen backbone param tree (SDS ok).
+
+    MoE w_in/w_out are 3-D (E, d, f) -> expert-parallel; SSD w_in/w_out
+    are 2-D (d_in, d_out) -> TP. Disambiguated by trailing ndim.
+    """
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        in_ssd = any(isinstance(k, jax.tree_util.DictKey) and k.key == "ssd"
+                     for k in path)
+        tags = _W_RULES.get(name)
+        if name in ("w_in", "w_out") and in_ssd:
+            # SSD projections are plain 2-D TP, not expert stacks
+            tags = ("D", "M") if name == "w_in" else ("M", "D")
+        if tags is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _spec(mesh, shape, tags))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_shardings(mesh: Mesh, batch, *, seq_axis: bool = False) -> Any:
+    """Fused-batch inputs: rows over (pod, data); optionally seq over data
+    (sequence parallelism for batch=1 long-context)."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        size = math.prod(_axis_size(mesh, a) for a in baxes)
+        if baxes and shape[0] % size == 0:
+            entries[0] = baxes if len(baxes) > 1 else baxes[0]
+        elif (seq_axis and len(shape) >= 2 and "data" in mesh.axis_names
+                and shape[1] % _axis_size(mesh, "data") == 0):
+            entries[1] = "data"
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+# ------------------------------------------------------------- caches
+def _cache_spec(mesh: Mesh, nt, stacked: bool):
+    """Per-cache-type sharding; `stacked` = leading layer axis present."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = (baxes if len(baxes) > 1 else baxes[0]) if baxes else None
+    bsz = math.prod(_axis_size(mesh, a) for a in baxes) if baxes else 1
+    lead: tuple = (None,) if stacked else ()
+
+    def fit(dim, axis, size):
+        return axis if (axis is not None and dim % size == 0) else None
+
+    m = "model" if "model" in mesh.axis_names else None
+    msz = _axis_size(mesh, "model") if m else 1
+
+    if isinstance(nt, KVCache):
+        B, _, KV, hd = nt.k.shape[-4:]
+        kv_ax = fit(KV, m, msz)
+        # GQA kv-head counts often don't divide the model axis (kv=8 on a
+        # 16-way mesh): fall back to sharding head_dim so the multi-GB
+        # decode caches still partition (memory feasibility on v5e).
+        hd_ax = None if kv_ax is not None else fit(hd, m, msz)
+        spec = P(*lead, fit(B, b, bsz), None, kv_ax, hd_ax)
+        return KVCache(NamedSharding(mesh, spec), NamedSharding(mesh, spec))
+    if isinstance(nt, MLACache):
+        B, _, C = nt.latent.shape[-3:]
+        s1 = P(*lead, fit(B, b, bsz), None, fit(C, m, msz))
+        B, _, R = nt.rope.shape[-3:]
+        s2 = P(*lead, fit(B, b, bsz), None, fit(R, m, msz))
+        return MLACache(NamedSharding(mesh, s1), NamedSharding(mesh, s2))
+    if isinstance(nt, SSDCache):
+        B, H, _, _ = nt.state.shape[-4:]
+        s1 = P(*lead, fit(B, b, bsz), fit(H, m, msz))
+        B, _, C = nt.conv.shape[-3:]
+        s2 = P(*lead, fit(B, b, bsz), None, fit(C, m, msz))
+        return SSDCache(NamedSharding(mesh, s1), NamedSharding(mesh, s2))
+    if isinstance(nt, RGLRUCache):
+        B, W = nt.h.shape[-2:]
+        s1 = P(*lead, fit(B, b, bsz), fit(W, m, msz))
+        B, _, W2 = nt.conv.shape[-3:]
+        s2 = P(*lead, fit(B, b, bsz), None, fit(W2, m, msz))
+        return RGLRUCache(NamedSharding(mesh, s1), NamedSharding(mesh, s2))
+    raise TypeError(type(nt))
+
+
+def cache_shardings(mesh: Mesh, caches: list, cfg) -> list:
+    """Mirror init_caches structure: [ {str: CacheNT} ] per segment."""
+    from repro.models.model import segment_plan
+    out = []
+    for seg, seg_c in zip(segment_plan(cfg), caches):
+        out.append({k: _cache_spec(mesh, v, stacked=seg.scanned)
+                    for k, v in seg_c.items()})
+    return out

@@ -1,0 +1,3 @@
+from repro.train import serve, train_loop
+
+__all__ = ["serve", "train_loop"]

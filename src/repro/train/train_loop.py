@@ -1,0 +1,91 @@
+"""End-to-end multi-LoRA training loop (Fig. 3 lifecycle, phase 3).
+
+Drives one fused group: data -> SSM train step -> AIMD nano-batch
+adaptation -> per-job checkpoints.  The step function is (re)jitted when
+the AIMD controller changes N — an O(log N)-bounded number of recompiles,
+each of which still makes training progress (paper §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.jobs import LoRAJobSpec
+from repro.core.nanobatch import AIMDController
+from repro.core.ssm import SharedSuperModel
+from repro.data.pipeline import FusedBatcher
+from repro.optim import adamw
+from repro.optim.schedule import constant
+
+
+@dataclass
+class TrainReport:
+    steps: int = 0
+    losses: List[float] = field(default_factory=list)
+    per_job_losses: List[np.ndarray] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+    nano_history: List[int] = field(default_factory=list)
+
+    @property
+    def samples_per_sec(self) -> float:
+        return 0.0 if not self.step_times else 1.0 / float(
+            np.mean(self.step_times[1:] or self.step_times))
+
+
+def train_group(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], *,
+                steps: int = 20, lr: float = 1e-3, seed: int = 0,
+                impl: str = "ref", block_t: int = 8,
+                adaptive_nano: bool = True, nano_batches: int = 1,
+                remat: bool = True,
+                params=None, adapters=None,
+                log: Optional[Callable[[str], None]] = None) -> Dict:
+    """Train a fused group for *steps* iterations on the local device."""
+    log = log or (lambda s: None)
+    ssm = SharedSuperModel(cfg, list(jobs), impl=impl, block_t=block_t)
+    batcher = FusedBatcher(list(jobs), cfg.vocab_size, block_t=block_t,
+                           seed=seed)
+    key = jax.random.PRNGKey(seed)
+    if params is None or adapters is None:
+        params, adapters = ssm.init(key)
+    opt_state = adamw.init(adapters)
+
+    rows = batcher.total_rows()
+    aimd = AIMDController(rows=rows, n=nano_batches,
+                          max_n=min(rows, 16)) if adaptive_nano else None
+    n = nano_batches
+
+    step_cache: Dict[int, Callable] = {}
+
+    def get_step(n: int) -> Callable:
+        if n not in step_cache:
+            fn = ssm.make_train_step(lr_fn=constant(lr), nano_batches=n,
+                                     remat=remat)
+            step_cache[n] = jax.jit(fn)
+        return step_cache[n]
+
+    report = TrainReport()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in batcher.next_batch().items()}
+        t0 = time.perf_counter()
+        adapters, opt_state, metrics = get_step(n)(params, adapters,
+                                                   opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        report.steps += 1
+        report.losses.append(loss)
+        report.per_job_losses.append(np.asarray(metrics["per_job_loss"]))
+        report.step_times.append(dt)
+        report.nano_history.append(n)
+        if aimd is not None and i >= 1:       # skip compile-step timing
+            n = aimd.update(dt)
+        log(f"step {i:4d} loss {loss:.4f} nano {n} dt {dt*1e3:.1f}ms")
+
+    return {"ssm": ssm, "params": params, "adapters": adapters,
+            "opt_state": opt_state, "report": report, "batcher": batcher}

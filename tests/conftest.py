@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only launch/dryrun.py (and the dryrun subprocess test)
+force 512/8 host devices."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def tiny_cfg():
+    """Reduced tinyllama in f32 for tight-tolerance math tests."""
+    return dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                               dtype="float32")
+
+
+@pytest.fixture
+def two_jobs():
+    return [
+        LoRAJobSpec("job-a", rank=4, batch_size=2, seq_len=32,
+                    base_model="tinyllama-1.1b"),
+        LoRAJobSpec("job-b", rank=8, batch_size=1, seq_len=32,
+                    base_model="tinyllama-1.1b"),
+    ]

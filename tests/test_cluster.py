@@ -1,0 +1,99 @@
+"""Trace generator, discrete-event simulator, baselines, metrics."""
+import numpy as np
+import pytest
+
+from repro.cluster.baselines import SYSTEMS, make_simulator
+from repro.cluster.metrics import compare, format_table, size_terciles, \
+    summarize
+from repro.cluster.simulator import ClusterConfig
+from repro.cluster.trace import (MONTH, TraceConfig, generate, month_slice,
+                                 scale_arrivals)
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    return generate(TraceConfig(months=1, jobs_per_month=120,
+                                steps_mean=2000, seed=1))
+
+
+def test_trace_shape(small_trace):
+    assert len(small_trace) > 60
+    assert all(j.rank in (2, 4, 8, 16) for j in small_trace)
+    assert all(j.batch_size in (1, 2, 4, 8) for j in small_trace)
+    ts = [j.arrival_time for j in small_trace]
+    assert ts == sorted(ts)
+    assert all(0 <= t < MONTH for t in ts)
+
+
+def test_trace_monthly_burstiness():
+    tr = generate(TraceConfig(months=3, jobs_per_month=100, seed=2))
+    counts = [len(month_slice(tr, m)) for m in range(3)]
+    assert counts[1] > 1.4 * counts[0]          # ~2x month 2
+    assert counts[2] > 2.5 * counts[0]          # ~4x month 3
+
+
+def test_scale_arrivals(small_trace):
+    fast = scale_arrivals(small_trace, 2.0)
+    assert fast[-1].arrival_time == pytest.approx(
+        small_trace[-1].arrival_time / 2.0)
+
+
+@pytest.fixture(scope="module")
+def sim_results(small_trace):
+    tr = scale_arrivals(small_trace, 30.0)      # compress -> contention
+    out = {}
+    for s in SYSTEMS:
+        sim = make_simulator(s, ClusterConfig(total_chips=64))
+        out[s] = sim.run(tr, max_time=2.0 * max(j.arrival_time for j in tr))
+    return out
+
+
+def test_all_systems_make_progress(sim_results):
+    for name, res in sim_results.items():
+        assert res.samples_done > 0, name
+
+
+def test_tlora_beats_mlora(sim_results):
+    """Headline claims direction: throughput, JCT, utilization."""
+    d = compare(sim_results)
+    # at this small test load the cluster drains, so aggregate throughput
+    # converges; the contended-regime 1.2-1.8x gain is benchmarks/fig9.
+    assert d["tlora"]["throughput_x"] >= 1.0
+    assert d["tlora"]["jct_speedup_x"] >= 1.2
+    assert d["tlora"]["utilization_delta"] > 0
+
+
+def test_ablations_are_worse_than_full(sim_results):
+    s = {k: summarize(v) for k, v in sim_results.items()}
+    full = s["tlora"]["avg_jct_sec"]
+    assert s["tlora_no_scheduler"]["avg_jct_sec"] >= 0.95 * full
+    assert s["tlora_no_kernel"]["avg_jct_sec"] >= full
+
+
+def test_grouping_happens_across_terciles(sim_results):
+    """Fig. 6b structure: tLoRA co-locates materially in every size
+    tercile (the exact small>medium ordering is seed-dependent at this
+    tiny trace size; the benchmark-scale run in fig6 shows the paper's
+    ordering)."""
+    t = size_terciles(sim_results["tlora"])
+    m = size_terciles(sim_results["mlora"])
+    for size in ("small", "medium", "large"):
+        assert t[size][0] > 0.2, (size, t)
+    # paper Fig 6b: mLoRA's FIFO has the HIGHER grouping ratio yet loses
+    # on JCT — grouping more is not grouping better
+    assert m["small"][0] > 0.4
+
+
+def test_simulator_conserves_jobs(small_trace, sim_results):
+    for res in sim_results.values():
+        assert len(res.logs) == len(small_trace)
+        done = [l for l in res.logs.values() if l.finish is not None]
+        for l in done:
+            assert l.steps_done >= l.spec.steps_budget
+            assert l.finish >= l.arrival
+
+
+def test_format_table():
+    rows = [{"a": 1.0, "b": "x"}, {"a": 2.5, "b": "y"}]
+    out = format_table(rows, ["a", "b"], title="T")
+    assert "##" in out and "2.5" in out

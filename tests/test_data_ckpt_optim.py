@@ -1,0 +1,133 @@
+"""Data pipeline, checkpoint roundtrips, optimizer, schedules."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import (insert_job, restore_job, save_job,
+                                         slice_job)
+from repro.core.jobs import LoRAJobSpec
+from repro.core.lora import merge_adapter_pair, extract_adapter, pad_rank
+from repro.core.ssm import SharedSuperModel
+from repro.data.pipeline import FusedBatcher, JobStream, sample_lengths
+from repro.optim import adamw
+from repro.optim.schedule import constant, warmup_cosine
+
+
+# ------------------------------------------------------------------ data
+def test_fused_batcher_layout(two_jobs):
+    fb = FusedBatcher(two_jobs, vocab_size=128, block_t=8)
+    b = fb.next_batch()
+    ids = b["adapter_ids"]
+    # job-major, sorted, contiguous
+    assert (np.diff(ids) >= 0).all()
+    assert b["tokens"].shape == (3, 32)
+    # every job's token count tile-aligned
+    for k in range(2):
+        assert (ids == k).sum() * 32 % 8 == 0
+
+
+def test_fused_batcher_pads_misaligned():
+    jobs = [LoRAJobSpec("a", rank=4, batch_size=1, seq_len=12)]
+    fb = FusedBatcher(jobs, vocab_size=64, block_t=8)
+    b = fb.next_batch()
+    rows, S = b["tokens"].shape
+    assert rows * S % 8 == 0
+    # padding rows have zero loss mask
+    assert b["loss_mask"][1:].sum() == 0
+
+
+def test_job_stream_deterministic():
+    job = LoRAJobSpec("a", rank=4, batch_size=2, seq_len=32)
+    s1, s2 = JobStream(job, 64, seed=3), JobStream(job, 64, seed=3)
+    b1, b2 = s1.next_batch(), s2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_gsm8k_like_lengths():
+    rng = np.random.default_rng(0)
+    lens = sample_lengths(rng, 5000, 512)
+    assert 120 < np.mean(lens) < 260       # GSM8K-ish mean
+    assert np.percentile(lens, 95) < 512
+
+
+# ------------------------------------------------------------ checkpoint
+def test_slice_insert_roundtrip(tiny_cfg, two_jobs):
+    ssm = SharedSuperModel(tiny_cfg, two_jobs, impl="ref", block_t=8)
+    _, adapters = ssm.init(jax.random.PRNGKey(0))
+    flat = slice_job(adapters, 0, rank=4)
+    # poison slot 0, re-insert, compare
+    poisoned = jax.tree.map(lambda x: x * 0 - 1.0, adapters)
+    restored = insert_job(poisoned, 0, 4, flat)
+    want = slice_job(adapters, 0, 4)
+    got = slice_job(restored, 0, 4)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]))
+
+
+def test_save_restore_file_roundtrip(tmp_path, tiny_cfg, two_jobs):
+    ssm = SharedSuperModel(tiny_cfg, two_jobs, impl="ref", block_t=8)
+    _, adapters = ssm.init(jax.random.PRNGKey(0))
+    opt = adamw.init(adapters)
+    path = str(tmp_path / "job-a.npz")
+    save_job(path, "job-a", 0, 4, adapters, opt_state=opt, step=7)
+
+    # restore into index 1 of a FRESH stack (re-fuse at different slot)
+    _, fresh = ssm.init(jax.random.PRNGKey(9))
+    fresh_opt = adamw.init(fresh)
+    fresh2, opt2, step = restore_job(path, 1, fresh, fresh_opt)
+    assert step == 7
+    want = slice_job(adapters, 0, 4)
+    got = slice_job(fresh2, 1, 4)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-6)
+
+
+def test_merge_extract_adapter_pair():
+    key = jax.random.PRNGKey(0)
+    p1 = {"A": jax.random.normal(key, (16, 4)),
+          "B": jax.random.normal(key, (4, 8))}
+    p2 = {"A": jax.random.normal(key, (16, 8)),
+          "B": jax.random.normal(key, (8, 8))}
+    fused = merge_adapter_pair([p1, p2])
+    assert fused["A"].shape == (2, 16, 8)
+    back = extract_adapter(fused, 0, 4)
+    np.testing.assert_allclose(np.asarray(back["A"]), np.asarray(p1["A"]))
+    np.testing.assert_allclose(np.asarray(back["B"]), np.asarray(p1["B"]))
+
+
+# ----------------------------------------------------------------- optim
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw.init(params)
+    for _ in range(300):
+        g = jax.tree.map(lambda w: 2 * w, params)     # d/dw w^2
+        params, opt = adamw.update(g, opt, params, lr=0.1)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay():
+    params = {"w": jnp.array([1.0])}
+    opt = adamw.init(params)
+    zero_g = {"w": jnp.array([0.0])}
+    p2, _ = adamw.update(zero_g, opt, params, lr=0.1, weight_decay=0.1)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_schedules():
+    f = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(f(100)) == pytest.approx(1e-4, rel=1e-2)
+    assert float(constant(2e-4)(5)) == pytest.approx(2e-4)
+
+
+def test_pad_rank():
+    assert pad_rank(3, 8) == 8
+    assert pad_rank(9, 8) == 16
+    assert pad_rank(16, 128) == 128

@@ -1,0 +1,146 @@
+"""End-to-end integration: train loop (AIMD on), serving, ring-window
+equivalence, VLM/audio modality paths."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.jobs import LoRAJobSpec
+from repro.core.ssm import SharedSuperModel
+from repro.train.serve import Request, serve_batch
+from repro.train.train_loop import train_group
+
+
+def test_train_loop_runs_with_aimd(tiny_cfg):
+    jobs = [LoRAJobSpec("a", rank=8, batch_size=2, seq_len=32),
+            LoRAJobSpec("b", rank=4, batch_size=2, seq_len=32)]
+    out = train_group(tiny_cfg, jobs, steps=8, lr=1e-3, impl="ref",
+                      block_t=8, adaptive_nano=True)
+    rep = out["report"]
+    assert rep.steps == 8
+    assert all(np.isfinite(l) for l in rep.losses)
+    assert len(rep.nano_history) == 8               # AIMD actually ran
+
+
+def test_fixed_batch_overfits(tiny_cfg):
+    """Deterministic learning check: repeated batch -> loss decreases."""
+    import jax.numpy as jnp
+    from repro.core.ssm import SharedSuperModel
+    from repro.data.pipeline import FusedBatcher
+    from repro.optim import adamw
+    from repro.optim.schedule import constant
+    jobs = [LoRAJobSpec("a", rank=8, batch_size=2, seq_len=32),
+            LoRAJobSpec("b", rank=4, batch_size=2, seq_len=32)]
+    ssm = SharedSuperModel(tiny_cfg, jobs, impl="ref", block_t=8)
+    params, adapters = ssm.init(jax.random.PRNGKey(0))
+    opt = adamw.init(adapters)
+    batch = {k: jnp.asarray(v) for k, v in
+             FusedBatcher(jobs, tiny_cfg.vocab_size,
+                          block_t=8).next_batch().items()}
+    step = jax.jit(ssm.make_train_step(lr_fn=constant(2e-2), remat=False))
+    losses = []
+    for _ in range(10):
+        adapters, opt, m = step(params, adapters, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_serve_batch_generates(tiny_cfg):
+    jobs = [LoRAJobSpec(f"ad{i}", rank=r, batch_size=1)
+            for i, r in enumerate((4, 8))]
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, tiny_cfg.vocab_size, size=9,
+                                        dtype=np.int32),
+                    adapter_id=i % 2, max_new_tokens=5)
+            for i in range(4)]
+    out = serve_batch(tiny_cfg, jobs, reqs, impl="ref", block_t=8)
+    assert out.shape == (4, 5)
+    assert (out >= 0).all() and (out < tiny_cfg.vocab_size).all()
+
+
+def test_ring_decode_matches_full_within_window(tiny_cfg):
+    """While pos < window, ring-buffer decode must equal full-cache
+    decode (the sliding-window variant is exact inside the window)."""
+    cfg = tiny_cfg
+    job = LoRAJobSpec("a", rank=4, batch_size=1)
+    ssm = SharedSuperModel(cfg, [job], impl="ref", block_t=8)
+    params, adapters = ssm.init(jax.random.PRNGKey(1))
+
+    ids = jnp.zeros(2, jnp.int32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 10), 1,
+                              cfg.vocab_size)
+    full = ssm.init_decode_caches(InputShape("f", 64, 2, "decode"), batch=2)
+    ring = ssm.init_decode_caches(
+        InputShape("r", 64, 2, "decode", sliding_window_variant=True),
+        batch=2)
+    step_f = jax.jit(ssm.make_serve_step(ring=False))
+    step_r = jax.jit(ssm.make_serve_step(ring=True))
+    for pos in range(10):
+        tok = toks[:, pos:pos + 1]
+        lf, full = step_f(params, adapters, full,
+                          {"tokens": tok, "adapter_ids": ids}, pos)
+        lr_, ring = step_r(params, adapters, ring,
+                           {"tokens": tok, "adapter_ids": ids}, pos)
+        np.testing.assert_allclose(np.asarray(lf, np.float32),
+                                   np.asarray(lr_, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["hubert-xlarge", "internvl2-26b"])
+def test_modality_frontends(arch):
+    """Audio/VLM stubs: correct shapes through embed_inputs + loss."""
+    from repro.models import model as M
+    cfg = get_config(arch).reduced()
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    if cfg.family == "audio":
+        batch = {"frames": jnp.asarray(rng.standard_normal(
+            (2, 16, cfg.frontend_dim)).astype(np.float32)),
+            "labels": jnp.zeros((2, 16), jnp.int32)}
+        want_S = 16
+    else:
+        P_ = cfg.num_patches
+        batch = {"patches": jnp.asarray(rng.standard_normal(
+            (2, P_, cfg.frontend_dim)).astype(np.float32)),
+            "tokens": jnp.ones((2, 8), jnp.int32),
+            "labels": jnp.zeros((2, 8), jnp.int32)}
+        want_S = P_ + 8
+    logits, aux, _, off = M.forward(cfg, params, None, None, batch)
+    assert logits.shape[:2] == (2, want_S)
+    loss, parts = M.loss_fn(cfg, params, None, None, batch, remat=False)
+    assert np.isfinite(float(loss))
+    if cfg.family == "vlm":
+        assert off == cfg.num_patches
+
+
+def test_prefill_then_decode_consistency(tiny_cfg):
+    """Prefill-with-cache followed by decode equals teacher forcing."""
+    from repro.models import model as M
+    cfg = tiny_cfg
+    job = LoRAJobSpec("a", rank=4, batch_size=1)
+    ssm = SharedSuperModel(cfg, [job], impl="ref", block_t=8)
+    params, adapters = ssm.init(jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 1,
+                              cfg.vocab_size)
+    ids = jnp.zeros(2, jnp.int32)
+
+    # teacher-forced full forward
+    logits_tf, _, _, _ = M.forward(cfg, params, adapters,
+                                   ssm.lora_ctx(ids), {"tokens": toks})
+
+    # prefill 7 tokens, then decode token 8
+    caches = ssm.init_decode_caches(InputShape("p", 16, 2, "decode"),
+                                    batch=2)
+    serve = jax.jit(ssm.make_serve_step())
+    lp, caches = serve(params, adapters, caches,
+                       {"tokens": toks[:, :7], "adapter_ids": ids}, 0)
+    ld, _ = serve(params, adapters, caches,
+                  {"tokens": toks[:, 7:8], "adapter_ids": ids}, 7)
+    np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                               np.asarray(logits_tf[:, 7], np.float32),
+                               rtol=2e-3, atol=2e-3)

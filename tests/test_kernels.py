@@ -1,0 +1,152 @@
+"""Pallas fused-LoRA kernel vs the pure-jnp oracle (deliverable c).
+
+Sweeps shapes/dtypes/ranks in interpret mode (CPU) and checks the custom
+VJP against autodiff of the reference. Property-based sweep via hypothesis.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_lora import fused_lora_pallas, grouped_matmul_pallas
+
+
+def make_case(rng, T, K, d_in, d_out, r_pad, dtype, block_t):
+    x = rng.standard_normal((T, d_in)).astype(dtype)
+    A = (rng.standard_normal((K, d_in, r_pad)) * 0.3).astype(dtype)
+    B = (rng.standard_normal((K, r_pad, d_out)) * 0.3).astype(dtype)
+    ranks = rng.integers(1, r_pad + 1, size=K).astype(np.int32)
+    scal = (16.0 / ranks).astype(np.float32)
+    # sorted, tile-aligned adapter ids (the SSM layout contract)
+    tiles = rng.integers(0, K, size=T // block_t)
+    ids = np.sort(np.repeat(tiles, block_t)).astype(np.int32)
+    return (jnp.asarray(x), jnp.asarray(A), jnp.asarray(B),
+            jnp.asarray(ids), jnp.asarray(ranks), jnp.asarray(scal))
+
+
+SWEEP = [
+    # T, K, d_in, d_out, r_pad, dtype, block_t
+    (64, 2, 32, 48, 8, np.float32, 8),
+    (128, 4, 64, 64, 16, np.float32, 16),
+    (64, 1, 16, 128, 8, np.float32, 8),
+    (128, 3, 48, 96, 8, ml_dtypes.bfloat16, 8),
+    (256, 5, 32, 64, 32, np.float32, 32),
+]
+
+
+@pytest.mark.parametrize("T,K,d_in,d_out,r_pad,dtype,block_t", SWEEP)
+def test_pallas_matches_ref(T, K, d_in, d_out, r_pad, dtype, block_t):
+    rng = np.random.default_rng(0)
+    x, A, B, ids, ranks, scal = make_case(rng, T, K, d_in, d_out, r_pad,
+                                          dtype, block_t)
+    got = ops.fused_lora(x, A, B, ids, ranks, scal, impl="pallas",
+                         block_t=block_t)
+    want = ref.fused_lora_ref(x, A, B, ids, ranks, scal)
+    tol = 2e-2 if dtype == ml_dtypes.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", ["xla", "loop"])
+def test_other_impls_match_ref(impl):
+    rng = np.random.default_rng(1)
+    x, A, B, ids, ranks, scal = make_case(rng, 64, 3, 32, 48, 8,
+                                          np.float32, 8)
+    got = ops.fused_lora(x, A, B, ids, ranks, scal, impl=impl, block_t=8)
+    want = ref.fused_lora_ref(x, A, B, ids, ranks, scal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_matmul_matches_ref():
+    rng = np.random.default_rng(2)
+    T, K, d_in, d_out, bt = 64, 3, 32, 64, 8
+    x = jnp.asarray(rng.standard_normal((T, d_in)).astype(np.float32))
+    W = jnp.asarray(rng.standard_normal((K, d_in, d_out)).astype(np.float32))
+    tiles = np.sort(rng.integers(0, K, size=T // bt)).astype(np.int32)
+    ids = np.repeat(tiles, bt).astype(np.int32)
+    got = grouped_matmul_pallas(x, W, jnp.asarray(tiles), block_t=bt)
+    want = ref.grouped_matmul_ref(x, W, jnp.asarray(ids))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_vjp_matches_ref_grads():
+    rng = np.random.default_rng(3)
+    x, A, B, ids, ranks, scal = make_case(rng, 64, 2, 24, 40, 8,
+                                          np.float32, 8)
+    # B=0 is the LoRA init; perturb so dB is informative
+    B = B + 0.1
+
+    def f_pallas(x, A, B):
+        return (ops.fused_lora(x, A, B, ids, ranks, scal, impl="pallas",
+                               block_t=8) ** 2).sum()
+
+    def f_ref(x, A, B):
+        return (ref.fused_lora_ref(x, A, B, ids, ranks, scal) ** 2).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, A, B)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, A, B)
+    for p, r_ in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(r_),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_rank_mask_zeroes_padded_lanes():
+    rng = np.random.default_rng(4)
+    x, A, B, ids, ranks, scal = make_case(rng, 32, 2, 16, 16, 8,
+                                          np.float32, 8)
+    # poison the padded lanes of A; rank-masked output must not change
+    ranks = jnp.asarray([3, 5], jnp.int32)
+    base = ref.fused_lora_ref(x, A, B, ids, ranks, scal)
+    A_poison = A.at[:, :, 5:].set(1e6)
+    # adapter 1 uses lanes < 5; adapter 0 lanes < 3
+    out = ref.fused_lora_ref(x, A_poison, B, ids, ranks, scal)
+    got = ops.fused_lora(x, A_poison, B, ids, ranks, scal, impl="pallas",
+                         block_t=8)
+    # lanes >= 5 poisoned -> both impls must mask them
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(2, 6),
+    K=st.integers(1, 4),
+    d_in=st.sampled_from([16, 32, 40]),
+    d_out=st.sampled_from([16, 64]),
+    r_pad=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_pallas_vs_ref(n_tiles, K, d_in, d_out, r_pad, seed):
+    bt = 8
+    rng = np.random.default_rng(seed)
+    x, A, B, ids, ranks, scal = make_case(rng, n_tiles * bt, K, d_in,
+                                          d_out, r_pad, np.float32, bt)
+    got = ops.fused_lora(x, A, B, ids, ranks, scal, impl="pallas",
+                         block_t=bt)
+    want = ref.fused_lora_ref(x, A, B, ids, ranks, scal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_scaling_linearity(seed):
+    """y(s * scalings) == s * y(scalings) — kernel applies scaling once."""
+    rng = np.random.default_rng(seed)
+    x, A, B, ids, ranks, scal = make_case(rng, 32, 2, 16, 16, 8,
+                                          np.float32, 8)
+    y1 = ops.fused_lora(x, A, B, ids, ranks, scal, impl="pallas", block_t=8)
+    y2 = ops.fused_lora(x, A, B, ids, ranks, 2.0 * scal, impl="pallas",
+                        block_t=8)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,80 @@
+"""AIMD nano-batch controller (paper Eq. 2) against the Eq. 1 cost model."""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nanobatch import (AIMDController, optimal_nano,
+                                  simulate_step_time)
+from repro.core.ssm import valid_nano_counts
+
+
+def test_valid_nano_counts():
+    assert valid_nano_counts(12) == [1, 2, 3, 4, 6, 12]
+    assert valid_nano_counts(12, max_n=4) == [1, 2, 3, 4]
+
+
+def run_controller(rows, t_comp, t_comm, steps=40, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    ctl = AIMDController(rows=rows, alpha=4, beta=0.5, max_n=rows)
+    n = ctl.n
+    for _ in range(steps):
+        t = simulate_step_time(n, t_comp=t_comp, t_comm=t_comm)
+        t *= 1.0 + noise * rng.standard_normal()
+        n = ctl.update(t)
+    return ctl
+
+
+def test_aimd_converges_near_optimum_comm_bound():
+    """Comm-heavy: finer nano-batches pay off; AIMD should find a point
+    whose step time is within 10% of the best legal N."""
+    rows, t_comp, t_comm = 64, 0.010, 0.012
+    ctl = run_controller(rows, t_comp, t_comm)
+    best = optimal_nano(rows, t_comp=t_comp, t_comm=t_comm)
+    t_best = simulate_step_time(best, t_comp=t_comp, t_comm=t_comm)
+    t_got = simulate_step_time(ctl.n, t_comp=t_comp, t_comm=t_comm)
+    assert t_got <= 1.10 * t_best, (ctl.n, best)
+
+
+def test_aimd_backs_off_when_overhead_dominates():
+    """Launch-overhead regime: best N is small; AIMD must not run away."""
+    rows = 64
+    ctl = run_controller(rows, t_comp=0.0005, t_comm=0.0001)
+    best = optimal_nano(rows, t_comp=0.0005, t_comm=0.0001)
+    assert ctl.n <= 4 * max(best, 1)
+
+
+def test_aimd_multiplicative_decrease():
+    ctl = AIMDController(rows=64, n=16, max_n=64)
+    ctl.update(1.0)       # first obs -> probe up
+    n_hi = ctl.n
+    ctl.update(10.0)      # big regression -> backoff
+    assert ctl.n <= max(1, int(0.5 * n_hi) + 1)
+
+
+def test_aimd_additive_increase():
+    ctl = AIMDController(rows=64, n=1, max_n=64)
+    ctl.update(1.0)
+    before = ctl.n
+    ctl.update(0.5)       # improvement -> +alpha
+    assert ctl.n >= before
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.sampled_from([16, 32, 96]),
+       t_comp=st.floats(1e-4, 5e-2),
+       t_comm=st.floats(1e-4, 5e-2),
+       seed=st.integers(0, 1000))
+def test_property_aimd_legal_and_bounded(rows, t_comp, t_comm, seed):
+    ctl = run_controller(rows, t_comp, t_comm, steps=25, noise=0.01,
+                         seed=seed)
+    assert ctl.n in valid_nano_counts(rows)
+    for n, _ in ctl.history:
+        assert 1 <= n <= rows
+
+
+def test_convergence_flag():
+    ctl = AIMDController(rows=8, max_n=8)
+    for _ in range(10):
+        ctl.update(1.0)
+    assert ctl.converged()

@@ -1,0 +1,113 @@
+"""Sharding rules + HLO analyzer unit tests (single-device; the real
+multi-device path is exercised by test_dryrun_subprocess.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis as HA
+from repro.models import model as M
+from repro.sharding import rules, spec_for
+from repro.sharding.specs import logical_to_mesh, use_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    # 1x1 mesh over the single CPU device: exercises the rule plumbing
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_spec_for_drops_indivisible(mesh1):
+    # axis size 1 divides everything -> spec keeps axes
+    s = spec_for(mesh1, (15, 64), ("batch", "tp"))
+    assert s == P("data", "model")
+
+
+def test_logical_axis_mapping(mesh1):
+    with use_mesh(mesh1):
+        assert logical_to_mesh(mesh1, "batch") == ("data",)
+        assert logical_to_mesh(mesh1, "tp") == ("model",)
+        assert logical_to_mesh(mesh1, "seq") == ()   # seq off by default
+    with use_mesh(mesh1, seq_over_batch=True):
+        assert logical_to_mesh(mesh1, "seq") == ("data",)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-2.7b",
+                                  "qwen3-moe-30b-a3b",
+                                  "deepseek-v2-lite-16b",
+                                  "recurrentgemma-9b"])
+def test_param_shardings_cover_tree(mesh1, arch):
+    cfg = get_config(arch).reduced()
+    params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    sh = rules.param_shardings(mesh1, params)
+    n_params = len(jax.tree.leaves(params))
+    n_sh = len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
+    assert n_params == n_sh
+
+
+def test_moe_expert_dim_sharded(mesh1):
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    sh = rules.param_shardings(mesh1, params)
+    seg = sh["segments"][0]["0"]["ffn"]
+    # scanned stack: (L, E, d, f) -> P(None, 'model', ...) on expert dim
+    spec = seg["w_in"].spec
+    assert "model" in str(spec)
+
+
+def test_ssd_proj_tp_not_expert(mesh1):
+    cfg = get_config("mamba2-2.7b").reduced()
+    params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    sh = rules.param_shardings(mesh1, params)
+    spec = sh["segments"][0]["0"]["ssd"]["w_in"].spec
+    # output-dim sharding: last entry is 'model'
+    assert spec[-1] == "model" or spec == P()
+
+
+# ----------------------------------------------------- HLO analyzer
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_analyzer_counts_matmul_flops():
+    x = jnp.ones((64, 32), jnp.float32)
+    w = jnp.ones((32, 48), jnp.float32)
+    rep = HA.analyze(_hlo_of(lambda a, b: a @ b, x, w))
+    assert rep.flops == pytest.approx(2 * 64 * 32 * 48, rel=0.01)
+
+
+def test_analyzer_multiplies_scan_trip_count():
+    ws = jnp.ones((10, 32, 32), jnp.float32)
+    x = jnp.ones((8, 32), jnp.float32)
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), ()), x, ws)[0]
+
+    rep = HA.analyze(_hlo_of(f, x, ws))
+    one_layer = 2 * 8 * 32 * 32
+    assert rep.flops == pytest.approx(10 * one_layer, rel=0.05)
+
+
+def test_analyzer_bytes_positive_and_sane():
+    x = jnp.ones((256, 256), jnp.float32)
+    rep = HA.analyze(_hlo_of(lambda a: (a * 2 + 1).sum(), x))
+    assert rep.bytes_accessed >= x.size * 4          # at least one read
+    assert rep.bytes_accessed < x.size * 4 * 20      # and not absurd
+
+
+def test_collective_parse_on_synthetic_hlo():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %all-reduce.1 = f32[128,64]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  ROOT %copy.1 = f32[128,64]{1,0} copy(%all-reduce.1)
+}
+"""
+    rep = HA.analyze(hlo)
+    assert rep.collective_bytes.get("all-reduce") == 128 * 64 * 4

@@ -1,0 +1,99 @@
+"""Property-based tests on the cost model's invariants (hypothesis) —
+the scheduler's correctness rests on these monotonicities."""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.core import throughput as tp
+from repro.cluster.trace import load_csv
+
+CFG = get_config("recurrentgemma-9b")
+CFG_MOE = get_config("qwen3-moe-30b-a3b")
+
+
+def job(rank, batch, seq=512, gpus=2, jid="j"):
+    return LoRAJobSpec(jid, rank=rank, batch_size=batch, seq_len=seq,
+                       gpus=gpus)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rank=st.sampled_from([2, 4, 8, 16]),
+       batch=st.sampled_from([1, 2, 4, 8]),
+       chips=st.sampled_from([2, 4, 8, 16, 32]))
+def test_more_chips_never_slower_per_step(rank, batch, chips):
+    j = job(rank, batch)
+    t1 = tp.group_step_cost(CFG, [j], chips).total
+    t2 = tp.group_step_cost(CFG, [j], chips * 2).total
+    assert t2 <= t1 * 1.05          # small tolerance for overhead terms
+
+
+@settings(max_examples=40, deadline=None)
+@given(batch=st.sampled_from([1, 2, 4]),
+       k=st.integers(1, 6),
+       chips=st.sampled_from([4, 8, 16]))
+def test_group_step_monotone_in_members(batch, k, chips):
+    jobs = [job(4, batch, jid=f"j{i}") for i in range(k)]
+    t_k = tp.group_step_cost(CFG, jobs, chips).total
+    t_k1 = tp.group_step_cost(CFG, jobs + [job(4, batch, jid="x")],
+                              chips).total
+    assert t_k1 >= t_k * 0.999      # more work never makes the step faster
+
+
+@settings(max_examples=30, deadline=None)
+@given(rank=st.sampled_from([2, 8, 16]), batch=st.sampled_from([1, 8]))
+def test_spans_nodes_never_cheaper(rank, batch):
+    jobs = [job(rank, batch, jid="a"), job(rank, batch, jid="b")]
+    local = tp.group_step_cost(CFG, jobs, 8, spans_nodes=False)
+    cross = tp.group_step_cost(CFG, jobs, 8, spans_nodes=True)
+    assert cross.t_comm >= local.t_comm
+    assert cross.total >= local.total * 0.999
+
+
+@settings(max_examples=30, deadline=None)
+@given(rank=st.sampled_from([2, 8, 16]), batch=st.sampled_from([1, 4, 8]))
+def test_unfused_never_cheaper(rank, batch):
+    jobs = [job(rank, batch, jid=f"j{i}") for i in range(3)]
+    fused = tp.group_step_cost(CFG, jobs, 8, kernel_fused=True)
+    unfused = tp.group_step_cost(CFG, jobs, 8, kernel_fused=False)
+    assert unfused.total >= fused.total
+
+
+@settings(max_examples=20, deadline=None)
+@given(batch=st.sampled_from([1, 2, 8]))
+def test_residual_in_unit_interval(batch):
+    r = tp.residual_capacity(CFG, job(4, batch))
+    assert 0.0 <= r < 1.0
+    # bigger batch on same chips -> less residual
+    r_big = tp.residual_capacity(CFG, job(4, 8, gpus=2))
+    r_small = tp.residual_capacity(CFG, job(4, 1, gpus=2))
+    assert r_big <= r_small + 1e-9
+
+
+def test_param_counts_moe_active_vs_total():
+    total, active = tp.param_counts(CFG_MOE)
+    assert active < total * 0.35     # 8-of-128 experts active
+    assert total > 25e9              # ~30B params
+    assert active > 2e9              # ~3B active
+
+
+def test_min_chips_scales_with_model():
+    small = tp.min_chips(get_config("tinyllama-1.1b"))
+    big = tp.min_chips(get_config("qwen1.5-110b"))
+    assert small <= 2
+    assert big >= 16                 # 220GB bf16 / 16GB HBM
+
+
+def test_acme_csv_loader(tmp_path):
+    p = tmp_path / "trace_seren.csv"
+    p.write_text(
+        "job_id,submit_time,duration,gpu_num\n"
+        "a,0,3600,4\nb,120,7200,16\nc,60,100,0.5\n")
+    jobs = load_csv(str(p))
+    assert len(jobs) == 3
+    assert [j.arrival_time for j in jobs] == [0.0, 60.0, 120.0]
+    assert all(1 <= j.gpus <= 8 for j in jobs)
+    assert all(j.rank in (2, 4, 8, 16) for j in jobs)
+    assert jobs[0].steps_budget >= 50
