@@ -61,11 +61,22 @@ def slice_job(adapters: dict, idx: int, rank: int) -> dict:
 
 
 def insert_job(adapters: dict, idx: int, rank: int, flat_slices: dict) -> dict:
-    """Write a job's saved slices back into a fused stack (re-fuse)."""
+    """Write a job's saved slices back into a fused stack (re-fuse).
+
+    The destination stack may have a *different* r_pad than the source:
+    slices are un-padded (rank columns/rows only), so re-padding is just
+    writing into the first ``rank`` lanes of the destination — the lanes
+    beyond are zero by construction and must stay zero (the kernels'
+    rank mask guarantees they receive zero gradient).
+    """
     flat = _flatten(adapters)
     out = {}
     for k, leaf in flat.items():
         s = jnp.asarray(flat_slices[k]).astype(leaf.dtype)
+        r_pad = leaf.shape[-1] if (k.endswith("/A") or k == "A") \
+            else leaf.shape[-2]
+        assert rank <= r_pad, \
+            f"cannot insert rank-{rank} job into r_pad={r_pad} stack ({k})"
         if k.endswith("/A") or k == "A":
             out[k] = leaf.at[..., idx, :, :rank].set(s)
         else:
@@ -111,8 +122,13 @@ def restore_job(path: str, idx: int, adapters: dict,
         mu = {k[3:]: v for k, v in z.items() if k.startswith("mu/")}
         nu = {k[3:]: v for k, v in z.items() if k.startswith("nu/")}
         if mu:
+            st = opt_state.step
+            if getattr(st, "ndim", 0) >= 1:
+                # per-job elastic mode: the restored job resumes at its own
+                # Adam step (bias correction continuity across migrations).
+                st = st.at[idx].set(int(z["__step__"]))
             opt_state = AdamWState(
-                opt_state.step,
+                st,
                 insert_job(opt_state.mu, idx, rank, mu),
                 insert_job(opt_state.nu, idx, rank, nu))
     return adapters, opt_state, int(z["__step__"])

@@ -1,3 +1,3 @@
-from repro.cluster import baselines, metrics, simulator, trace
+from repro.cluster import baselines, execution, metrics, simulator, trace
 
-__all__ = ["baselines", "metrics", "simulator", "trace"]
+__all__ = ["baselines", "execution", "metrics", "simulator", "trace"]

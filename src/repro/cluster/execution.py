@@ -1,0 +1,112 @@
+"""Execution-backed simulation: real fused train steps inside the
+discrete-event simulator (paper §4.1 methodology, closed-loop variant).
+
+The analytic simulator prices every group step with the throughput
+oracle (core/throughput).  ``ExecutionBackend`` closes the loop for
+small configs (smollm_360m, tinyllama_1_1b): at each scheduling horizon
+it mirrors the simulator's grouping decisions onto a live
+``ElasticEngine`` — adapters and optimizer state migrating losslessly as
+groups change — runs a few *real* fused train steps per group, and
+feeds the measured step time back as the simulated step time.  Every
+(predicted, measured) pair is recorded so the scheduler's oracle can be
+validated against execution (SimResult.step_records).
+
+The engine is a measurement instrument: it executes
+``steps_per_measure`` real steps per (group, horizon), not the full
+simulated step count — exactly the paper's two-level micro-benchmark /
+emulator split, but with the micro-benchmarks taken online against the
+*current* group compositions.
+
+Layer map: DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.elastic.engine import ElasticEngine
+
+# models small enough to step for real on a host CPU/single chip
+EXECUTABLE_MODELS = ("smollm-360m", "tinyllama-1.1b")
+
+
+@dataclass
+class StepRecord:
+    """One measured-vs-predicted observation at a scheduling horizon."""
+    t: float                       # simulated time of the horizon
+    base_model: str
+    job_ids: Tuple[str, ...]
+    chips: int
+    predicted: float               # analytic oracle step time (s)
+    measured: float                # wall-clock fused step time (s)
+
+    @property
+    def error(self) -> float:
+        """Relative prediction error of the throughput oracle."""
+        return abs(self.predicted - self.measured) / max(self.measured,
+                                                         1e-12)
+
+
+class ExecutionBackend:
+    """Mirrors simulator grouping onto live ElasticEngines and measures."""
+
+    def __init__(self, *, steps_per_measure: int = 2,
+                 models: Sequence[str] = EXECUTABLE_MODELS,
+                 impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
+                 remat: bool = False, seed: int = 0):
+        assert steps_per_measure >= 2, \
+            "need >=2 steps so min() discards the jit-compile outlier"
+        self.steps_per_measure = steps_per_measure
+        self.models = tuple(models)
+        self._engine_kwargs = dict(impl=impl, block_t=block_t, lr=lr,
+                                   remat=remat, seed=seed)
+        self._engines: Dict[str, ElasticEngine] = {}
+        self.records: List[StepRecord] = []
+
+    @property
+    def regroup_events(self) -> int:
+        """Live-state migrations executed across all engines."""
+        return sum(e.regroup_events for e in self._engines.values())
+
+    def engine(self, base_model: str) -> Optional[ElasticEngine]:
+        return self._engines.get(base_model)
+
+    def observe(self, cfg: ModelConfig, group, predicted: float,
+                now: float) -> Optional[float]:
+        """Execute *group* for a few real steps; return measured step time
+        (None if the model is not in the executable allowlist)."""
+        base = group.jobs[0].spec.base_model
+        if self.models and base not in self.models:
+            return None
+        eng = self._engines.get(base)
+        if eng is None:
+            eng = ElasticEngine(cfg, **self._engine_kwargs)
+            self._engines[base] = eng
+        known = set(eng.job_ids) | set(eng.finished)
+        for spec in group.specs:
+            if spec.job_id not in known:
+                eng.add_job(spec)
+        rt = eng.ensure_group(group.job_ids)
+        rt.run(self.steps_per_measure)
+        measured = rt.report.measured_step_time(self.steps_per_measure)
+        self.records.append(StepRecord(
+            t=now, base_model=base, job_ids=tuple(group.job_ids),
+            chips=group.chips, predicted=predicted, measured=measured))
+        return measured
+
+    # ------------------------------------------------------------ report
+    def summary(self) -> Dict[str, float]:
+        if not self.records:
+            return {"observations": 0, "regroup_events": 0}
+        errs = [r.error for r in self.records]
+        return {
+            "observations": len(self.records),
+            "regroup_events": self.regroup_events,
+            "mean_predicted_s": sum(r.predicted for r in self.records)
+            / len(self.records),
+            "mean_measured_s": sum(r.measured for r in self.records)
+            / len(self.records),
+            "mean_rel_error": sum(errs) / len(errs),
+            "max_rel_error": max(errs),
+        }

@@ -65,6 +65,10 @@ class SimResult:
     useful_chip_seconds: float
     total_chips: int
     throughput_series: List[Tuple[float, float]] = field(default_factory=list)
+    # execution-backed mode: measured-vs-predicted step times + number of
+    # live state migrations executed (cluster/execution.StepRecord)
+    step_records: List = field(default_factory=list)
+    regroup_events: int = 0
 
     @property
     def avg_throughput(self) -> float:
@@ -128,10 +132,22 @@ def _node_assigner(jobs: Sequence[JobRuntimeState],
 
 
 class ClusterSimulator:
+    """Discrete-event simulator; optionally execution-backed.
+
+    With ``execution`` set (cluster/execution.ExecutionBackend), small
+    configs run REAL fused train steps at each horizon: the backend
+    mirrors grouping decisions onto a live ElasticEngine (adapter +
+    optimizer state migrating losslessly across regroups) and the
+    measured step time replaces the analytic one, validating the
+    scheduler's throughput oracle against execution.
+    """
+
     def __init__(self, cluster: ClusterConfig, policy: GroupPolicy,
-                 cfg_of: Optional[Callable[[str], ModelConfig]] = None):
+                 cfg_of: Optional[Callable[[str], ModelConfig]] = None,
+                 execution=None):
         self.cc = cluster
         self.policy = policy
+        self.execution = execution
         self._cfg_cache: Dict[str, ModelConfig] = {}
         self._cfg_of = cfg_of or self._default_cfg_of
 
@@ -166,6 +182,10 @@ class ClusterSimulator:
             s.standalone_step_time = tp.standalone_step_time(
                 self._cfg_of(s.spec.base_model), s.spec, hw=self.cc.hw,
                 kernel_fused=self.cc.kernel_fused)
+
+        # the backend accumulates across runs; report only this run's slice
+        rec0 = len(self.execution.records) if self.execution else 0
+        ev0 = self.execution.regroup_events if self.execution else 0
 
         pending = sorted(trace, key=lambda j: j.arrival_time)
         active: List[JobRuntimeState] = []
@@ -213,6 +233,12 @@ class ClusterSimulator:
 
             for g in running:
                 step_t = self._group_step_time(g)
+                if self.execution is not None:
+                    measured = self.execution.observe(
+                        self._cfg_of(g.jobs[0].spec.base_model), g,
+                        step_t, t)
+                    if measured:
+                        step_t = measured
                 comp_t = self._group_compute_time(g)
                 steps = int(dt / step_t)
                 grouped = len(g.jobs) > 1
@@ -240,4 +266,8 @@ class ClusterSimulator:
         return SimResult(logs=logs, makespan=t, samples_done=samples,
                          busy_chip_seconds=busy, useful_chip_seconds=useful,
                          total_chips=self.cc.total_chips,
-                         throughput_series=series)
+                         throughput_series=series,
+                         step_records=list(self.execution.records[rec0:])
+                         if self.execution is not None else [],
+                         regroup_events=self.execution.regroup_events - ev0
+                         if self.execution is not None else 0)

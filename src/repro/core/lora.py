@@ -102,14 +102,25 @@ def group_ranks(jobs: Sequence[LoRAJobSpec]) -> Tuple[jax.Array, jax.Array, int]
     return ranks, scal, pad_rank(max(j.rank for j in jobs))
 
 
-def merge_adapter_pair(pairs: Sequence[Dict[str, jax.Array]]) -> Dict[str, jax.Array]:
-    """Stack per-job (1, d, r_i) pairs into one padded (K, d, r_max) pair —
-    what Model Fuser does when forming a group's SSM."""
-    r_pad = pad_rank(max(p["A"].shape[-1] for p in pairs))
+def merge_adapter_pair(pairs: Sequence[Dict[str, jax.Array]],
+                       r_pad: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Stack per-job (d, r_i) pairs into one padded (K, d, r_max) pair —
+    what Model Fuser does when forming a group's SSM.
+
+    Sources may carry heterogeneous padding (each pair's trailing rank dim
+    is whatever r_pad its previous stack used); the destination re-pads
+    every pair to a common ``r_pad`` (default: ``pad_rank`` of the widest
+    source).  Shrinking is legal as long as the dropped lanes are zero —
+    i.e. the pair was produced by ``extract_adapter`` (un-padded) or its
+    padding lanes were never touched (the kernel rank-mask invariant)."""
+    r_pad = r_pad or pad_rank(max(p["A"].shape[-1] for p in pairs))
     As, Bs = [], []
     for p in pairs:
         a, b = p["A"], p["B"]
         pad_a = r_pad - a.shape[-1]
+        if pad_a < 0:    # source wider than destination: drop zero lanes
+            a, b = a[:, :r_pad], b[:r_pad, :]
+            pad_a = 0
         As.append(jnp.pad(a, ((0, 0), (0, pad_a))))
         Bs.append(jnp.pad(b, ((0, pad_a), (0, 0))))
     return {"A": jnp.stack(As), "B": jnp.stack(Bs)}

@@ -39,8 +39,11 @@ class JobStream:
     seed: int = 0
 
     def __post_init__(self):
+        # crc32, not hash(): salted str hashing would change the stream
+        # across interpreter runs with identical seeds
+        import zlib
         self._rng = np.random.default_rng(
-            hash((self.spec.job_id, self.seed)) % 2**32)
+            zlib.crc32(f"{self.spec.job_id}/{self.seed}".encode()))
 
     def next_batch(self) -> Dict[str, np.ndarray]:
         """(batch_size, seq_len) tokens/labels + loss_mask."""
@@ -65,13 +68,21 @@ class FusedBatcher:
     """
 
     def __init__(self, jobs: Sequence[LoRAJobSpec], vocab_size: int,
-                 block_t: int = 128, seed: int = 0):
+                 block_t: int = 128, seed: int = 0,
+                 streams: Optional[Sequence[JobStream]] = None):
         assert len({j.seq_len for j in jobs}) == 1, \
             "group members must share seq_len (scheduler invariant)"
         self.jobs = list(jobs)
         self.seq_len = jobs[0].seq_len
         self.block_t = block_t
-        self.streams = [JobStream(j, vocab_size, seed) for j in jobs]
+        if streams is None:
+            streams = [JobStream(j, vocab_size, seed) for j in jobs]
+        else:
+            # elastic migration: a job's live stream (rng position included)
+            # travels with it between groups, so the data it sees is
+            # invariant to regrouping (the lossless contract's data half).
+            assert len(streams) == len(jobs)
+        self.streams = list(streams)
 
     def _rows_for(self, job: LoRAJobSpec) -> int:
         tile = self.block_t

@@ -1,0 +1,10 @@
+"""Elastic group runtime: live re-fusion of SharedSuperModels with
+lossless adapter & optimizer-state migration (paper §3.2, §3.4;
+DESIGN.md §6)."""
+from repro.elastic.engine import ElasticEngine
+from repro.elastic.migrate import (JobTrainState, diff_grouping,
+                                   fuse_states, unfuse_state)
+from repro.elastic.runtime import GroupRuntime, TrainReport
+
+__all__ = ["ElasticEngine", "GroupRuntime", "TrainReport", "JobTrainState",
+           "fuse_states", "unfuse_state", "diff_grouping"]

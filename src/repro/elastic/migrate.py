@@ -1,0 +1,130 @@
+"""Lossless state migration for elastic regrouping (paper §3.2/§3.4).
+
+A job's *complete* training identity is captured by ``JobTrainState``:
+
+  * its un-padded adapter slices (A cols / B rows up to rank r_i),
+  * its AdamW first/second moments over exactly those slices,
+  * its per-job Adam step count (bias-correction position),
+  * its live data stream (rng position — the data half of losslessness),
+  * its lifetime step counter.
+
+``fuse_states`` re-fuses any set of such states into one SSM-shaped
+adapter stack + optimizer state, re-padding each job from whatever r_pad
+its previous stack used to the destination stack's r_pad.  Because the
+fused-kernel rank mask guarantees zero gradient (hence zero Adam moments)
+in padding lanes, pack → train → unpack → re-pack is *exact*: no
+information lives outside the un-padded slices.  This is the invariant
+tests/test_lossless.py::test_elastic_migration_is_lossless checks.
+
+Layer map: DESIGN.md §6 (elastic runtime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import insert_job, slice_job
+from repro.configs.base import ModelConfig
+from repro.core.jobs import LoRAJobSpec
+from repro.data.pipeline import JobStream
+from repro.models import model as M
+from repro.optim.adamw import AdamWState
+
+
+@dataclass
+class JobTrainState:
+    """One job's portable training state (adapter + optimizer + data)."""
+    spec: LoRAJobSpec
+    adapter: Dict[str, jax.Array]     # flat tree-path -> un-padded slice
+    mu: Dict[str, jax.Array]          # AdamW first moments, same keying
+    nu: Dict[str, jax.Array]          # AdamW second moments
+    opt_step: int = 0                 # per-job Adam step (bias correction)
+    steps_done: int = 0               # lifetime train steps (accounting)
+    stream: Optional[JobStream] = None
+
+    @classmethod
+    def fresh(cls, spec: LoRAJobSpec, cfg: ModelConfig, key, *,
+              r_pad: Optional[int] = None, seed: int = 0) -> "JobTrainState":
+        """Standard LoRA init for a newly submitted job, packed portably.
+
+        ``r_pad`` must match the padding rule of the stack the job would
+        have been initialized into (init scale depends on it); the
+        un-padded slices carried here are exactly what a solo init with
+        the same key would hold.
+        """
+        from repro.core.lora import pad_rank
+        r_pad = r_pad or pad_rank(spec.rank)
+        ranks = jnp.asarray([spec.rank], jnp.int32)
+        adapters = M.init_adapters(key, cfg, ranks, r_pad=r_pad)
+        flat = slice_job(adapters, 0, spec.rank)
+        return cls(spec=spec,
+                   adapter=flat,
+                   mu={k: jnp.zeros_like(v) for k, v in flat.items()},
+                   nu={k: jnp.zeros_like(v) for k, v in flat.items()},
+                   opt_step=0, steps_done=0,
+                   stream=JobStream(spec, cfg.vocab_size, seed))
+
+
+def zeros_like_fused(cfg: ModelConfig, ranks: Sequence[int],
+                     r_pad: int) -> dict:
+    """All-zero adapter stack with the destination group's shapes."""
+    ranks = jnp.asarray(list(ranks), jnp.int32)
+    shapes = jax.eval_shape(
+        lambda: M.init_adapters(jax.random.PRNGKey(0), cfg, ranks,
+                                r_pad=r_pad))
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def fuse_states(cfg: ModelConfig, states: Sequence[JobTrainState],
+                r_pad: int) -> Tuple[dict, AdamWState]:
+    """Pack K job states into one fused adapter stack + AdamW state.
+
+    Handles heterogeneous source r_pad transparently (slices are
+    un-padded; destination lanes beyond each rank stay zero).  The Adam
+    step is the per-job vector ``[s.opt_step for s in states]`` so bias
+    correction stays per-job exact across migrations.
+    """
+    adapters = zeros_like_fused(cfg, [s.spec.rank for s in states], r_pad)
+    mu = adapters
+    nu = adapters
+    for idx, s in enumerate(states):
+        adapters = insert_job(adapters, idx, s.spec.rank, s.adapter)
+        mu = insert_job(mu, idx, s.spec.rank, s.mu)
+        nu = insert_job(nu, idx, s.spec.rank, s.nu)
+    step = jnp.asarray([s.opt_step for s in states], jnp.int32)
+    return adapters, AdamWState(step, mu, nu)
+
+
+def unfuse_state(adapters: dict, opt_state: AdamWState, idx: int,
+                 spec: LoRAJobSpec, *, steps_done: int = 0,
+                 stream: Optional[JobStream] = None) -> JobTrainState:
+    """Extract job *idx* from a fused stack into portable form (the
+    inverse of fuse_states for one member)."""
+    opt_step = int(jax.device_get(opt_state.step)[idx]) \
+        if getattr(opt_state.step, "ndim", 0) >= 1 \
+        else int(jax.device_get(opt_state.step))
+    return JobTrainState(
+        spec=spec,
+        adapter=slice_job(adapters, idx, spec.rank),
+        mu=slice_job(opt_state.mu, idx, spec.rank),
+        nu=slice_job(opt_state.nu, idx, spec.rank),
+        opt_step=opt_step,
+        steps_done=steps_done,
+        stream=stream)
+
+
+def diff_grouping(old: Sequence[Sequence[str]],
+                  new: Sequence[Sequence[str]]) -> Dict[str, List[Tuple[str, ...]]]:
+    """Classify a regroup decision: which groups survive verbatim (no
+    migration, runtime reused) vs which must be (re)built."""
+    old_sets = {frozenset(g) for g in old}
+    keep, build = [], []
+    for g in new:
+        (keep if frozenset(g) in old_sets else build).append(tuple(g))
+    dissolved = [tuple(g) for g in old
+                 if frozenset(g) not in {frozenset(n) for n in new}]
+    return {"keep": keep, "build": build, "dissolve": dissolved}

@@ -1,0 +1,194 @@
+"""GroupRuntime — one live fused group (Fig. 3 lifecycle, phases 2-3).
+
+Refactors the old one-shot ``train.train_loop.train_group`` body into an
+object that *owns* one SSM's training state — frozen backbone reference,
+fused adapter stack, per-job AdamW state, fused batcher, AIMD nano-batch
+controller, jitted step cache — and exposes ``run(steps)`` so an elastic
+engine can interleave training with regrouping.  State enters and leaves
+through ``JobTrainState`` (migrate.py), which is what makes join/leave/
+migrate lossless.
+
+Layer map: DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.jobs import LoRAJobSpec
+from repro.core.nanobatch import AIMDController
+from repro.core.ssm import SharedSuperModel
+from repro.data.pipeline import FusedBatcher, JobStream
+from repro.elastic.migrate import JobTrainState, fuse_states, unfuse_state
+from repro.optim import adamw
+from repro.optim.schedule import constant
+
+
+@dataclass
+class TrainReport:
+    steps: int = 0
+    samples_per_step: int = 0             # true samples (tile padding excl.)
+    losses: List[float] = field(default_factory=list)
+    per_job_losses: List[np.ndarray] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+    nano_history: List[int] = field(default_factory=list)
+
+    @property
+    def steps_per_sec(self) -> float:
+        return 0.0 if not self.step_times else 1.0 / float(
+            np.mean(self.step_times[1:] or self.step_times))
+
+    @property
+    def samples_per_sec(self) -> float:
+        # each step consumes one fused batch of samples_per_step sequences
+        return self.steps_per_sec * max(self.samples_per_step, 1)
+
+    @property
+    def last_step_time(self) -> float:
+        return self.step_times[-1] if self.step_times else 0.0
+
+    def measured_step_time(self, window: int = 8) -> float:
+        """Robust recent step time: min over the last *window* steps
+        (min discards jit-compile outliers after a (re)build)."""
+        if not self.step_times:
+            return 0.0
+        return float(min(self.step_times[-window:]))
+
+
+class GroupRuntime:
+    """Owns one fused group's live training state; ``run`` is re-entrant."""
+
+    def __init__(self, cfg: ModelConfig, params, specs: Sequence[LoRAJobSpec],
+                 adapters, opt_state, *,
+                 streams: Optional[Sequence[JobStream]] = None,
+                 steps_done: Optional[Dict[str, int]] = None,
+                 lr: float = 1e-3, lr_fn: Optional[Callable] = None,
+                 impl: str = "ref", block_t: int = 8,
+                 nano_batches: int = 1, adaptive_nano: bool = False,
+                 remat: bool = True, weight_decay: float = 0.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.specs = list(specs)
+        self.ssm = SharedSuperModel(cfg, self.specs, impl=impl,
+                                    block_t=block_t)
+        self.batcher = FusedBatcher(self.specs, cfg.vocab_size,
+                                    block_t=block_t, seed=seed,
+                                    streams=streams)
+        self.adapters = adapters
+        self.opt_state = opt_state
+        self.steps_done: Dict[str, int] = dict(
+            steps_done or {s.job_id: 0 for s in self.specs})
+        self.lr_fn = lr_fn or constant(lr)
+        self.remat = remat
+        self.weight_decay = weight_decay
+        rows = self.batcher.total_rows()
+        self.aimd = AIMDController(rows=rows, n=nano_batches,
+                                   max_n=min(rows, 16)) \
+            if adaptive_nano else None
+        self.n = nano_batches
+        self._step_cache: Dict[int, Callable] = {}
+        self.report = TrainReport(
+            samples_per_step=sum(s.batch_size for s in self.specs))
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def from_states(cls, cfg: ModelConfig, params,
+                    states: Sequence[JobTrainState],
+                    **kw) -> "GroupRuntime":
+        """Fuse K portable job states into a live group (join/migrate)."""
+        specs = [s.spec for s in states]
+        # r_pad follows the SSM's padding rule for this group composition
+        probe = SharedSuperModel(cfg, specs, impl=kw.get("impl", "ref"),
+                                 block_t=kw.get("block_t", 8))
+        adapters, opt_state = fuse_states(cfg, states, probe.r_pad)
+        # carry each member's live stream; only stream-less states (e.g.
+        # restored checkpoints) start a fresh one
+        streams = [s.stream if s.stream is not None
+                   else JobStream(s.spec, cfg.vocab_size, kw.get("seed", 0))
+                   for s in states]
+        return cls(cfg, params, specs, adapters, opt_state,
+                   streams=streams,
+                   steps_done={s.spec.job_id: s.steps_done for s in states},
+                   **kw)
+
+    @classmethod
+    def from_specs(cls, cfg: ModelConfig, specs: Sequence[LoRAJobSpec],
+                   key, *, params=None, adapters=None,
+                   **kw) -> "GroupRuntime":
+        """Fresh fused init (the old train_group entry path).  Pre-built
+        params/adapters (e.g. restored state) are used when given."""
+        if params is None or adapters is None:
+            probe = SharedSuperModel(cfg, list(specs),
+                                     impl=kw.get("impl", "ref"),
+                                     block_t=kw.get("block_t", 8))
+            p, a = probe.init(key)
+            params = params if params is not None else p
+            adapters = adapters if adapters is not None else a
+        opt_state = adamw.init(adapters, per_job=len(specs))
+        return cls(cfg, params, specs, adapters, opt_state, **kw)
+
+    # ----------------------------------------------------------- training
+    @property
+    def job_ids(self) -> List[str]:
+        return [s.job_id for s in self.specs]
+
+    def index_of(self, job_id: str) -> int:
+        return self.job_ids.index(job_id)
+
+    def _get_step(self, n: int) -> Callable:
+        if n not in self._step_cache:
+            fn = self.ssm.make_train_step(lr_fn=self.lr_fn, nano_batches=n,
+                                          remat=self.remat,
+                                          weight_decay=self.weight_decay)
+            self._step_cache[n] = jax.jit(fn)
+        return self._step_cache[n]
+
+    def run(self, steps: int,
+            log: Optional[Callable[[str], None]] = None) -> TrainReport:
+        """Advance the whole group by *steps* fused iterations."""
+        log = log or (lambda s: None)
+        for i in range(steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.batcher.next_batch().items()}
+            t0 = time.perf_counter()
+            self.adapters, self.opt_state, metrics = self._get_step(self.n)(
+                self.params, self.adapters, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            rep = self.report
+            rep.steps += 1
+            rep.losses.append(loss)
+            rep.per_job_losses.append(np.asarray(metrics["per_job_loss"]))
+            rep.step_times.append(dt)
+            rep.nano_history.append(self.n)
+            for jid in self.job_ids:
+                self.steps_done[jid] += 1
+            if self.aimd is not None and rep.steps >= 2:
+                self.n = self.aimd.update(dt)
+            log(f"step {rep.steps - 1:4d} loss {loss:.4f} "
+                f"nano {self.n} dt {dt*1e3:.1f}ms")
+        return self.report
+
+    # ---------------------------------------------------------- migration
+    def export(self, job_id: str) -> JobTrainState:
+        """Non-destructive snapshot of one member in portable form.
+
+        The data stream is deep-copied so the snapshot's rng position is
+        frozen at the snapshotted adapter/opt state — the live runtime
+        advancing afterwards cannot corrupt it (and vice versa)."""
+        idx = self.index_of(job_id)
+        return unfuse_state(self.adapters, self.opt_state, idx,
+                            self.specs[idx],
+                            steps_done=self.steps_done[job_id],
+                            stream=copy.deepcopy(self.batcher.streams[idx]))
+
+    def export_all(self) -> List[JobTrainState]:
+        return [self.export(jid) for jid in self.job_ids]

@@ -28,6 +28,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _fit_block(n: int, cap: int) -> int:
+    """Largest divisor of *n* that is <= cap (grid tiles must divide the
+    dim exactly; min(cap, n) alone crashes for non-power-of-two dims,
+    e.g. d_out=640 with the default 512)."""
+    b = max(1, min(cap, n))
+    while n % b:
+        b -= 1
+    return b
+
+
 # ----------------------------------------------------------------- fwd
 def _fused_lora_kernel(tile_map_ref, ranks_ref, x_ref, a_ref, b_ref,
                        o_ref, xa_scratch):
@@ -62,8 +72,7 @@ def fused_lora_pallas(x: jax.Array, A: jax.Array, B: jax.Array,
     K, _, r_pad = A.shape
     d_out = B.shape[-1]
     assert T % block_t == 0, (T, block_t)
-    block_o = min(block_o, d_out)
-    assert d_out % block_o == 0, (d_out, block_o)
+    block_o = _fit_block(d_out, block_o)
     grid = (T // block_t, d_out // block_o)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -100,8 +109,7 @@ def grouped_matmul_pallas(x: jax.Array, W: jax.Array, tile_map: jax.Array,
     T, d_in = x.shape
     K, _, d_out = W.shape
     assert T % block_t == 0, (T, block_t)
-    block_o = min(block_o, d_out)
-    assert d_out % block_o == 0, (d_out, block_o)
+    block_o = _fit_block(d_out, block_o)
     grid = (T // block_t, d_out // block_o)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

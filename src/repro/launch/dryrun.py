@@ -138,6 +138,8 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # older JAX: per-device list
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         hrep = HA.analyze(hlo)           # scan-aware per-device profile
         chips = int(np.prod(list(mesh.shape.values())))

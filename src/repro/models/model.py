@@ -22,6 +22,7 @@ Modality frontends (audio conv codec, ViT) are stubs per the assignment:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -185,8 +186,10 @@ def _block_adapter_init(key, cfg: ModelConfig, spec: LayerSpec,
     out = {}
     for t in spec.lora_targets:
         d_in, d_out = dims[t]
-        out[t] = init_adapter_pair(jax.random.fold_in(key, hash(t) % 2**31),
-                                   K, d_in, d_out, r_pad, ranks)
+        # crc32, not hash(): salted str hashing would make adapter init
+        # irreproducible across interpreter runs with the same seed
+        kt = jax.random.fold_in(key, zlib.crc32(t.encode()) % 2**31)
+        out[t] = init_adapter_pair(kt, K, d_in, d_out, r_pad, ranks)
     return out
 
 

@@ -2,26 +2,43 @@
 
 Plain functional implementation over pytrees; moments in f32 regardless of
 param dtype (master-weight discipline from DESIGN.md §5).
+
+Elastic extension (DESIGN.md §6): ``step`` may be a per-job vector of
+shape (K,) instead of a scalar.  Bias correction (and a per-job lr, if
+the schedule produces one) then broadcasts over the job axis, which for
+adapter-stacked leaves ``(..., K, d, r_pad)`` / ``(..., K, r_pad, d)`` is
+always axis -3.  This is what makes migration lossless: a job that joins
+a group at Adam step k keeps the bias-correction (and schedule position)
+it would have had training solo.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 class AdamWState(NamedTuple):
-    step: jax.Array
+    step: jax.Array   # scalar int32, or (K,) int32 per-job (elastic mode)
     mu: Any
     nu: Any
 
 
-def init(params) -> AdamWState:
+def init(params, per_job: Optional[int] = None) -> AdamWState:
+    """per_job=K builds a (K,) step vector for elastic per-job accounting;
+    requires every leaf to carry the job axis at -3 (adapter stacks)."""
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
-    return AdamWState(jnp.zeros((), jnp.int32),
+    step = (jnp.zeros((), jnp.int32) if per_job is None
+            else jnp.zeros((per_job,), jnp.int32))
+    return AdamWState(step,
                       jax.tree.map(zeros, params),
                       jax.tree.map(zeros, params))
+
+
+def _broadcast_job(x: jax.Array) -> jax.Array:
+    """(K,) -> (K, 1, 1): aligns with the job axis (-3) of adapter leaves."""
+    return x.reshape(x.shape + (1, 1))
 
 
 def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
@@ -29,15 +46,23 @@ def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
            weight_decay: float = 0.0) -> Tuple[Any, AdamWState]:
     step = state.step + 1
     tf = jnp.float32
+    s = step.astype(tf)
+    lr_t = jnp.asarray(lr, tf)
+    if s.ndim >= 1:                       # per-job elastic mode
+        s = _broadcast_job(s)
+        if lr_t.ndim >= 1:
+            lr_t = _broadcast_job(lr_t)
+    bc1 = 1 - b1 ** s
+    bc2 = 1 - b2 ** s
 
     def upd(g, m, v, p):
         g = g.astype(tf)
         m = b1 * m + (1 - b1) * g
         v = b2 * v + (1 - b2) * g * g
-        mhat = m / (1 - b1 ** step.astype(tf))
-        vhat = v / (1 - b2 ** step.astype(tf))
+        mhat = m / bc1
+        vhat = v / bc2
         delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(tf)
-        return (p.astype(tf) - lr * delta).astype(p.dtype), m, v
+        return (p.astype(tf) - lr_t * delta).astype(p.dtype), m, v
 
     flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
     new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))

@@ -1,42 +1,25 @@
 """End-to-end multi-LoRA training loop (Fig. 3 lifecycle, phase 3).
 
 Drives one fused group: data -> SSM train step -> AIMD nano-batch
-adaptation -> per-job checkpoints.  The step function is (re)jitted when
-the AIMD controller changes N — an O(log N)-bounded number of recompiles,
-each of which still makes training progress (paper §3.3).
+adaptation -> per-job checkpoints.  Since the elastic refactor
+(DESIGN.md §6) the loop body lives in ``elastic.runtime.GroupRuntime``;
+``train_group`` remains the one-shot convenience entry point (build a
+group, run N steps, hand back the state).  The step function is
+(re)jitted when the AIMD controller changes N — an O(log N)-bounded
+number of recompiles, each of which still makes training progress
+(paper §3.3).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
-import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.jobs import LoRAJobSpec
-from repro.core.nanobatch import AIMDController
-from repro.core.ssm import SharedSuperModel
-from repro.data.pipeline import FusedBatcher
-from repro.optim import adamw
-from repro.optim.schedule import constant
+from repro.elastic.runtime import GroupRuntime, TrainReport
 
-
-@dataclass
-class TrainReport:
-    steps: int = 0
-    losses: List[float] = field(default_factory=list)
-    per_job_losses: List[np.ndarray] = field(default_factory=list)
-    step_times: List[float] = field(default_factory=list)
-    nano_history: List[int] = field(default_factory=list)
-
-    @property
-    def samples_per_sec(self) -> float:
-        return 0.0 if not self.step_times else 1.0 / float(
-            np.mean(self.step_times[1:] or self.step_times))
+__all__ = ["train_group", "TrainReport", "GroupRuntime"]
 
 
 def train_group(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], *,
@@ -47,45 +30,12 @@ def train_group(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], *,
                 params=None, adapters=None,
                 log: Optional[Callable[[str], None]] = None) -> Dict:
     """Train a fused group for *steps* iterations on the local device."""
-    log = log or (lambda s: None)
-    ssm = SharedSuperModel(cfg, list(jobs), impl=impl, block_t=block_t)
-    batcher = FusedBatcher(list(jobs), cfg.vocab_size, block_t=block_t,
-                           seed=seed)
-    key = jax.random.PRNGKey(seed)
-    if params is None or adapters is None:
-        params, adapters = ssm.init(key)
-    opt_state = adamw.init(adapters)
-
-    rows = batcher.total_rows()
-    aimd = AIMDController(rows=rows, n=nano_batches,
-                          max_n=min(rows, 16)) if adaptive_nano else None
-    n = nano_batches
-
-    step_cache: Dict[int, Callable] = {}
-
-    def get_step(n: int) -> Callable:
-        if n not in step_cache:
-            fn = ssm.make_train_step(lr_fn=constant(lr), nano_batches=n,
-                                     remat=remat)
-            step_cache[n] = jax.jit(fn)
-        return step_cache[n]
-
-    report = TrainReport()
-    for i in range(steps):
-        batch = {k: jnp.asarray(v) for k, v in batcher.next_batch().items()}
-        t0 = time.perf_counter()
-        adapters, opt_state, metrics = get_step(n)(params, adapters,
-                                                   opt_state, batch)
-        loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
-        report.steps += 1
-        report.losses.append(loss)
-        report.per_job_losses.append(np.asarray(metrics["per_job_loss"]))
-        report.step_times.append(dt)
-        report.nano_history.append(n)
-        if aimd is not None and i >= 1:       # skip compile-step timing
-            n = aimd.update(dt)
-        log(f"step {i:4d} loss {loss:.4f} nano {n} dt {dt*1e3:.1f}ms")
-
-    return {"ssm": ssm, "params": params, "adapters": adapters,
-            "opt_state": opt_state, "report": report, "batcher": batcher}
+    rt = GroupRuntime.from_specs(cfg, list(jobs), jax.random.PRNGKey(seed),
+                                 params=params, adapters=adapters,
+                                 lr=lr, impl=impl, block_t=block_t,
+                                 seed=seed, nano_batches=nano_batches,
+                                 adaptive_nano=adaptive_nano, remat=remat)
+    report = rt.run(steps, log=log)
+    return {"ssm": rt.ssm, "params": rt.params, "adapters": rt.adapters,
+            "opt_state": rt.opt_state, "report": report,
+            "batcher": rt.batcher, "runtime": rt}

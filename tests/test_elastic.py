@@ -1,0 +1,109 @@
+"""Elastic engine lifecycle + execution-backed cluster simulation
+(DESIGN.md §6): scheduler decisions executed on live training state."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cluster.execution import ExecutionBackend
+from repro.cluster.simulator import (ClusterConfig, ClusterSimulator,
+                                     tlora_policy)
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.elastic import ElasticEngine
+
+BT = 8
+
+
+@pytest.fixture
+def engine(tiny_cfg):
+    return ElasticEngine(tiny_cfg, block_t=BT, lr=1e-2, remat=False, seed=3)
+
+
+def _spec(jid, rank=4, bs=1, budget=10_000):
+    return LoRAJobSpec(jid, rank=rank, batch_size=bs, seq_len=32,
+                       base_model="tinyllama-1.1b", steps_budget=budget,
+                       max_slowdown=2.0)
+
+
+def test_engine_lifecycle_accounting_survives_migration(engine):
+    """arrival -> group -> train -> regroup -> train: per-job step counts
+    and adapter state follow the job through every migration."""
+    engine.add_job(_spec("a", rank=4, bs=2))
+    engine.add_job(_spec("b", rank=8))
+    engine.ensure_group(("a", "b"))
+    engine.run(3)
+    assert engine.steps_done("a") == engine.steps_done("b") == 3
+
+    engine.add_job(_spec("c", rank=2))
+    rt_before = engine._runtimes[("a", "b")]
+    engine.set_grouping([("a", "b"), ("c",)])       # unchanged pair kept
+    assert engine._runtimes[("a", "b")] is rt_before
+    assert engine.regroup_events == 0               # nothing live moved
+
+    engine.set_grouping([("a", "b", "c")])          # live pair dissolved
+    assert engine.regroup_events == 1
+    engine.run(2)
+    assert engine.steps_done("a") == 5
+    assert engine.steps_done("c") == 2
+    st = engine.job_state("a")
+    assert st.opt_step == 5                         # Adam step follows too
+
+    # decouple a job: peers park, state intact, and it can train on alone
+    st_a = engine.remove_job("a")
+    assert st_a.steps_done == 5
+    engine.set_grouping([("b", "c")])
+    engine.run(1)
+    assert engine.steps_done("b") == 6 and engine.steps_done("c") == 3
+
+
+def test_engine_reschedule_and_retire(engine):
+    """scheduler-driven regrouping + budget-based retirement."""
+    engine.add_job(_spec("a", budget=4))
+    engine.add_job(_spec("b", budget=8))
+    grouping = engine.reschedule(pressure=True)
+    assert sorted(j for g in grouping for j in g) == ["a", "b"]
+    engine.run(4)                                   # a hits its budget
+    assert "a" in engine.finished
+    assert engine.finished["a"].steps_done == 4
+    assert "a" not in engine.job_ids and "b" in engine.job_ids
+
+
+def test_execution_backed_simulator_smollm():
+    """Acceptance: execution-backed mode runs end-to-end on smollm_360m
+    (reduced) with >=2 regroup events and reports measured vs predicted
+    step times for every executed horizon."""
+    def J(i, arr, budget, **kw):
+        return LoRAJobSpec(f"j{i}", batch_size=1, seq_len=32,
+                           base_model="smollm-360m", steps_budget=budget,
+                           arrival_time=arr, max_slowdown=2.0,
+                           **{"rank": kw.pop("rank", 4), **kw})
+
+    trace = [J(0, 0.0, 20_000), J(1, 0.0, 20_000, rank=8),
+             J(2, 40.0, 4_000, rank=2)]
+    cc = ClusterConfig(total_chips=8, horizon=30.0, concurrency_cap=4,
+                       reduced_models=True)
+    backend = ExecutionBackend(steps_per_measure=2, block_t=BT)
+    sim = ClusterSimulator(cc, None, execution=backend)
+    sim.policy = tlora_policy(sim._cfg_of)
+    res = sim.run(trace, max_time=700.0)
+
+    assert res.step_records, "no execution observations recorded"
+    assert res.regroup_events >= 2, res.regroup_events
+    for r in res.step_records:
+        assert r.predicted > 0 and r.measured > 0
+    # at least one multi-job fused group was actually executed
+    assert any(len(r.job_ids) > 1 for r in res.step_records)
+    summ = backend.summary()
+    assert summ["observations"] == len(res.step_records)
+    assert summ["mean_measured_s"] > 0
+
+    # the engine's live state really migrated: grouped jobs share history
+    eng = backend.engine("smollm-360m")
+    assert eng is not None
+    assert eng.regroup_events >= 2
+    total_real = sum(eng.steps_done(j) for j in ("j0", "j1", "j2")
+                     if j in eng.job_ids or j in eng.finished)
+    assert total_real >= 2 * len(res.step_records)  # steps_per_measure each

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import (flash_attention_fwd,

@@ -145,6 +145,70 @@ def test_adapter_isolation(setup):
         want, got)
 
 
+def test_elastic_migration_is_lossless(tiny_cfg, two_jobs):
+    """The elastic contract (§3.2/§3.4): a job trained solo -> merged
+    into a group at step k -> extracted at step 2k reproduces the
+    solo-throughout trajectory within float32 accumulation tolerance.
+
+    The two jobs join the group at DIFFERENT Adam steps (k and k-1), so
+    this also pins per-job bias-correction/step accounting."""
+    from repro.elastic import GroupRuntime, JobTrainState
+    from repro.models import model as M
+
+    cfg = tiny_cfg
+    job_a, job_b = two_jobs
+    k = 3
+    key = jax.random.PRNGKey(7)
+    params = M.init_model(jax.random.fold_in(key, 0), cfg)
+    k_a, k_b = jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+    kw = dict(lr=1e-2, impl="ref", block_t=BT, remat=False)
+
+    def fresh(spec, kk):
+        return JobTrainState.fresh(spec, cfg, kk, r_pad=8)
+
+    def solo_curve(spec, kk, steps):
+        rt = GroupRuntime.from_states(cfg, params, [fresh(spec, kk)], **kw)
+        return [l[0] for l in rt.run(steps).per_job_losses]
+
+    ref_a = solo_curve(job_a, k_a, 3 * k)
+    ref_b = solo_curve(job_b, k_b, (k - 1) + 2 * k)
+
+    # elastic: solo (a: k steps, b: k-1 steps) -> merged k -> a extracted k
+    ra = GroupRuntime.from_states(cfg, params, [fresh(job_a, k_a)], **kw)
+    ra.run(k)
+    rb = GroupRuntime.from_states(cfg, params, [fresh(job_b, k_b)], **kw)
+    rb.run(k - 1)
+    merged = GroupRuntime.from_states(
+        cfg, params, [ra.export(job_a.job_id), rb.export(job_b.job_id)], **kw)
+    assert np.asarray(merged.opt_state.step).tolist() == [k, k - 1]
+    merged.run(k)
+    solo_again = GroupRuntime.from_states(
+        cfg, params, [merged.export(job_a.job_id)], **kw)
+    solo_again.run(k)
+
+    got_a = ([l[0] for l in ra.report.per_job_losses]
+             + [l[0] for l in merged.report.per_job_losses]
+             + [l[0] for l in solo_again.report.per_job_losses])
+    got_b = ([l[0] for l in rb.report.per_job_losses]
+             + [l[1] for l in merged.report.per_job_losses])
+    np.testing.assert_allclose(got_a, ref_a, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_b, ref_b[:len(got_b)], rtol=1e-5,
+                               atol=1e-6)
+
+    # extracted adapter state equals the solo-throughout state at 2k
+    rt_ref = GroupRuntime.from_states(cfg, params, [fresh(job_a, k_a)], **kw)
+    rt_ref.run(2 * k)
+    want = rt_ref.export(job_a.job_id)
+    got = merged.export(job_a.job_id)
+    for kk in want.adapter:
+        np.testing.assert_allclose(np.asarray(got.adapter[kk]),
+                                   np.asarray(want.adapter[kk]),
+                                   atol=2.5e-2, rtol=0)
+        assert np.mean(np.abs(np.asarray(got.adapter[kk])
+                              - np.asarray(want.adapter[kk])) < 1e-5) > 0.97
+    assert got.opt_step == want.opt_step == 2 * k
+
+
 def test_impls_agree_on_train_step(setup):
     cfg, jobs, params, adapters, batches = setup
     outs = {}

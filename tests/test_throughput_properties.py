@@ -3,6 +3,7 @@ the scheduler's correctness rests on these monotonicities."""
 import numpy as np
 import pytest
 
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
