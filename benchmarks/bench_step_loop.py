@@ -1,0 +1,123 @@
+"""Step-loop benchmark — per-step host-synced loop vs chunked
+device-resident execution (DESIGN.md §7).
+
+Same model/jobs as the Fig. 7 microbench (tinyllama reduced): train one
+fused group with ``chunk_size=1`` (the classic loop: one dispatch + one
+``float(loss)`` host sync per step) and with the chunked loop (one scan
+dispatch + one stacked-metrics sync per chunk, next chunk's batches
+staged behind device compute).  All paths run identical math
+(tests/test_backward_kernels.py pins them bit-identical), but the
+headline chunked row mixes two independent effects — fewer host
+syncs/dispatches AND unrolled-scan codegen (XLA while-loop carries cost
+real per-iteration overhead on CPU) — so the rolled-scan chunked loop
+is timed as a third row to keep the two attributable separately in the
+perf trajectory.
+
+Also re-times the Fig. 7 fused-vs-unfused train step on the same config
+so the JSON carries the kernel-fuser headline number next to the loop
+numbers.  Writes ``BENCH_step_loop.json`` at the repo root so the perf
+trajectory is tracked from this PR on; CI asserts the file exists, that
+``fused_vs_unfused_x`` >= 1.0, and that the chunked-loop numbers are
+present.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.elastic.runtime import GroupRuntime
+
+from benchmarks.common import banner
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_step_loop.json"
+CHUNK = 6
+
+
+def _make_runtime(cfg, jobs, *, chunk_size: int, unroll: bool,
+                  seed: int = 0) -> GroupRuntime:
+    rt = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(seed),
+                                 lr=1e-3, impl="xla", block_t=8,
+                                 remat=False, seed=seed,
+                                 chunk_size=chunk_size,
+                                 scan_unroll=unroll)
+    rt.run(chunk_size)                       # compile the (n, chunk) step
+    return rt
+
+
+def run(quick: bool = False) -> dict:
+    banner("Step loop: per-step host sync vs chunked device-resident")
+    cfg = get_config("tinyllama-1.1b").reduced()
+    jobs = [LoRAJobSpec(f"j{i}", rank=(8, 16)[i % 2], batch_size=1,
+                        seq_len=64) for i in range(2)]
+    steps = CHUNK * (2 if quick else 4)
+    reps = 3 if quick else 5
+
+    # compile both modes first, then INTERLEAVE the timed reps so host
+    # frequency/load drift hits both modes equally; min discards noise.
+    # The chunked runtime unrolls its scan (the perf configuration —
+    # XLA while-loop carries cost real per-iteration overhead on CPU).
+    rt_step = _make_runtime(cfg, jobs, chunk_size=1, unroll=False)
+    rt_chunk = _make_runtime(cfg, jobs, chunk_size=CHUNK, unroll=True)
+    rt_rolled = _make_runtime(cfg, jobs, chunk_size=CHUNK, unroll=False)
+    t_step = t_chunk = t_rolled = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rt_step.run(steps)
+        t_step = min(t_step, (time.perf_counter() - t0) / steps)
+        t0 = time.perf_counter()
+        rt_chunk.run(steps)
+        t_chunk = min(t_chunk, (time.perf_counter() - t0) / steps)
+        t0 = time.perf_counter()
+        rt_rolled.run(steps)
+        t_rolled = min(t_rolled, (time.perf_counter() - t0) / steps)
+    speedup = t_step / t_chunk
+    print(f"  per-step loop    {t_step*1e3:7.2f} ms/step (1 sync/step)")
+    print(f"  chunked unrolled {t_chunk*1e3:7.2f} ms/step "
+          f"(1 sync per {CHUNK} steps, donated state)")
+    print(f"  chunked rolled   {t_rolled*1e3:7.2f} ms/step "
+          f"(same syncs, while-loop codegen)")
+    print(f"  chunked x{speedup:.3f} faster")
+
+    # kernel-fuser headline on the same model (Fig. 7 methodology).
+    # K=8: fusion pays in amortized launches, so the K=2 loop above is
+    # not where the fuser claim lives (Fig. 7 sweeps K; the gap opens
+    # super-linearly with group size — x5+ at K=8 even on CPU).
+    from benchmarks.fig7_kernel_ablation import _time_step
+    K_fuser = 8
+    fuser_jobs = [LoRAJobSpec(f"f{i}", rank=(2, 4, 8, 16)[i % 4],
+                              batch_size=1, seq_len=64)
+                  for i in range(K_fuser)]
+    t_fused = _time_step(cfg, fuser_jobs, "xla")
+    t_loop = _time_step(cfg, fuser_jobs, "loop")
+    fused_x = t_loop / t_fused
+    print(f"  fused step     {t_fused*1e3:7.2f} ms  "
+          f"unfused {t_loop*1e3:7.2f} ms  (K={K_fuser}, "
+          f"fused x{fused_x:.2f})")
+
+    out = {
+        "config": {"model": cfg.name, "reduced": True, "K": len(jobs),
+                   "seq_len": 64, "impl": "xla", "chunk_size": CHUNK,
+                   "scan_unroll": True, "steps_timed": steps,
+                   "reps": reps},
+        "per_step_ms": t_step * 1e3,
+        "chunked_ms": t_chunk * 1e3,
+        "chunked_rolled_ms": t_rolled * 1e3,
+        "speedup_x": speedup,
+        "fused_ms": t_fused * 1e3,
+        "unfused_ms": t_loop * 1e3,
+        "fuser_K": K_fuser,
+        "fused_vs_unfused_x": fused_x,
+    }
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"  wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,11 +1,15 @@
 """Fig. 7 — kernel fuser ablation.
 
-Two levels:
+Three levels:
   (a) REAL wall-clock on this host: one fused multi-LoRA train step vs
       the unfused per-adapter GEMM-pair baseline ("loop", K kernel
       launches) across group sizes K — the microbench analogue of the
       paper's PyTorch-native-kernel ablation.
-  (b) cluster-level: tLoRA vs tLoRA-w/o-Kernel-Fuser in the simulator.
+  (b) fwd+bwd kernel ablation: value+grad of the fused LoRA op under the
+      grouped backward (segment-dense custom VJP / grouped-wgrad pallas
+      kernels) vs the legacy one-hot wgrad formulation vs the unfused
+      per-adapter loop.
+  (c) cluster-level: tLoRA vs tLoRA-w/o-Kernel-Fuser in the simulator.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ from repro.configs import get_config
 from repro.core.jobs import LoRAJobSpec
 from repro.core.ssm import SharedSuperModel
 from repro.data.pipeline import FusedBatcher
+from repro.kernels import ops, ref
 from repro.optim import adamw
 from repro.optim.schedule import constant
 
@@ -43,6 +48,69 @@ def _time_step(cfg, jobs, impl, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
+def _onehot_fused_lora(x, A, B, ids, ranks, scalings):
+    """The legacy dense-over-K formulation whose AUTODIFF backward is the
+    one-hot wgrad path this PR removed — kept here as the ablation
+    baseline (einsum('tk,...') densifies every wgrad over all K)."""
+    K, _, r_pad = A.shape
+    lane = jnp.arange(r_pad)
+    onehot = jax.nn.one_hot(ids, K, dtype=x.dtype)
+    xa = jnp.einsum("td,kdr->tkr", x, A,
+                    preferred_element_type=jnp.float32)
+    xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                   xa, 0.0).astype(x.dtype)
+    y = jnp.einsum("tkr,kro->tko", xa, B,
+                   preferred_element_type=jnp.float32)
+    y = y * scalings[None, :, None]
+    return jnp.einsum("tko,tk->to", y,
+                      onehot.astype(jnp.float32)).astype(x.dtype)
+
+
+def _time_fwd_bwd(K: int, *, T=256, d=128, r_pad=16, block_t=32,
+                  iters=5) -> dict:
+    """Wall-clock one fwd+bwd of the fused LoRA op per backward impl.
+
+    'grouped' is the compiled segment-dense custom VJP (the role the
+    pallas grouped-wgrad kernels play on a real TPU — Mosaic cannot
+    compile on CPU, and interpret-mode timings are not representative,
+    so the pallas path is validated for *correctness* in
+    tests/test_backward_kernels.py and priced here via its XLA twin)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((T, d)).astype(np.float32))
+    A = jnp.asarray((rng.standard_normal((K, d, r_pad)) * 0.3)
+                    .astype(np.float32))
+    B = jnp.asarray(((rng.standard_normal((K, r_pad, d)) * 0.3) + 0.1)
+                    .astype(np.float32))
+    ranks = jnp.asarray(rng.integers(1, r_pad + 1, size=K), jnp.int32)
+    scal = jnp.asarray(16.0 / np.asarray(ranks), jnp.float32)
+    ids = jnp.asarray(np.repeat(np.arange(K), T // K).astype(np.int32))
+
+    def variant(fn):
+        g = jax.jit(jax.value_and_grad(
+            lambda x, A, B: (fn(x, A, B).astype(jnp.float32) ** 2).sum(),
+            argnums=(0, 1, 2)))
+        out = g(x, A, B)                                     # compile
+        jax.block_until_ready(out[0])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = g(x, A, B)
+            jax.block_until_ready(out[0])
+        return (time.perf_counter() - t0) / iters
+
+    t = {
+        "grouped": variant(lambda x, A, B: ops.fused_lora(
+            x, A, B, ids, ranks, scal, impl="xla", equal_segments=True)),
+        "onehot": variant(lambda x, A, B: _onehot_fused_lora(
+            x, A, B, ids, ranks, scal)),
+        "loop": variant(lambda x, A, B: ref.fused_lora_loop(
+            x, A, B, ids, ranks, scal)),
+    }
+    return {"K": K,
+            **{f"{k}_ms": v * 1e3 for k, v in t.items()},
+            "grouped_vs_onehot_x": t["onehot"] / t["grouped"],
+            "grouped_vs_loop_x": t["loop"] / t["grouped"]}
+
+
 def run(quick: bool = False) -> dict:
     banner("Fig 7: kernel fuser ablation")
     cfg = get_config("tinyllama-1.1b").reduced()
@@ -62,6 +130,15 @@ def run(quick: bool = False) -> dict:
               f"unfused {t_loop*1e3:7.1f}ms  "
               f"(fused x{t_loop/t_fused:.2f} faster)")
 
+    bwd_rows = []
+    for K in (2, 4) if quick else (2, 4, 8):
+        r = _time_fwd_bwd(K, iters=3 if quick else 5)
+        bwd_rows.append(r)
+        print(f"  fwd+bwd K={K}: grouped {r['grouped_ms']:6.2f}ms  "
+              f"one-hot {r['onehot_ms']:6.2f}ms  loop {r['loop_ms']:6.2f}ms"
+              f"  (grouped x{r['grouped_vs_onehot_x']:.2f} vs one-hot, "
+              f"x{r['grouped_vs_loop_x']:.2f} vs loop)")
+
     trace = make_trace(jobs=250 if quick else 600, seed=2)
     results = run_systems(trace, ("tlora", "tlora_no_kernel"))
     summ = summarize_systems(results)
@@ -71,8 +148,8 @@ def run(quick: bool = False) -> dict:
           f"{jct_gain:.2f} and drops util "
           f"{(summ['tlora']['utilization']-summ['tlora_no_kernel']['utilization'])*100:+.1f}pp")
 
-    out = {"microbench": rows, "cluster": summ,
-           "jct_inflation_without_fuser": jct_gain}
+    out = {"microbench": rows, "fwd_bwd_ablation": bwd_rows,
+           "cluster": summ, "jct_inflation_without_fuser": jct_gain}
     save("fig7_kernel_ablation", out)
     return out
 

@@ -88,7 +88,11 @@ class ExecutionBackend:
             if spec.job_id not in known:
                 eng.add_job(spec)
         rt = eng.ensure_group(group.job_ids)
-        rt.run(self.steps_per_measure)
+        # chunk_size=1: the backend is a measurement instrument — per-step
+        # wall times are the signal, so keep step-at-a-time granularity
+        # rather than chunk means (steps are AOT-compiled, so no compile
+        # outlier lands in the window either way).
+        rt.run(self.steps_per_measure, chunk_size=1)
         measured = rt.report.measured_step_time(self.steps_per_measure)
         self.records.append(StepRecord(
             t=now, base_model=base, job_ids=tuple(group.job_ids),

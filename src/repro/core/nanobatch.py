@@ -10,6 +10,14 @@ of the fused row count, and the controller snaps to the nearest legal
 value.  Convergence is O(log N) adjustments — each adjustment step still
 makes training progress, so the tuning overhead is amortized to nothing
 over thousands of iterations (paper §3.3).
+
+Under the chunked device-resident loop (DESIGN.md §7) the controller is
+fed once per chunk with the chunk's *mean* per-step wall time rather
+than once per step: Eq. 2 only assumes the observation is an unbiased
+step-time estimate under the current N, and N is constant within a
+chunk, so the mean over the chunk is a lower-variance sample of exactly
+the quantity Eq. 2 reads — semantics preserved, adjustment cadence
+1/chunk_size.
 """
 from __future__ import annotations
 

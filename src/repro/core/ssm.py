@@ -88,7 +88,9 @@ class SharedSuperModel:
     # --------------------------------------------------------- train step
     def make_train_step(self, *, lr_fn: Callable, nano_batches: int = 1,
                         remat: bool = True,
-                        weight_decay: float = 0.0) -> Callable:
+                        weight_decay: float = 0.0,
+                        steps: Optional[int] = None,
+                        unroll: bool = False) -> Callable:
         """Build the fused train step (grad-accumulated over nano-batches).
 
         Nano-batching (§3.3) splits the fused batch along the batch dim
@@ -96,6 +98,17 @@ class SharedSuperModel:
         across slices and the optimizer applies once.  Per-job token
         denominators are computed over the FULL batch first, so the result
         is bit-comparable to N=1 (lossless under re-granulation).
+
+        ``steps`` != None returns the *chunked* device-resident variant:
+        a ``lax.scan`` over a (steps, ...) stack of pre-staged batches
+        carrying (adapters, opt_state) on device, returning metrics as
+        stacked arrays so the host syncs once per chunk instead of once
+        per step (DESIGN.md §7).  Jit it with ``donate_argnums=(1, 2)``
+        so each chunk reuses the adapter/optimizer buffers in place.
+        ``unroll=True`` unrolls the chunk scan (XLA while-loop carries
+        cost real per-iteration overhead on some backends; unrolling
+        trades ~chunk× compile time for loop-free step code — the perf
+        configuration used by benchmarks/bench_step_loop.py).
         """
         cfg, K = self.cfg, self.num_jobs
 
@@ -135,7 +148,24 @@ class SharedSuperModel:
                        "lr": lr}
             return new_adapters, new_opt, metrics
 
-        return train_step
+        if steps is None:
+            return train_step
+
+        def chunked_step(params, adapters, opt_state, batches):
+            """batches: the train_step batch dict with a leading (steps,)
+            chunk axis (FusedBatcher.next_batches).  The scan body is the
+            exact single train_step, so per-step math is unchanged."""
+
+            def body(carry, b):
+                ad, opt = carry
+                ad, opt, m = train_step(params, ad, opt, b)
+                return (ad, opt), m
+
+            (new_adapters, new_opt), metrics = jax.lax.scan(
+                body, (adapters, opt_state), batches, unroll=unroll)
+            return new_adapters, new_opt, metrics   # metrics stacked (steps,)
+
+        return chunked_step
 
     # --------------------------------------------------------- serve steps
     def make_prefill_step(self, shape: InputShape, *, ring: bool = False,
@@ -203,6 +233,19 @@ def _reshape_nano(batch: dict, n: int) -> dict:
 
 
 def valid_nano_counts(rows: int, max_n: Optional[int] = None) -> List[int]:
-    """Divisors of the fused row count (legal nano-batch counts)."""
-    out = [n for n in range(1, rows + 1) if rows % n == 0]
-    return [n for n in out if max_n is None or n <= max_n]
+    """Divisors of the fused row count (legal nano-batch counts), sorted
+    ascending.  O(√rows) paired enumeration — this runs inside
+    ``AIMDController.__post_init__`` on every regroup and *rows* reaches
+    the thousands at production batch sizes."""
+    small, large = [], []
+    d = 1
+    while d * d <= rows:
+        if rows % d == 0:
+            small.append(d)
+            if d != rows // d:
+                large.append(rows // d)
+        d += 1
+    out = small + large[::-1]
+    if max_n is not None:
+        out = [n for n in out if n <= max_n]
+    return out

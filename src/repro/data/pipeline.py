@@ -114,6 +114,13 @@ class FusedBatcher:
                 "loss_mask": np.concatenate(masks),
                 "adapter_ids": np.concatenate(aids)}
 
+    def next_batches(self, n: int) -> Dict[str, np.ndarray]:
+        """Stack the next *n* fused batches along a leading chunk axis —
+        the pre-staged input of the chunked device-resident train step
+        (one host->device transfer per chunk, consumed by ``lax.scan``)."""
+        bs = [self.next_batch() for _ in range(n)]
+        return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+
     @property
     def adapter_ids(self) -> np.ndarray:
         return np.concatenate([np.full(self._rows_for(j), k, np.int32)

@@ -43,7 +43,8 @@ class ElasticEngine:
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
                  lr_fn: Optional[Callable] = None, remat: bool = True,
                  nano_batches: int = 1, adaptive_nano: bool = False,
-                 weight_decay: float = 0.0, seed: int = 0):
+                 weight_decay: float = 0.0, chunk_size: int = 4,
+                 seed: int = 0):
         self.cfg = cfg
         self._key = key if key is not None else jax.random.PRNGKey(seed)
         self.params = params if params is not None else \
@@ -55,7 +56,8 @@ class ElasticEngine:
                                lr_fn=lr_fn, remat=remat,
                                nano_batches=nano_batches,
                                adaptive_nano=adaptive_nano,
-                               weight_decay=weight_decay, seed=seed)
+                               weight_decay=weight_decay,
+                               chunk_size=chunk_size, seed=seed)
         self._parked: Dict[str, JobTrainState] = {}   # active, not grouped
         self._runtimes: Dict[GroupKey, GroupRuntime] = {}
         self.finished: Dict[str, JobTrainState] = {}

@@ -94,6 +94,75 @@ def fused_lora_pallas(x: jax.Array, A: jax.Array, B: jax.Array,
     )(tile_map, ranks, x, A, B)
 
 
+# ------------------------------------------------------------ grouped wgrad
+def _grouped_wgrad_kernel(tile_map_ref, x_ref, g_ref, o_ref):
+    """dW[k] += x_tileᵀ · g_tile for the adapter k owning this token tile.
+
+    Output blocks are *revisited*: the SSM layout sorts tokens by adapter,
+    so all token tiles of one adapter are consecutive in the innermost
+    grid dimension and the (1, d_in, block_o) accumulator stays resident
+    in VMEM for the whole segment.  The accumulator is zeroed on the first
+    tile of each segment (tile_map transition) and flushed to HBM by the
+    pipeline when the output index changes."""
+    i_t = pl.program_id(1)
+    prev = tile_map_ref[jnp.maximum(i_t - 1, 0)]
+
+    @pl.when((i_t == 0) | (prev != tile_map_ref[i_t]))
+    def _zero_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (block_t, d_in)ᵀ · (block_t, block_o) -> (d_in, block_o), f32 accum
+    acc = jax.lax.dot_general(x_ref[...], g_ref[...],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] += acc[None]
+
+
+def grouped_wgrad_pallas(x: jax.Array, g: jax.Array, tile_map: jax.Array,
+                         num_adapters: int, *, block_t: int = 128,
+                         block_o: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """Segment-aware wgrad: out[k] = Σ_{t: adapter(t)=k} x_tᵀ g_t.
+
+    x: (T, d_in), g: (T, d_out), tile_map: (T//block_t,) *sorted* adapter
+    id per token tile (SSM layout contract).  Returns (K, d_in, d_out) in
+    f32 (master-weight gradient dtype).  Serves both LoRA wgrads:
+    dA = grouped_wgrad(x, dxa) and dB = grouped_wgrad(xa, dy).
+
+    Grid is (dout_tiles, token_tiles) — token tiles innermost so every
+    output block's visits are consecutive (the revisiting-output
+    accumulation contract; a (tiles, dout) order would interleave blocks
+    and lose the VMEM-resident accumulator).
+    """
+    T, d_in = x.shape
+    d_out = g.shape[-1]
+    K = num_adapters
+    assert T % block_t == 0, (T, block_t)
+    block_o = _fit_block(d_out, block_o)
+    grid = (d_out // block_o, T // block_t)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_in), lambda j, i, tm: (i, 0)),
+            pl.BlockSpec((block_t, block_o), lambda j, i, tm: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, d_in, block_o),
+                               lambda j, i, tm: (tm[i], 0, j)),
+    )
+    out = pl.pallas_call(
+        _grouped_wgrad_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, d_in, d_out), jnp.float32),
+        interpret=interpret,
+    )(tile_map, x, g)
+    # adapters with zero token tiles are never visited — their output
+    # block is uninitialized memory; the true gradient is zero.
+    seg = jnp.zeros((K,), jnp.int32).at[tile_map].add(1)
+    return jnp.where(seg[:, None, None] > 0, out, 0.0)
+
+
 # ------------------------------------------------------------- grouped mm
 def _grouped_mm_kernel(tile_map_ref, x_ref, w_ref, o_ref):
     del tile_map_ref

@@ -2,21 +2,28 @@
 
 ``fused_lora`` dispatches between:
   * "pallas" — the TPU kernel (interpret-mode on CPU), custom VJP whose
-    wgrad uses a fused one-hot einsum (LoRA wgrad FLOPs are negligible
-    next to the backbone, see DESIGN.md).
-  * "xla"    — ragged_dot formulation: the distributed/GSPMD path used by
-    the dry-run (the CPU backend cannot compile Mosaic kernels). Exactly
-    the same math, auto-differentiated.
+    backward is grouped end-to-end: two grouped-mm launches for dx and
+    two segment-aware grouped-wgrad launches for dA/dB (no one-hot
+    densification over K anywhere in the hot path).
+  * "xla"    — segment-dense formulation: the distributed/GSPMD path used
+    by the dry-run (the CPU backend cannot compile Mosaic kernels).
+    Same math; custom VJP with segment-dense batched-einsum wgrads.
   * "ref"    — gather oracle (tests, small scale).
   * "loop"   — per-adapter GEMM pair, the *unfused* baseline (Fig. 7).
 
 Contract required by "pallas"/"xla": tokens sorted by adapter id,
 contiguous segments, each segment length a multiple of block_t (the SSM
 batch layout guarantees this — see core/ssm.py).
+
+Interpret mode: kernels default to the Pallas interpreter (CPU CI).  On a
+real TPU backend set ``REPRO_INTERPRET=0`` in the environment, or call
+``set_interpret(False)`` before building any train step — no source edit
+required.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import numpy as np
 import jax
@@ -25,7 +32,30 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_impl
 from repro.kernels import fused_lora as pk
 
-_INTERPRET = True   # flipped to False on real TPU backends
+
+def _env_interpret() -> bool:
+    return os.environ.get("REPRO_INTERPRET", "1").lower() not in (
+        "0", "false", "no")
+
+
+_INTERPRET = _env_interpret()
+
+
+def set_interpret(flag: bool) -> None:
+    """Flip Pallas interpret mode process-wide (False = compile Mosaic).
+
+    Must be called BEFORE the first train-step build: the flag is baked
+    into traced programs at jit/AOT-compile time, so train steps compiled
+    earlier (GroupRuntime._step_cache, user ``jax.jit`` wrappers) keep
+    the old flag.  Only the custom-VJP closure cache is cleared here —
+    already-compiled executables cannot be reached from this module."""
+    global _INTERPRET
+    _INTERPRET = bool(flag)
+    _make_pallas_fn.cache_clear()
+
+
+def get_interpret() -> bool:
+    return _INTERPRET
 
 
 def _tile_map(ids: jax.Array, block_t: int) -> jax.Array:
@@ -36,59 +66,148 @@ def _group_sizes(ids: jax.Array, K: int) -> jax.Array:
     return jnp.bincount(ids, length=K)
 
 
+def _int_zeros(a) -> np.ndarray:
+    """float0 cotangents for integer operands (ids, ranks)."""
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
 # ------------------------------------------------------------------ xla
+@functools.lru_cache(maxsize=4)
+def _make_xla_fn(equal_segments: bool):
+    """Build the custom-VJP segment-dense path (static segment layout).
+
+    Forward — when the scheduler hands us EQUAL segments (the production
+    layout: every job contributes the same padded row count), dispatch is
+    a comm-free reshape (T, d) -> (K, T/K, d) followed by two dense
+    batched einsums with bf16 inputs + f32 accumulation — FLOPs = the
+    ideal 2*T*d*r and zero collectives (§Perf iteration 3b; scatter-based
+    dispatch was collective-bound, ragged_dot's non-TPU fallback densified
+    over all K adapters in f32).  Unequal segments fall back to a masked
+    dense-over-K formulation (exact; K x r extra flops — fine for K<=8
+    test-scale groups).
+
+    Backward — hand-written instead of autodiffed: the equal-segment path
+    gets segment-dense batched-einsum wgrads (dA[k] = buf[k]ᵀ·dxa[k],
+    dB[k] = xa[k]ᵀ·dy[k]; ideal FLOPs, no K densification), where
+    autodiff through the fallback would densify every wgrad over all K
+    adapters regardless of layout.  Scalings are alpha/r constants that
+    are never trained — stop-gradiented via a float0 cotangent."""
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, ranks, scalings):
+        T, d_in = x.shape
+        K, _, r_pad = A.shape
+        lane = jnp.arange(r_pad)
+
+        if equal_segments and T % K == 0:
+            buf = x.reshape(K, T // K, d_in)               # adapter-major
+            xa = jnp.einsum("kcd,kdr->kcr", buf, A,
+                            preferred_element_type=jnp.float32)
+            xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                           xa, 0.0).astype(x.dtype)
+            y = jnp.einsum("kcr,kro->kco", xa, B,
+                           preferred_element_type=jnp.float32)
+            y = y * scalings[:, None, None]
+            return y.reshape(T, -1).astype(x.dtype)
+
+        # fallback: dense over K with a one-hot combine (exact, no scatter)
+        onehot = jax.nn.one_hot(ids, K, dtype=x.dtype)     # (T, K)
+        xa = jnp.einsum("td,kdr->tkr", x, A,
+                        preferred_element_type=jnp.float32)
+        xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                       xa, 0.0).astype(x.dtype)
+        y = jnp.einsum("tkr,kro->tko", xa, B,
+                       preferred_element_type=jnp.float32)
+        y = y * scalings[None, :, None]
+        return jnp.einsum("tko,tk->to", y, onehot.astype(jnp.float32)
+                          ).astype(x.dtype)
+
+    def _fwd(x, A, B, ids, ranks, scalings):
+        return f(x, A, B, ids, ranks, scalings), (x, A, B, ids, ranks,
+                                                  scalings)
+
+    def _bwd(res, dy):
+        x, A, B, ids, ranks, scalings = res
+        T, d_in = x.shape
+        K, _, r_pad = A.shape
+        lane = jnp.arange(r_pad)
+        Af = A.astype(jnp.float32)
+        Bf = B.astype(jnp.float32)
+
+        if equal_segments and T % K == 0:
+            C = T // K
+            buf = x.reshape(K, C, d_in)
+            dy_s = (dy.reshape(K, C, -1).astype(jnp.float32)
+                    * scalings[:, None, None])
+            # recompute the compact intermediate (cheap: 2*T*d*r flops)
+            xa = jnp.einsum("kcd,kdr->kcr", buf, A,
+                            preferred_element_type=jnp.float32)
+            xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                           xa, 0.0).astype(x.dtype)
+            dxa = jnp.einsum("kco,kro->kcr", dy_s, Bf)
+            dxa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                            dxa, 0.0)
+            dx = jnp.einsum("kcr,kdr->kcd", dxa, Af).reshape(T, d_in)
+            # segment-dense wgrads: one batched GEMM pair, no K densify
+            dA = jnp.einsum("kcd,kcr->kdr", buf.astype(jnp.float32), dxa)
+            dB = jnp.einsum("kcr,kco->kro", xa.astype(jnp.float32), dy_s)
+        else:
+            # mirror of the dense-over-K fallback (test-scale exactness;
+            # the one-hot weighting in dy_k zeroes foreign-adapter terms,
+            # so dxa is already segment-sparse and dA/dB need no one-hot)
+            onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
+            dy_k = (dy.astype(jnp.float32)[:, None, :]
+                    * onehot[:, :, None] * scalings[None, :, None])
+            xa = jnp.einsum("td,kdr->tkr", x, A,
+                            preferred_element_type=jnp.float32)
+            xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                           xa, 0.0).astype(x.dtype)
+            dxa = jnp.einsum("tko,kro->tkr", dy_k, Bf)
+            dxa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                            dxa, 0.0)
+            dx = jnp.einsum("tkr,kdr->td", dxa, Af)
+            dA = jnp.einsum("td,tkr->kdr", x.astype(jnp.float32), dxa)
+            dB = jnp.einsum("tkr,tko->kro", xa.astype(jnp.float32), dy_k)
+
+        # scalings are alpha/r constants — stop-gradient (never trained)
+        return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
+                _int_zeros(ids), _int_zeros(ranks),
+                np.zeros(scalings.shape, jax.dtypes.float0))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
 def fused_lora_xla(x, A, B, ids, ranks, scalings, capacity=None,
                    equal_segments: bool = False):
     """Segment-dense grouped GEMM pair — the GSPMD/dry-run path.
 
-    The SSM layout sorts tokens by adapter into contiguous segments.  When
-    the scheduler hands us EQUAL segments (the production layout: every
-    job contributes the same padded row count), dispatch is a comm-free
-    reshape (T, d) -> (K, T/K, d) followed by two dense batched einsums
-    with bf16 inputs + f32 accumulation — FLOPs = the ideal 2*T*d*r and
-    zero collectives (§Perf iteration 3b; scatter-based dispatch was
-    collective-bound, ragged_dot's non-TPU fallback densified over all K
-    adapters in f32).
-
-    Unequal segments fall back to a masked dense-over-K formulation
-    (exact; K x r extra flops — fine for K<=8 test-scale groups)."""
-    T, d_in = x.shape
-    K, _, r_pad = A.shape
-    lane = jnp.arange(r_pad)
-
-    if equal_segments and T % K == 0:
-        buf = x.reshape(K, T // K, d_in)                   # adapter-major
-        xa = jnp.einsum("kcd,kdr->kcr", buf, A,
-                        preferred_element_type=jnp.float32)
-        xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
-                       xa, 0.0).astype(x.dtype)
-        y = jnp.einsum("kcr,kro->kco", xa, B,
-                       preferred_element_type=jnp.float32)
-        y = y * scalings[:, None, None]
-        return y.reshape(T, -1).astype(x.dtype)
-
-    # fallback: dense over K with a one-hot combine (exact, no scatter)
-    onehot = jax.nn.one_hot(ids, K, dtype=x.dtype)         # (T, K)
-    xa = jnp.einsum("td,kdr->tkr", x, A,
-                    preferred_element_type=jnp.float32)
-    xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
-                   xa, 0.0).astype(x.dtype)
-    y = jnp.einsum("tkr,kro->tko", xa, B,
-                   preferred_element_type=jnp.float32)
-    y = y * scalings[None, :, None]
-    return jnp.einsum("tko,tk->to", y, onehot.astype(jnp.float32)
-                      ).astype(x.dtype)
+    See ``_make_xla_fn`` for the forward/backward contract; the custom
+    VJP keeps wgrads segment-dense on the equal-segment production
+    layout instead of autodiffing through the masked dense-over-K
+    fallback."""
+    del capacity  # segment capacity is implied by the equal-segment layout
+    return _make_xla_fn(bool(equal_segments))(x, A, B, ids, ranks, scalings)
 
 
 # --------------------------------------------------------------- pallas
 @functools.lru_cache(maxsize=32)
 def _make_pallas_fn(block_t: int):
-    """Build the custom-VJP pallas path for a static token-tile size."""
+    """Build the custom-VJP pallas path for a static token-tile size.
+
+    Backward = four grouped kernel launches, all segment-aware:
+      dxa = dy_s ·g Bᵀ        (grouped-mm)      dx = dxa ·g Aᵀ (grouped-mm)
+      dA  = Σ_seg xᵀ·dxa      (grouped-wgrad)   dB = Σ_seg xaᵀ·dy_s (grouped-wgrad)
+    No one-hot einsums, no dense-over-K wgrads, and no d(scaling) launch:
+    scalings are alpha/r constants that are never trained, so they are
+    stop-gradiented (float0 cotangent) — one grouped-mm launch + einsum
+    saved per backward."""
+    interpret = _INTERPRET
 
     @jax.custom_vjp
     def f(x, A, B, ids, ranks, scalings):
         y = pk.fused_lora_pallas(x, A, B, _tile_map(ids, block_t), ranks,
-                                 block_t=block_t, interpret=_INTERPRET)
+                                 block_t=block_t, interpret=interpret)
         return (y.astype(jnp.float32) * scalings[ids][:, None]).astype(x.dtype)
 
     def _fwd(x, A, B, ids, ranks, scalings):
@@ -103,32 +222,26 @@ def _make_pallas_fn(block_t: int):
 
         # dx = ((dy_s @ B^T) * mask) @ A^T — two grouped-mm kernel launches
         dxa = pk.grouped_matmul_pallas(dy_s, jnp.swapaxes(B, 1, 2), tm,
-                                       block_t=block_t, interpret=_INTERPRET)
+                                       block_t=block_t, interpret=interpret)
         dxa = ref_impl.rank_mask(dxa.astype(jnp.float32), ids,
                                  ranks).astype(x.dtype)
         dx = pk.grouped_matmul_pallas(dxa, jnp.swapaxes(A, 1, 2), tm,
-                                      block_t=block_t, interpret=_INTERPRET)
+                                      block_t=block_t, interpret=interpret)
 
-        # wgrads: fused one-hot einsums (K small; negligible FLOPs)
-        onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
+        # wgrads: segment-aware grouped accumulation (revisiting-output
+        # kernels over the sorted token tiles — f32 accumulators)
         xa = pk.grouped_matmul_pallas(x, A, tm, block_t=block_t,
-                                      interpret=_INTERPRET)
-        xa = ref_impl.rank_mask(xa.astype(jnp.float32), ids, ranks)
-        dA = jnp.einsum("tk,td,tr->kdr", onehot, x.astype(jnp.float32),
-                        dxa.astype(jnp.float32))
-        dB = jnp.einsum("tk,tr,to->kro", onehot, xa, dy_s.astype(jnp.float32))
+                                      interpret=interpret)
+        xa = ref_impl.rank_mask(xa.astype(jnp.float32), ids,
+                                ranks).astype(x.dtype)
+        dA = pk.grouped_wgrad_pallas(x, dxa, tm, K, block_t=block_t,
+                                     interpret=interpret)
+        dB = pk.grouped_wgrad_pallas(xa, dy_s, tm, K, block_t=block_t,
+                                     interpret=interpret)
 
-        # d(scaling): s is alpha/r (never trained) but keep the VJP exact.
-        y_uns = pk.grouped_matmul_pallas(xa.astype(x.dtype), B, tm,
-                                         block_t=block_t,
-                                         interpret=_INTERPRET)
-        ds = jnp.einsum("tk,to,to->k", onehot, y_uns.astype(jnp.float32),
-                        dy.astype(jnp.float32))
-
-        f0 = jax.dtypes.float0
         return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
-                np.zeros(ids.shape, f0), np.zeros(ranks.shape, f0),
-                ds.astype(scalings.dtype))
+                _int_zeros(ids), _int_zeros(ranks),
+                np.zeros(scalings.shape, jax.dtypes.float0))
 
     f.defvjp(_fwd, _bwd)
     return f

@@ -46,6 +46,18 @@ def grouped_matmul_ref(x: jax.Array, W: jax.Array, ids: jax.Array) -> jax.Array:
     return y.astype(x.dtype)
 
 
+def grouped_wgrad_ref(x: jax.Array, g: jax.Array, ids: jax.Array,
+                      num_adapters: int) -> jax.Array:
+    """out[k] = Σ_{t: ids[t]=k} x_tᵀ g_t — oracle for grouped_wgrad_pallas.
+
+    x: (T, d_in); g: (T, d_out); returns (K, d_in, d_out) f32.  The one-hot
+    densification over K is exactly what the kernel avoids — fine here at
+    test scale."""
+    onehot = jax.nn.one_hot(ids, num_adapters, dtype=jnp.float32)
+    return jnp.einsum("tk,td,to->kdo", onehot, x.astype(jnp.float32),
+                      g.astype(jnp.float32))
+
+
 def fused_lora_loop(x: jax.Array, A: jax.Array, B: jax.Array,
                     ids: jax.Array, ranks: jax.Array,
                     scalings: jax.Array) -> jax.Array:
