@@ -19,8 +19,48 @@ numbers.  Writes ``BENCH_step_loop.json`` at the repo root so the perf
 trajectory is tracked from this PR on; CI asserts the file exists, that
 ``fused_vs_unfused_x`` >= 1.0, and that the chunked-loop numbers are
 present.
+
+``--mesh RxM`` additionally times the SHARDED chunked runtime
+(DESIGN.md §8) on an RxM (data, model) mesh — forcing RxM virtual host
+devices when the machine has fewer — and records whether the sharded
+kernel path kept the equal-segment fast path (CI smoke asserts it did
+not fall back to dense-over-K).
 """
 from __future__ import annotations
+
+# --mesh needs the forced device count installed BEFORE jax first
+# initializes its backend, so peek at argv ahead of the jax import
+# (only when executed as a script — library imports stay side-effect
+# free for benchmarks.run and the test suite).
+import os
+import sys
+
+def _peek_mesh_arg(argv):
+    """'--mesh 4x2' or '--mesh=4x2' -> '4x2' (None if absent/malformed —
+    argparse reports the error properly after imports)."""
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+if __name__ == "__main__":
+    _spec = _peek_mesh_arg(sys.argv)
+    if _spec:
+        try:
+            _need = 1
+            for _p in _spec.split("x"):
+                _need *= int(_p)
+        except ValueError:
+            _need = 0
+        _flags = os.environ.get("XLA_FLAGS", "")
+        if _need > 1 and \
+                "xla_force_host_platform_device_count" not in _flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{_flags} --xla_force_host_platform_device_count={_need}"
+            ).strip()
 
 import json
 import pathlib
@@ -40,17 +80,51 @@ CHUNK = 6
 
 
 def _make_runtime(cfg, jobs, *, chunk_size: int, unroll: bool,
-                  seed: int = 0) -> GroupRuntime:
+                  seed: int = 0, mesh=None) -> GroupRuntime:
     rt = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(seed),
                                  lr=1e-3, impl="xla", block_t=8,
                                  remat=False, seed=seed,
                                  chunk_size=chunk_size,
-                                 scan_unroll=unroll)
+                                 scan_unroll=unroll, mesh=mesh)
     rt.run(chunk_size)                       # compile the (n, chunk) step
     return rt
 
 
-def run(quick: bool = False) -> dict:
+def _bench_sharded(cfg, jobs, mesh_spec: str, steps: int, reps: int) -> dict:
+    """Time the sharded chunked runtime on an RxM (data, model) mesh."""
+    import numpy as np
+    r, m = (int(p) for p in mesh_spec.split("x"))
+    n = len(jax.devices())
+    assert r * m <= n, (f"mesh {mesh_spec} needs {r * m} devices, have {n} "
+                       "(run as a script: --mesh forces the device count)")
+    mesh = jax.make_mesh((r, m), ("data", "model"),
+                         devices=jax.devices()[: r * m])
+    rt = _make_runtime(cfg, jobs, chunk_size=CHUNK, unroll=False, mesh=mesh)
+    # fast-path evidence: equal per-shard segments and an equal-divisible
+    # local token count mean the kernels keep the segment-dense reshape
+    # dispatch — no dense-over-K fallback anywhere in the sharded step
+    D = rt.data_shards
+    rows_loc = [x // D for x in rt.batcher.rows_per_job()]
+    ids_loc = rt.batcher.adapter_ids[:sum(rows_loc)]
+    import jax.numpy as jnp
+    ctx = rt.ssm.lora_ctx(jnp.asarray(ids_loc), axis_name="data")
+    tokens_loc = sum(rows_loc) * jobs[0].seq_len
+    fast = bool(ctx.equal_segments and tokens_loc % len(jobs) == 0)
+    t_sh = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rt.run(steps)
+        t_sh = min(t_sh, (time.perf_counter() - t0) / steps)
+    last = np.asarray(rt.report.per_job_losses[-1])
+    assert np.all(np.isfinite(last)), last
+    print(f"  sharded {mesh_spec:5s} {t_sh*1e3:7.2f} ms/step "
+          f"({D}-way rows, fast_path={fast})")
+    return {"mesh": mesh_spec, "sharded_ms": t_sh * 1e3,
+            "sharded_shards": D, "sharded_fast_path": fast,
+            "sharded_grad_sync": rt.grad_sync}
+
+
+def run(quick: bool = False, mesh: str | None = None) -> dict:
     banner("Step loop: per-step host sync vs chunked device-resident")
     cfg = get_config("tinyllama-1.1b").reduced()
     jobs = [LoRAJobSpec(f"j{i}", rank=(8, 16)[i % 2], batch_size=1,
@@ -114,10 +188,19 @@ def run(quick: bool = False) -> dict:
         "fuser_K": K_fuser,
         "fused_vs_unfused_x": fused_x,
     }
+    if mesh is not None:
+        out.update(_bench_sharded(cfg, jobs, mesh, steps, reps))
     OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
     print(f"  wrote {OUT_PATH}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="RxM (data, model) mesh for the sharded row, "
+                         "e.g. 4x2 (forces virtual host devices)")
+    a = ap.parse_args()
+    run(quick=a.quick, mesh=a.mesh)

@@ -54,13 +54,24 @@ class ExecutionBackend:
     def __init__(self, *, steps_per_measure: int = 2,
                  models: Sequence[str] = EXECUTABLE_MODELS,
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
-                 remat: bool = False, seed: int = 0):
+                 remat: bool = False, mesh=None, data_axis: str = "data",
+                 grad_sync: str = "gather", tp_mode: str = "dp",
+                 seed: int = 0):
         assert steps_per_measure >= 2, \
             "need >=2 steps so min() discards the jit-compile outlier"
         self.steps_per_measure = steps_per_measure
         self.models = tuple(models)
+        # mesh: measure on a real sharded mesh (DESIGN.md §8) so the
+        # oracle is validated against distributed execution, not a
+        # single-device proxy.  The default ref impl has no shard-local
+        # VJP for exact gathered wgrads — fall back to the classic
+        # psum strategy instead of failing at measurement time.
+        if mesh is not None and impl in ("ref", "loop"):
+            grad_sync = "psum"
         self._engine_kwargs = dict(impl=impl, block_t=block_t, lr=lr,
-                                   remat=remat, seed=seed)
+                                   remat=remat, seed=seed, mesh=mesh,
+                                   data_axis=data_axis,
+                                   grad_sync=grad_sync, tp_mode=tp_mode)
         self._engines: Dict[str, ElasticEngine] = {}
         self.records: List[StepRecord] = []
 

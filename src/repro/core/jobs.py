@@ -2,10 +2,36 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 DEFAULT_TARGETS = ("q", "k", "v", "o")   # per paper: attention projections
+
+
+def tile_rows(batch_size: int, seq_len: int, block_t: int,
+              shards: int = 1) -> int:
+    """Tile-aligned (and shard-aligned) row count for one job's segment.
+
+    The fused-kernel contract needs every job's token count to be a
+    multiple of ``block_t``.  Under sharded group execution (DESIGN.md
+    §8) the same contract must hold PER DATA SHARD: rows are split
+    evenly over ``shards`` devices, so the per-shard row count must
+    itself be token-tile-aligned.  Padding rows carry loss_mask 0 and
+    the owning job's adapter id, so they are exact zeros in every loss
+    and gradient sum (bit-losslessness is preserved — adding 0.0 never
+    rounds).
+
+    This is THE row-count rule: core/ssm.py and data/pipeline.py must
+    agree on it, so both import this helper.
+    """
+    assert shards >= 1
+    if shards == 1 and batch_size * seq_len % block_t == 0:
+        return batch_size
+    # smallest per-shard row granule whose token count is tile-aligned
+    lcm = block_t // math.gcd(block_t, seq_len)
+    granule = lcm * shards
+    return ((batch_size + granule - 1) // granule) * granule
 
 
 @dataclass(frozen=True)

@@ -54,6 +54,18 @@ class MultiLoRA:
     seg_rows: Optional[int] = None    # static max rows per adapter segment
     #                                   (xla capacity; None = all rows)
     equal_segments: bool = False      # every adapter contributes seg_rows
+    # sharded group execution (DESIGN.md §8): set when this context is
+    # applied inside a shard_map over a data axis.  adapter_ids then
+    # covers THIS SHARD's rows only; ``row_solo_pos`` (traced, rides the
+    # batch through nano slicing) is each local row's position in the
+    # solo job-major layout — the exact wgrads scatter into that order;
+    # ``shards`` x ``local_rows`` give the global row count and identify
+    # full-batch (segment-sorted) vs nano-slice applications.
+    axis_name: Optional[str] = None
+    row_solo_pos: Optional[jax.Array] = None
+    shards: int = 1
+    local_rows: Optional[int] = None
+    grad_sync: str = "gather"         # gather (exact wgrads) | psum
 
     @property
     def num_adapters(self) -> int:
@@ -74,10 +86,24 @@ class MultiLoRA:
         eq = (self.equal_segments
               and self.seg_rows is not None
               and bsz == self.seg_rows * self.num_adapters)
+        # shard-local VJPs only when grads must be exact-by-gather; the
+        # psum strategy reduces the plain impls' partial wgrads upstream
+        axis = self.axis_name if self.grad_sync == "gather" else None
+        solo_pos, total = None, 0
+        if axis is not None:
+            rp = self.row_solo_pos
+            assert rp is not None, \
+                ("sharded gather context needs row_solo_pos (each local "
+                 "row's solo position) — see core/ssm lora_ctx")
+            solo_pos = (rp[:, None] * seq
+                        + jnp.arange(seq, dtype=rp.dtype)[None, :]).reshape(-1)
+            total = self.shards * self.local_rows * seq
         out = ops.fused_lora(
             xf, A.astype(x.dtype), B.astype(x.dtype), ids,
             self.ranks, self.scalings, impl=self.impl, block_t=self.block_t,
-            capacity=cap, equal_segments=eq)
+            capacity=cap, equal_segments=eq,
+            axis_name=axis, solo_pos=solo_pos, total_tokens=total,
+            full_batch=bsz == self.local_rows)
         return out.reshape(bsz, seq, B.shape[-1])
 
 

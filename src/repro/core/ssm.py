@@ -18,6 +18,7 @@ parallelism planner — here XLA GSPMD via ``jax.jit`` + ``NamedSharding``
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -40,6 +41,10 @@ class SharedSuperModel:
     jobs: List[LoRAJobSpec]
     impl: str = "ref"            # fused-LoRA kernel impl (ref|pallas|xla|loop)
     block_t: int = 8             # token tile (128 on real TPU)
+    data_shards: int = 1         # data-parallel degree (DESIGN.md §8):
+    #                              row counts pad so every job splits evenly
+    #                              over the shards with per-shard tile
+    #                              alignment; 1 = single-device semantics
 
     ranks: np.ndarray = field(init=False)
     scalings: np.ndarray = field(init=False)
@@ -69,28 +74,47 @@ class SharedSuperModel:
         return params, adapters
 
     def _rows_for(self, job: LoRAJobSpec) -> int:
-        """Tile-aligned row count per job (mirrors FusedBatcher layout)."""
-        import math
-        if job.batch_size * job.seq_len % self.block_t == 0:
-            return job.batch_size
-        lcm = self.block_t // math.gcd(self.block_t, job.seq_len)
-        return ((job.batch_size + lcm - 1) // lcm) * lcm
+        """Tile/shard-aligned row count per job (mirrors FusedBatcher)."""
+        from repro.core.jobs import tile_rows
+        return tile_rows(job.batch_size, job.seq_len, self.block_t,
+                         shards=self.data_shards)
 
-    def lora_ctx(self, adapter_ids: jax.Array) -> MultiLoRA:
-        rows = [self._rows_for(j) for j in self.jobs]
+    def rows_per_job(self) -> List[int]:
+        return [self._rows_for(j) for j in self.jobs]
+
+    def lora_ctx(self, adapter_ids: jax.Array, *,
+                 axis_name: Optional[str] = None,
+                 row_solo_pos: Optional[jax.Array] = None,
+                 grad_sync: str = "gather") -> MultiLoRA:
+        """Apply context.  With ``axis_name`` the context is shard-local:
+        *adapter_ids* covers one data shard's rows, segment geometry is
+        the per-shard layout (global rows / data_shards), and the exact
+        wgrads reassemble solo order via *row_solo_pos*."""
+        rows = self.rows_per_job()
+        if axis_name is not None:
+            rows = [r // self.data_shards for r in rows]
         return MultiLoRA(adapter_ids=adapter_ids,
                          ranks=jnp.asarray(self.ranks),
                          scalings=jnp.asarray(self.scalings),
                          impl=self.impl, block_t=self.block_t,
                          seg_rows=max(rows),
-                         equal_segments=len(set(rows)) == 1)
+                         equal_segments=len(set(rows)) == 1,
+                         axis_name=axis_name,
+                         row_solo_pos=row_solo_pos,
+                         shards=self.data_shards,
+                         local_rows=(sum(rows) if axis_name is not None
+                                     else None),
+                         grad_sync=grad_sync)
 
     # --------------------------------------------------------- train step
     def make_train_step(self, *, lr_fn: Callable, nano_batches: int = 1,
                         remat: bool = True,
                         weight_decay: float = 0.0,
                         steps: Optional[int] = None,
-                        unroll: bool = False) -> Callable:
+                        unroll: bool = False,
+                        mesh=None, data_axis: str = "data",
+                        grad_sync: str = "gather",
+                        tp_mode: str = "dp") -> Callable:
         """Build the fused train step (grad-accumulated over nano-batches).
 
         Nano-batching (§3.3) splits the fused batch along the batch dim
@@ -109,8 +133,34 @@ class SharedSuperModel:
         cost real per-iteration overhead on some backends; unrolling
         trades ~chunk× compile time for loop-free step code — the perf
         configuration used by benchmarks/bench_step_loop.py).
+
+        ``mesh`` != None returns the SHARDED variant (DESIGN.md §8): the
+        whole step (chunk scan included) runs under ``shard_map``, with
+        fused batch rows sharded in the shard-major layout of
+        ``data/pipeline.shard_permutation`` and adapters + optimizer
+        state replicated (that IS the paper's memory win — §5).
+        ``tp_mode`` places the non-data mesh axes: "dp" (default) folds
+        EVERY mesh axis into execution-time row sharding (full-manual
+        shard_map, collectives over the flattened axis tuple); "auto"
+        keeps rows over *data_axis* only and leaves the remaining axes
+        to GSPMD as partial-auto tensor parallelism driven by the
+        name-driven rules + the backbone's sharding constraints —
+        currently blocked on CPU XLA for scan-bearing models (see
+        DESIGN.md §8 limitations).  ``grad_sync`` picks the cross-shard
+        gradient strategy: "gather" (default) makes adapter grads
+        bit-exact w.r.t. solo execution via the shard-local kernel
+        VJPs; "psum" reduces partial wgrads with one all-reduce per
+        adapter leaf (cheaper, float-associativity-close instead of
+        bit-equal, and the only mode the autodiffed "ref"/"loop" impls
+        support).
         """
         cfg, K = self.cfg, self.num_jobs
+        if mesh is not None:
+            return self._make_sharded_step(
+                lr_fn=lr_fn, nano_batches=nano_batches, remat=remat,
+                weight_decay=weight_decay, steps=steps, unroll=unroll,
+                mesh=mesh, data_axis=data_axis, grad_sync=grad_sync,
+                tp_mode=tp_mode)
 
         def train_step(params, adapters, opt_state, batch):
             denom = _per_job_token_counts(batch, K, causal=cfg.causal)
@@ -167,6 +217,150 @@ class SharedSuperModel:
 
         return chunked_step
 
+    def _make_sharded_step(self, *, lr_fn, nano_batches, remat,
+                           weight_decay, steps, unroll, mesh, data_axis,
+                           grad_sync, tp_mode) -> Callable:
+        """shard_map-wrapped train step — see make_train_step docstring.
+
+        The body is the exact single-device train step evaluated on this
+        shard's rows: per-job token denominators are psum'ed (integer-
+        valued f32 sums — exact in any order), the loss the gradient
+        flows through is the shard's partial (its cotangents are the
+        same 1/denom scalars solo produces), and cross-token adapter
+        wgrads are either gathered-exact (kernels/ops.py shard-local
+        VJPs) or psum'ed.  The optimizer then updates replicated state
+        identically on every shard.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.data.pipeline import shard_permutation
+
+        cfg, K = self.cfg, self.num_jobs
+        if tp_mode == "dp":
+            # every mesh axis contributes row sharding (full manual)
+            dp_axes = tuple(mesh.axis_names)
+        else:
+            assert tp_mode == "auto", tp_mode
+            dp_axes = (data_axis,)
+        axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        D = int(math.prod(int(mesh.shape[a]) for a in dp_axes))
+        assert self.data_shards == D, \
+            (f"SSM built for data_shards={self.data_shards}, mesh "
+             f"executes {D}-way — construct SharedSuperModel("
+             f"data_shards={D})")
+        rows = self.rows_per_job()
+        rows_loc = [r // D for r in rows]
+        exact = grad_sync == "gather"
+        if exact and self.impl in ("ref", "loop"):
+            raise ValueError(
+                f"impl={self.impl!r} has no shard-local VJP for exact "
+                "gathered wgrads; use impl='xla'/'pallas' or "
+                "grad_sync='psum'")
+        # solo position of each shard-major row: shardmajor[p] holds solo
+        # row perm[p], so the (R,) perm itself, sharded over the dp
+        # axes, hands every shard its rows' solo positions (shard
+        # identity without axis_index — unsupported under partial-auto
+        # on this backend)
+        perm = shard_permutation(rows, D)
+        if nano_batches > 1:
+            g = math.gcd(*rows_loc)
+            assert g % nano_batches == 0, \
+                (f"nano_batches={nano_batches} must divide every job's "
+                 f"per-shard rows {rows_loc}")
+        # XLA's SPMD partitioner cannot take grad-through-scan inside a
+        # partially-manual shard_map: with a live (>1) GSPMD "model"
+        # axis the layer scan must unroll (same per-layer math — the
+        # lossless contract is unaffected; see _apply_segment)
+        auto = frozenset(a for a in mesh.axis_names if a not in dp_axes)
+        unroll_layers = any(int(mesh.shape[a]) > 1 for a in auto)
+
+        def train_step(params, adapters, opt_state, batch, row_solo):
+            # batch: THIS shard's rows (shard-major layout, job-major
+            # within the shard).  Denominators are global — psum of
+            # integer-valued counts is exact; clip AFTER the psum (a
+            # per-shard clip would inflate jobs whose shard slice is
+            # all padding).
+            denom = jnp.clip(jax.lax.psum(
+                _per_job_token_counts(batch, K, causal=cfg.causal,
+                                      clip=False), axis), 1)
+
+            def nano_loss(ad, nb):
+                nb = dict(nb)
+                rp = nb.pop("_row_solo")
+                lora = self.lora_ctx(nb["adapter_ids"],
+                                     axis_name=axis,
+                                     row_solo_pos=rp,
+                                     grad_sync=grad_sync)
+                return M.loss_fn(cfg, params, ad, lora, nb, remat=remat,
+                                 per_job_denom=denom,
+                                 unroll_layers=unroll_layers)
+
+            grad_fn = jax.grad(nano_loss, has_aux=True)
+            batch = dict(batch)
+            batch["_row_solo"] = row_solo
+
+            if nano_batches == 1:
+                grads, aux = grad_fn(adapters, batch)
+                per_job = aux["per_job"]
+            else:
+                nb_batch = _reshape_nano_jobwise(batch, nano_batches,
+                                                 rows_loc)
+                zero_g = jax.tree.map(
+                    lambda a: jnp.zeros(a.shape, jnp.float32), adapters)
+
+                def body(carry, nb):
+                    g_acc, pj_acc = carry
+                    g, aux = grad_fn(adapters, nb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, pj_acc + aux["per_job"]), None
+
+                (grads, per_job), _ = jax.lax.scan(
+                    body, (zero_g, jnp.zeros((K,), jnp.float32)), nb_batch)
+
+            if not exact:
+                # classic DP: one all-reduce per adapter leaf; metrics too
+                grads = jax.tree.map(
+                    lambda g: jax.lax.psum(g, axis), grads)
+                per_job = jax.lax.psum(per_job, axis)
+            lr = lr_fn(opt_state.step)
+            new_adapters, new_opt = adamw.update(
+                grads, opt_state, adapters, lr=lr,
+                weight_decay=weight_decay)
+            metrics = {"loss": per_job.sum(), "per_job_loss": per_job,
+                       "lr": lr}
+            return new_adapters, new_opt, metrics
+
+        if steps is None:
+            inner, batch_lead = train_step, ()
+        else:
+            def chunked_step(params, adapters, opt_state, batches,
+                             row_solo):
+                def body(carry, b):
+                    ad, opt = carry
+                    ad, opt, m = train_step(params, ad, opt, b, row_solo)
+                    return (ad, opt), m
+
+                (new_adapters, new_opt), metrics = jax.lax.scan(
+                    body, (adapters, opt_state), batches, unroll=unroll)
+                return new_adapters, new_opt, metrics
+
+            inner, batch_lead = chunked_step, (None,)
+
+        row_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        batch_spec = P(*batch_lead, row_spec)
+
+        def stepfn(params, adapters, opt_state, batches):
+            b_specs = jax.tree.map(lambda _: batch_spec, batches)
+            fn = shard_map(inner, mesh=mesh,
+                           in_specs=(P(), P(), P(), b_specs, P(row_spec)),
+                           out_specs=(P(), P(), P()),
+                           check_rep=False, auto=auto)
+            return fn(params, adapters, opt_state, batches,
+                      jnp.asarray(perm, jnp.int32))
+
+        return stepfn
+
     # --------------------------------------------------------- serve steps
     def make_prefill_step(self, shape: InputShape, *, ring: bool = False,
                           with_cache: bool = True) -> Callable:
@@ -209,8 +403,14 @@ class SharedSuperModel:
 
 
 # --------------------------------------------------------------- helpers
-def _per_job_token_counts(batch: dict, K: int, causal: bool) -> jax.Array:
-    """Full-batch per-job loss-token counts (denominators)."""
+def _per_job_token_counts(batch: dict, K: int, causal: bool,
+                          clip: bool = True) -> jax.Array:
+    """Full-batch per-job loss-token counts (denominators).
+
+    ``clip=False`` returns the raw counts — REQUIRED for per-shard
+    partials that are psum'ed into a global denominator: clipping must
+    happen once on the global sum, or shards holding only padding rows
+    would each contribute a spurious 1."""
     ids = batch["adapter_ids"]
     mask = batch.get("loss_mask")
     if mask is None:
@@ -221,7 +421,8 @@ def _per_job_token_counts(batch: dict, K: int, causal: bool) -> jax.Array:
         m = mask[:, 1:] if causal else mask
         counts = m.astype(jnp.float32).sum(-1)
     onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
-    return jnp.clip(onehot.T @ counts, 1)
+    raw = onehot.T @ counts
+    return jnp.clip(raw, 1) if clip else raw
 
 
 def _reshape_nano(batch: dict, n: int) -> dict:
@@ -229,6 +430,29 @@ def _reshape_nano(batch: dict, n: int) -> dict:
     def f(x):
         assert x.shape[0] % n == 0, (x.shape, n)
         return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def _reshape_nano_jobwise(batch: dict, n: int, rows: Sequence[int]) -> dict:
+    """Job-aware nano split for the sharded step: slice *i* takes rows
+    ``[i*r_j/n, (i+1)*r_j/n)`` of EVERY job, so each slice is itself a
+    job-major mini fused batch — the per-shard kernel contract (sorted
+    contiguous segments, equal composition) survives re-granulation.
+    The plain contiguous split would hand slices dominated by one job,
+    whose ids break the equal-segment reshape dispatch.
+    """
+    offs = np.concatenate([[0], np.cumsum(rows)])
+    idx = np.concatenate([
+        np.arange(offs[j] + i * (r // n), offs[j] + (i + 1) * (r // n))
+        for i in range(n) for j, r in enumerate(rows)])
+    idx = jnp.asarray(idx, jnp.int32)
+    R = int(sum(rows))
+
+    def f(x):
+        assert x.shape[0] == R and all(r % n == 0 for r in rows), \
+            (x.shape, rows, n)
+        return jnp.take(x, idx, axis=0).reshape(n, R // n, *x.shape[1:])
+
     return jax.tree.map(f, batch)
 
 

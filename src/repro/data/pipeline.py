@@ -20,7 +20,7 @@ from typing import Dict, Iterator, List, Optional, Sequence
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.jobs import LoRAJobSpec
+from repro.core.jobs import LoRAJobSpec, tile_rows
 
 # GSM8K-like length model (log-normal, clipped) — mean ~190, p95 ~420.
 _GSM8K_MU, _GSM8K_SIGMA = 5.1, 0.45
@@ -69,12 +69,19 @@ class FusedBatcher:
 
     def __init__(self, jobs: Sequence[LoRAJobSpec], vocab_size: int,
                  block_t: int = 128, seed: int = 0,
-                 streams: Optional[Sequence[JobStream]] = None):
+                 streams: Optional[Sequence[JobStream]] = None,
+                 shards: int = 1):
         assert len({j.seq_len for j in jobs}) == 1, \
             "group members must share seq_len (scheduler invariant)"
         self.jobs = list(jobs)
         self.seq_len = jobs[0].seq_len
         self.block_t = block_t
+        # shards > 1: pad every job's rows so they split evenly over the
+        # data-parallel shards with per-shard tile alignment (DESIGN.md
+        # §8).  The batch layout stays the solo job-major order — the
+        # sharded runtime permutes rows at staging time (shard_permutation)
+        # so the per-job STREAMS consume identical data regardless of mesh.
+        self.shards = shards
         if streams is None:
             streams = [JobStream(j, vocab_size, seed) for j in jobs]
         else:
@@ -85,14 +92,8 @@ class FusedBatcher:
         self.streams = list(streams)
 
     def _rows_for(self, job: LoRAJobSpec) -> int:
-        tile = self.block_t
-        tokens = job.batch_size * self.seq_len
-        if tokens % tile == 0:
-            return job.batch_size
-        # pad rows until token count tile-aligned (seq_len usually aligns)
-        import math
-        lcm = tile // math.gcd(tile, self.seq_len)
-        return ((job.batch_size + lcm - 1) // lcm) * lcm
+        return tile_rows(job.batch_size, self.seq_len, self.block_t,
+                         shards=self.shards)
 
     def next_batch(self) -> Dict[str, np.ndarray]:
         toks, labels, masks, aids = [], [], [], []
@@ -128,3 +129,37 @@ class FusedBatcher:
 
     def total_rows(self) -> int:
         return int(sum(self._rows_for(j) for j in self.jobs))
+
+    def rows_per_job(self) -> List[int]:
+        return [self._rows_for(j) for j in self.jobs]
+
+
+# ----------------------------------------------------------- shard layout
+def shard_permutation(rows: Sequence[int], shards: int) -> np.ndarray:
+    """Row permutation taking the solo job-major fused batch to the
+    shard-major layout of DESIGN.md §8.
+
+    ``perm[p] = solo index of the row at shard-major position p``: shard
+    s holds, for every job j, its rows ``[s*rows_j/shards,
+    (s+1)*rows_j/shards)`` concatenated job-major — so every shard is a
+    tile-aligned mini fused batch with the SAME job composition and
+    per-adapter segment offsets = global offsets / shards.
+    """
+    assert all(r % shards == 0 for r in rows), (rows, shards)
+    offs = np.concatenate([[0], np.cumsum(rows)])
+    out = []
+    for s in range(shards):
+        for j, r in enumerate(rows):
+            rl = r // shards
+            out.append(np.arange(offs[j] + s * rl, offs[j] + (s + 1) * rl))
+    return np.concatenate(out).astype(np.int64)
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    """inv with inv[perm[p]] = p — maps a solo row index to its
+    shard-major position.  The runtime itself never un-permutes (the
+    exact wgrads scatter by solo position — kernels/ops.gather_solo);
+    this is the layout-validation half, used by the sharded tests."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size, dtype=perm.dtype)
+    return inv

@@ -44,6 +44,8 @@ class ElasticEngine:
                  lr_fn: Optional[Callable] = None, remat: bool = True,
                  nano_batches: int = 1, adaptive_nano: bool = False,
                  weight_decay: float = 0.0, chunk_size: int = 4,
+                 mesh=None, data_axis: str = "data",
+                 grad_sync: str = "gather", tp_mode: str = "dp",
                  seed: int = 0):
         self.cfg = cfg
         self._key = key if key is not None else jax.random.PRNGKey(seed)
@@ -52,12 +54,17 @@ class ElasticEngine:
         self.scheduler = scheduler or AdapterScheduler(cfg)
         self.block_t = block_t
         self.seed = seed
+        # mesh: every group this engine builds runs sharded (DESIGN.md
+        # §8); migration state (JobTrainState) is mesh-agnostic, so jobs
+        # move losslessly between engines of different meshes.
         self._rt_kwargs = dict(impl=impl, block_t=block_t, lr=lr,
                                lr_fn=lr_fn, remat=remat,
                                nano_batches=nano_batches,
                                adaptive_nano=adaptive_nano,
                                weight_decay=weight_decay,
-                               chunk_size=chunk_size, seed=seed)
+                               chunk_size=chunk_size, seed=seed,
+                               mesh=mesh, data_axis=data_axis,
+                               grad_sync=grad_sync, tp_mode=tp_mode)
         self._parked: Dict[str, JobTrainState] = {}   # active, not grouped
         self._runtimes: Dict[GroupKey, GroupRuntime] = {}
         self.finished: Dict[str, JobTrainState] = {}

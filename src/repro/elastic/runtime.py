@@ -74,28 +74,87 @@ class GroupRuntime:
                  nano_batches: int = 1, adaptive_nano: bool = False,
                  remat: bool = True, weight_decay: float = 0.0,
                  chunk_size: int = 4, scan_unroll: bool = False,
+                 mesh=None, data_axis: str = "data",
+                 grad_sync: str = "gather", tp_mode: str = "dp",
                  seed: int = 0):
         self.cfg = cfg
-        self.params = params
         self.specs = list(specs)
+        # sharded group execution (DESIGN.md §8): fused batch rows shard
+        # over the mesh (every axis in tp_mode="dp", the data axis only
+        # in tp_mode="auto" where the rest is GSPMD tensor parallelism);
+        # adapters + optimizer state replicate.  mesh=None keeps
+        # single-device semantics.
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.grad_sync = grad_sync
+        self.tp_mode = tp_mode
+        if mesh is None:
+            D = 1
+        elif tp_mode == "dp":
+            import math
+            D = int(math.prod(int(s) for s in mesh.shape.values()))
+        else:
+            D = int(mesh.shape[data_axis])
+        if mesh is not None and grad_sync == "gather" \
+                and impl in ("ref", "loop"):
+            # fail at construction, not after staging/compile: the
+            # autodiffed oracles have no shard-local VJP (DESIGN.md §8)
+            raise ValueError(
+                f"impl={impl!r} has no shard-local VJP for exact gathered "
+                "wgrads; use impl='xla'/'pallas' or grad_sync='psum'")
+        self.data_shards = D
         self.ssm = SharedSuperModel(cfg, self.specs, impl=impl,
-                                    block_t=block_t)
+                                    block_t=block_t, data_shards=D)
         self.batcher = FusedBatcher(self.specs, cfg.vocab_size,
                                     block_t=block_t, seed=seed,
-                                    streams=streams)
+                                    streams=streams, shards=D)
         # own (copy) the trainable state: run() donates these buffers to
         # the chunked step, which would otherwise silently invalidate
         # caller-held references to restored/pre-built arrays
-        self.adapters = jax.tree.map(jnp.array, adapters)
-        self.opt_state = jax.tree.map(jnp.array, opt_state)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.data.pipeline import shard_permutation
+            from repro.sharding import rules
+            repl = NamedSharding(mesh, PartitionSpec())
+            # tp_mode="dp": params replicate (full-manual shard_map);
+            # "auto": the name-driven rules place them for GSPMD TP
+            self.params = jax.device_put(
+                params, repl if tp_mode == "dp"
+                else rules.runtime_param_shardings(mesh, params))
+            # copy BEFORE placing: device_put aliases when the source
+            # already has the target sharding (e.g. state exported from
+            # a runtime on the same mesh), and donation would then
+            # delete the caller's buffers
+            self.adapters = jax.device_put(
+                jax.tree.map(jnp.array, adapters), repl)
+            self.opt_state = jax.device_put(
+                jax.tree.map(jnp.array, opt_state), repl)
+            self._perm = shard_permutation(self.batcher.rows_per_job(), D)
+            row_axes = (tuple(mesh.axis_names) if tp_mode == "dp"
+                        else data_axis)
+            self._batch_sharding = NamedSharding(
+                mesh, PartitionSpec(None, row_axes))
+        else:
+            self.params = params
+            self.adapters = jax.tree.map(jnp.array, adapters)
+            self.opt_state = jax.tree.map(jnp.array, opt_state)
+            self._perm = None
+            self._batch_sharding = None
         self.steps_done: Dict[str, int] = dict(
             steps_done or {s.job_id: 0 for s in self.specs})
         self.lr_fn = lr_fn or constant(lr)
         self.remat = remat
         self.weight_decay = weight_decay
-        rows = self.batcher.total_rows()
-        self.aimd = AIMDController(rows=rows, n=nano_batches,
-                                   max_n=min(rows, 16)) \
+        if D > 1:
+            # legal nano counts must divide EVERY job's per-shard rows
+            # (the job-aware nano split keeps per-slice composition equal)
+            import math
+            nano_rows = math.gcd(*[r // D
+                                   for r in self.batcher.rows_per_job()])
+        else:
+            nano_rows = self.batcher.total_rows()
+        self.aimd = AIMDController(rows=nano_rows, n=nano_batches,
+                                   max_n=min(nano_rows, 16)) \
             if adaptive_nano else None
         self.n = nano_batches
         self.chunk_size = max(1, chunk_size)
@@ -163,15 +222,38 @@ class GroupRuntime:
                                           remat=self.remat,
                                           weight_decay=self.weight_decay,
                                           steps=chunk,
-                                          unroll=self.scan_unroll)
-            self._step_cache[key] = jax.jit(
-                fn, donate_argnums=(1, 2)).lower(*args).compile()
+                                          unroll=self.scan_unroll,
+                                          mesh=self.mesh,
+                                          data_axis=self.data_axis,
+                                          grad_sync=self.grad_sync,
+                                          tp_mode=self.tp_mode)
+            jitted = jax.jit(fn, donate_argnums=(1, 2))
+            if self.mesh is None or self.tp_mode == "dp":
+                # full-manual shard_map: no GSPMD axes to constrain
+                self._step_cache[key] = jitted.lower(*args).compile()
+            else:
+                # trace with the mesh active so the backbone's logical
+                # sharding constraints resolve onto its auto axes (TP /
+                # sequence parallelism over "model"); the manual data
+                # axis is excluded — inside shard_map it is local.
+                from repro.sharding import use_mesh
+                with use_mesh(self.mesh, manual=(self.data_axis,)):
+                    self._step_cache[key] = jitted.lower(*args).compile()
         return self._step_cache[key]
 
     def _stage(self, n: int):
-        """Stage the next *n* fused batches on device (leading chunk axis)."""
-        return {k: jnp.asarray(v)
-                for k, v in self.batcher.next_batches(n).items()}
+        """Stage the next *n* fused batches on device (leading chunk axis).
+
+        Sharded mode permutes rows into the shard-major layout (each
+        shard: every job's next rows/D rows, job-major — see
+        data/pipeline.shard_permutation) and places each leaf with rows
+        over the data axis, so the host->device transfer is already the
+        final layout (no device-side reshard)."""
+        batches = self.batcher.next_batches(n)
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batches.items()}
+        return {k: jax.device_put(v[:, self._perm], self._batch_sharding)
+                for k, v in batches.items()}
 
     def run(self, steps: int,
             log: Optional[Callable[[str], None]] = None,

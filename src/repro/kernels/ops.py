@@ -19,6 +19,18 @@ Interpret mode: kernels default to the Pallas interpreter (CPU CI).  On a
 real TPU backend set ``REPRO_INTERPRET=0`` in the environment, or call
 ``set_interpret(False)`` before building any train step — no source edit
 required.
+
+Shard-local variants (DESIGN.md §8): under ``shard_map`` over a data
+axis, each device holds a tile-aligned mini fused batch (per-adapter
+segment offsets = global offsets / shards).  ``fused_lora`` with
+``axis_name=...`` dispatches to custom VJPs whose forward and dx passes
+are purely shard-local (per-token, bit-identical to solo), and whose
+wgrads all-gather the token operands over the data axis, un-permute
+them into the solo job-major row order, and evaluate the SAME wgrad
+expressions as the solo VJPs at full shape — making sharded adapter
+gradients bit-exact w.r.t. single-device execution (the paper's
+lossless contract survives the mesh).  The cheaper partial-wgrad+psum
+strategy lives one level up (core/ssm.py, grad_sync="psum").
 """
 from __future__ import annotations
 
@@ -52,6 +64,7 @@ def set_interpret(flag: bool) -> None:
     global _INTERPRET
     _INTERPRET = bool(flag)
     _make_pallas_fn.cache_clear()
+    _make_pallas_sharded_fn.cache_clear()
 
 
 def get_interpret() -> bool:
@@ -72,6 +85,90 @@ def _int_zeros(a) -> np.ndarray:
 
 
 # ------------------------------------------------------------------ xla
+def _xla_forward(x, A, B, ids, ranks, scalings, equal_segments: bool):
+    """Forward formulas shared by the solo and shard-local VJPs (sharing
+    the literal expressions is what makes the sharded path bit-exact)."""
+    T, d_in = x.shape
+    K, _, r_pad = A.shape
+    lane = jnp.arange(r_pad)
+
+    if equal_segments and T % K == 0:
+        buf = x.reshape(K, T // K, d_in)               # adapter-major
+        xa = jnp.einsum("kcd,kdr->kcr", buf, A,
+                        preferred_element_type=jnp.float32)
+        xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                       xa, 0.0).astype(x.dtype)
+        y = jnp.einsum("kcr,kro->kco", xa, B,
+                       preferred_element_type=jnp.float32)
+        y = y * scalings[:, None, None]
+        return y.reshape(T, -1).astype(x.dtype)
+
+    # fallback: dense over K with a one-hot combine (exact, no scatter)
+    onehot = jax.nn.one_hot(ids, K, dtype=x.dtype)     # (T, K)
+    xa = jnp.einsum("td,kdr->tkr", x, A,
+                    preferred_element_type=jnp.float32)
+    xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                   xa, 0.0).astype(x.dtype)
+    y = jnp.einsum("tkr,kro->tko", xa, B,
+                   preferred_element_type=jnp.float32)
+    y = y * scalings[None, :, None]
+    return jnp.einsum("tko,tk->to", y, onehot.astype(jnp.float32)
+                      ).astype(x.dtype)
+
+
+def _xla_equal_parts(x, A, B, ranks, scalings, dy):
+    """(buf, dy_s, xa, dxa) of the equal-segment backward — per-token
+    quantities, evaluated at whatever shape *x* has (local or gathered)."""
+    T, d_in = x.shape
+    K, _, r_pad = A.shape
+    lane = jnp.arange(r_pad)
+    C = T // K
+    buf = x.reshape(K, C, d_in)
+    dy_s = (dy.reshape(K, C, -1).astype(jnp.float32)
+            * scalings[:, None, None])
+    # recompute the compact intermediate (cheap: 2*T*d*r flops)
+    xa = jnp.einsum("kcd,kdr->kcr", buf, A,
+                    preferred_element_type=jnp.float32)
+    xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                   xa, 0.0).astype(x.dtype)
+    dxa = jnp.einsum("kco,kro->kcr", dy_s, B.astype(jnp.float32))
+    dxa = jnp.where(lane[None, None, :] < ranks[:, None, None],
+                    dxa, 0.0)
+    return buf, dy_s, xa, dxa
+
+
+def _xla_equal_wgrads(buf, dy_s, xa, dxa):
+    # segment-dense wgrads: one batched GEMM pair, no K densify
+    dA = jnp.einsum("kcd,kcr->kdr", buf.astype(jnp.float32), dxa)
+    dB = jnp.einsum("kcr,kco->kro", xa.astype(jnp.float32), dy_s)
+    return dA, dB
+
+
+def _xla_fallback_parts(x, A, B, ids, ranks, scalings, dy):
+    """(dy_k, xa, dxa) of the dense-over-K backward — the one-hot
+    weighting in dy_k zeroes foreign-adapter terms, so dxa is already
+    segment-sparse and dA/dB need no one-hot."""
+    K, _, r_pad = A.shape
+    lane = jnp.arange(r_pad)
+    onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
+    dy_k = (dy.astype(jnp.float32)[:, None, :]
+            * onehot[:, :, None] * scalings[None, :, None])
+    xa = jnp.einsum("td,kdr->tkr", x, A,
+                    preferred_element_type=jnp.float32)
+    xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                   xa, 0.0).astype(x.dtype)
+    dxa = jnp.einsum("tko,kro->tkr", dy_k, B.astype(jnp.float32))
+    dxa = jnp.where(lane[None, None, :] < ranks[None, :, None],
+                    dxa, 0.0)
+    return dy_k, xa, dxa
+
+
+def _xla_fallback_wgrads(x, dy_k, xa, dxa):
+    dA = jnp.einsum("td,tkr->kdr", x.astype(jnp.float32), dxa)
+    dB = jnp.einsum("tkr,tko->kro", xa.astype(jnp.float32), dy_k)
+    return dA, dB
+
+
 @functools.lru_cache(maxsize=4)
 def _make_xla_fn(equal_segments: bool):
     """Build the custom-VJP segment-dense path (static segment layout).
@@ -95,32 +192,7 @@ def _make_xla_fn(equal_segments: bool):
 
     @jax.custom_vjp
     def f(x, A, B, ids, ranks, scalings):
-        T, d_in = x.shape
-        K, _, r_pad = A.shape
-        lane = jnp.arange(r_pad)
-
-        if equal_segments and T % K == 0:
-            buf = x.reshape(K, T // K, d_in)               # adapter-major
-            xa = jnp.einsum("kcd,kdr->kcr", buf, A,
-                            preferred_element_type=jnp.float32)
-            xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
-                           xa, 0.0).astype(x.dtype)
-            y = jnp.einsum("kcr,kro->kco", xa, B,
-                           preferred_element_type=jnp.float32)
-            y = y * scalings[:, None, None]
-            return y.reshape(T, -1).astype(x.dtype)
-
-        # fallback: dense over K with a one-hot combine (exact, no scatter)
-        onehot = jax.nn.one_hot(ids, K, dtype=x.dtype)     # (T, K)
-        xa = jnp.einsum("td,kdr->tkr", x, A,
-                        preferred_element_type=jnp.float32)
-        xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
-                       xa, 0.0).astype(x.dtype)
-        y = jnp.einsum("tkr,kro->tko", xa, B,
-                       preferred_element_type=jnp.float32)
-        y = y * scalings[None, :, None]
-        return jnp.einsum("tko,tk->to", y, onehot.astype(jnp.float32)
-                          ).astype(x.dtype)
+        return _xla_forward(x, A, B, ids, ranks, scalings, equal_segments)
 
     def _fwd(x, A, B, ids, ranks, scalings):
         return f(x, A, B, ids, ranks, scalings), (x, A, B, ids, ranks,
@@ -129,45 +201,19 @@ def _make_xla_fn(equal_segments: bool):
     def _bwd(res, dy):
         x, A, B, ids, ranks, scalings = res
         T, d_in = x.shape
-        K, _, r_pad = A.shape
-        lane = jnp.arange(r_pad)
+        K = A.shape[0]
         Af = A.astype(jnp.float32)
-        Bf = B.astype(jnp.float32)
 
         if equal_segments and T % K == 0:
-            C = T // K
-            buf = x.reshape(K, C, d_in)
-            dy_s = (dy.reshape(K, C, -1).astype(jnp.float32)
-                    * scalings[:, None, None])
-            # recompute the compact intermediate (cheap: 2*T*d*r flops)
-            xa = jnp.einsum("kcd,kdr->kcr", buf, A,
-                            preferred_element_type=jnp.float32)
-            xa = jnp.where(lane[None, None, :] < ranks[:, None, None],
-                           xa, 0.0).astype(x.dtype)
-            dxa = jnp.einsum("kco,kro->kcr", dy_s, Bf)
-            dxa = jnp.where(lane[None, None, :] < ranks[:, None, None],
-                            dxa, 0.0)
+            buf, dy_s, xa, dxa = _xla_equal_parts(x, A, B, ranks, scalings,
+                                                  dy)
             dx = jnp.einsum("kcr,kdr->kcd", dxa, Af).reshape(T, d_in)
-            # segment-dense wgrads: one batched GEMM pair, no K densify
-            dA = jnp.einsum("kcd,kcr->kdr", buf.astype(jnp.float32), dxa)
-            dB = jnp.einsum("kcr,kco->kro", xa.astype(jnp.float32), dy_s)
+            dA, dB = _xla_equal_wgrads(buf, dy_s, xa, dxa)
         else:
-            # mirror of the dense-over-K fallback (test-scale exactness;
-            # the one-hot weighting in dy_k zeroes foreign-adapter terms,
-            # so dxa is already segment-sparse and dA/dB need no one-hot)
-            onehot = jax.nn.one_hot(ids, K, dtype=jnp.float32)
-            dy_k = (dy.astype(jnp.float32)[:, None, :]
-                    * onehot[:, :, None] * scalings[None, :, None])
-            xa = jnp.einsum("td,kdr->tkr", x, A,
-                            preferred_element_type=jnp.float32)
-            xa = jnp.where(lane[None, None, :] < ranks[None, :, None],
-                           xa, 0.0).astype(x.dtype)
-            dxa = jnp.einsum("tko,kro->tkr", dy_k, Bf)
-            dxa = jnp.where(lane[None, None, :] < ranks[None, :, None],
-                            dxa, 0.0)
+            dy_k, xa, dxa = _xla_fallback_parts(x, A, B, ids, ranks,
+                                                scalings, dy)
             dx = jnp.einsum("tkr,kdr->td", dxa, Af)
-            dA = jnp.einsum("td,tkr->kdr", x.astype(jnp.float32), dxa)
-            dB = jnp.einsum("tkr,tko->kro", xa.astype(jnp.float32), dy_k)
+            dA, dB = _xla_fallback_wgrads(x, dy_k, xa, dxa)
 
         # scalings are alpha/r constants — stop-gradient (never trained)
         return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
@@ -188,6 +234,87 @@ def fused_lora_xla(x, A, B, ids, ranks, scalings, capacity=None,
     fallback."""
     del capacity  # segment capacity is implied by the equal-segment layout
     return _make_xla_fn(bool(equal_segments))(x, A, B, ids, ranks, scalings)
+
+
+# ---------------------------------------------------------- shard-local
+def gather_solo(t, axis_name: str, solo_pos, total: int):
+    """Reassemble the full tensor in SOLO order from per-shard pieces.
+
+    Each shard scatters its rows into a zero (total, ...) buffer at
+    their solo positions (``solo_pos``, a sharded input — shard_map
+    partial-auto supports neither all_gather nor axis_index on this
+    backend, and the scatter+psum formulation needs no shard identity),
+    then one psum completes the gather.  Bit-preserving: every output
+    element is its true value plus exact zeros from the other shards,
+    and adding 0.0 never rounds — regardless of psum order.
+    """
+    out = jnp.zeros((total,) + t.shape[1:], t.dtype)
+    out = out.at[solo_pos].set(t, unique_indices=True)
+    return jax.lax.psum(out, axis_name)
+
+
+@functools.lru_cache(maxsize=32)
+def _make_xla_sharded_fn(equal_segments: bool, axis_name: str,
+                         total_tokens: int):
+    """Shard-local xla VJP (DESIGN.md §8).
+
+    Forward and dx run on the local token shard only (per-token math —
+    bit-identical to the solo VJP's per-token values).  The wgrads
+    reassemble x and the cotangent at FULL shape in solo token order
+    (``gather_solo``) and evaluate the SAME wgrad expressions as
+    ``_make_xla_fn`` — so the adapter gradient every shard computes is
+    replicated AND bit-exact w.r.t. solo execution.  Nano-slices
+    reassemble into the full-size buffer with exact-zero rows for the
+    tokens of other slices, which leaves every wgrad value (and, on the
+    full-batch n=1 path, every bit) unchanged.
+
+    ``solo_pos``: (T_local,) solo token position of each local token —
+    a traced operand (it rides the batch through nano slicing), with a
+    float0 cotangent like the other integer operands.
+    """
+    @jax.custom_vjp
+    def f(x, A, B, ids, ranks, scalings, solo_pos):
+        return _xla_forward(x, A, B, ids, ranks, scalings, equal_segments)
+
+    def _fwd(x, A, B, ids, ranks, scalings, solo_pos):
+        return (f(x, A, B, ids, ranks, scalings, solo_pos),
+                (x, A, B, ids, ranks, scalings, solo_pos))
+
+    def _bwd(res, dy):
+        x, A, B, ids, ranks, scalings, solo_pos = res
+        T, d_in = x.shape
+        K = A.shape[0]
+        Af = A.astype(jnp.float32)
+
+        # ---- local: dx (per-token, stays on this shard)
+        if equal_segments and T % K == 0:
+            _, _, _, dxa = _xla_equal_parts(x, A, B, ranks, scalings, dy)
+            dx = jnp.einsum("kcr,kdr->kcd", dxa, Af).reshape(T, d_in)
+        else:
+            _, _, dxa = _xla_fallback_parts(x, A, B, ids, ranks, scalings,
+                                            dy)
+            dx = jnp.einsum("tkr,kdr->td", dxa, Af)
+
+        # ---- global: wgrads from the solo-order full-shape tensors
+        xg = gather_solo(x, axis_name, solo_pos, total_tokens)
+        dyg = gather_solo(dy, axis_name, solo_pos, total_tokens)
+        if equal_segments and total_tokens % K == 0:
+            buf, dy_s, xa, gdxa = _xla_equal_parts(xg, A, B, ranks,
+                                                   scalings, dyg)
+            dA, dB = _xla_equal_wgrads(buf, dy_s, xa, gdxa)
+        else:
+            idg = gather_solo(ids, axis_name, solo_pos, total_tokens)
+            dy_k, xa, gdxa = _xla_fallback_parts(xg, A, B, idg, ranks,
+                                                 scalings, dyg)
+            dA, dB = _xla_fallback_wgrads(xg, dy_k, xa, gdxa)
+
+        return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
+                _int_zeros(ids), _int_zeros(ranks),
+                np.zeros(scalings.shape, jax.dtypes.float0),
+                _int_zeros(solo_pos))
+
+    f.defvjp(_fwd, _bwd)
+    return f
 
 
 # --------------------------------------------------------------- pallas
@@ -251,15 +378,116 @@ def _fused_lora_pallas(x, A, B, ids, ranks, scalings, block_t):
     return _make_pallas_fn(int(block_t))(x, A, B, ids, ranks, scalings)
 
 
+@functools.lru_cache(maxsize=32)
+def _make_pallas_sharded_fn(block_t: int, axis_name: str,
+                            total_tokens: int, full_batch: bool):
+    """Shard-local pallas VJP (DESIGN.md §8): forward + dx are local
+    grouped kernel launches over the shard's token tiles; wgrads
+    reassemble the token operands at full shape in solo order
+    (``gather_solo``) and re-run the SAME grouped-wgrad launches as the
+    solo VJP.  The revisiting-output kernel needs the segment-sorted
+    solo layout, which only the full batch guarantees (``full_batch``);
+    a nano-slice's reassembled ids carry zeros in other slices' slots,
+    so those drop to the order/value-invariant one-hot wgrads."""
+    interpret = _INTERPRET
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, ranks, scalings, solo_pos):
+        y = pk.fused_lora_pallas(x, A, B, _tile_map(ids, block_t), ranks,
+                                 block_t=block_t, interpret=interpret)
+        return (y.astype(jnp.float32) * scalings[ids][:, None]).astype(x.dtype)
+
+    def _fwd(x, A, B, ids, ranks, scalings, solo_pos):
+        return (f(x, A, B, ids, ranks, scalings, solo_pos),
+                (x, A, B, ids, ranks, scalings, solo_pos))
+
+    def _bwd(res, dy):
+        x, A, B, ids, ranks, scalings, solo_pos = res
+        K = A.shape[0]
+        tm = _tile_map(ids, block_t)
+        dy_s = (dy.astype(jnp.float32) * scalings[ids][:, None]).astype(dy.dtype)
+
+        # ---- local: dx (two grouped-mm launches over the local tiles)
+        dxa = pk.grouped_matmul_pallas(dy_s, jnp.swapaxes(B, 1, 2), tm,
+                                       block_t=block_t, interpret=interpret)
+        dxa = ref_impl.rank_mask(dxa.astype(jnp.float32), ids,
+                                 ranks).astype(x.dtype)
+        dx = pk.grouped_matmul_pallas(dxa, jnp.swapaxes(A, 1, 2), tm,
+                                      block_t=block_t, interpret=interpret)
+
+        # ---- global: wgrads from the solo-order full-shape tensors
+        xg = gather_solo(x, axis_name, solo_pos, total_tokens)
+        dyg_s = gather_solo(dy_s, axis_name, solo_pos, total_tokens)
+        idg = gather_solo(ids, axis_name, solo_pos, total_tokens)
+        if full_batch:
+            tmg = _tile_map(idg, block_t)
+            gdxa = pk.grouped_matmul_pallas(dyg_s, jnp.swapaxes(B, 1, 2),
+                                            tmg, block_t=block_t,
+                                            interpret=interpret)
+            gdxa = ref_impl.rank_mask(gdxa.astype(jnp.float32), idg,
+                                      ranks).astype(x.dtype)
+            xag = pk.grouped_matmul_pallas(xg, A, tmg, block_t=block_t,
+                                           interpret=interpret)
+            xag = ref_impl.rank_mask(xag.astype(jnp.float32), idg,
+                                     ranks).astype(x.dtype)
+            dA = pk.grouped_wgrad_pallas(xg, gdxa, tmg, K, block_t=block_t,
+                                         interpret=interpret)
+            dB = pk.grouped_wgrad_pallas(xag, dyg_s, tmg, K,
+                                         block_t=block_t,
+                                         interpret=interpret)
+        else:
+            # dyg_s is already scaled — unit scalings avoid double-scaling
+            ones = jnp.ones_like(scalings)
+            dy_k, xa, gdxa = _xla_fallback_parts(xg, A, B, idg, ranks,
+                                                 ones, dyg_s)
+            dA, dB = _xla_fallback_wgrads(xg, dy_k, xa, gdxa)
+
+        return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
+                _int_zeros(ids), _int_zeros(ranks),
+                np.zeros(scalings.shape, jax.dtypes.float0),
+                _int_zeros(solo_pos))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
 # ------------------------------------------------------------- dispatch
 def fused_lora(x: jax.Array, A: jax.Array, B: jax.Array, ids: jax.Array,
                ranks: jax.Array, scalings: jax.Array,
                impl: str = "ref", block_t: int = 128,
-               capacity=None, equal_segments: bool = False) -> jax.Array:
+               capacity=None, equal_segments: bool = False,
+               axis_name=None, solo_pos=None,
+               total_tokens: int = 0, full_batch: bool = True) -> jax.Array:
     """Fused heterogeneous multi-LoRA: y_t = s_a ((x_t A_a) B_a), a=ids[t].
 
     x (T, d_in) -> (T, d_out). See module docstring for impl semantics.
+
+    ``axis_name`` selects the shard-local variant: *x*/*ids* are this
+    device's token shard inside a ``shard_map`` over that mesh axis;
+    ``solo_pos`` holds each local token's position in the solo job-major
+    layout and ``total_tokens`` the full fused-batch token count — the
+    VJP wgrads reassemble the full tensors in solo order and stay
+    bit-exact w.r.t. single-device execution.  ``full_batch=False``
+    (nano-slices) marks the reassembled layout as not segment-sorted.
+    Only the custom-VJP impls ("xla", "pallas") support it — the
+    autodiffed "ref"/"loop" oracles have no hand-written backward to
+    localize; use the partial-gradient+psum strategy (core/ssm.py
+    grad_sync="psum") for those.
     """
+    if axis_name is not None:
+        assert solo_pos is not None and total_tokens > 0
+        if impl == "xla":
+            return _make_xla_sharded_fn(bool(equal_segments), axis_name,
+                                        int(total_tokens))(
+                x, A, B, ids, ranks, scalings, solo_pos)
+        if impl == "pallas":
+            return _make_pallas_sharded_fn(int(block_t), axis_name,
+                                           int(total_tokens),
+                                           bool(full_batch))(
+                x, A, B, ids, ranks, scalings, solo_pos)
+        raise ValueError(
+            f"impl {impl!r} has no shard-local VJP; use impl='xla'/'pallas' "
+            "or grad_sync='psum'")
     if impl == "pallas":
         return _fused_lora_pallas(x, A, B, ids, ranks, scalings, block_t)
     if impl == "xla":

@@ -16,7 +16,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(model: int = 1):
-    """Tiny mesh over whatever devices exist (tests)."""
+    """Tiny mesh over whatever devices exist (tests).
+
+    The requested model-parallel degree is clamped to the largest
+    DIVISOR of the device count that is <= *model*: ``min(model, n)``
+    alone still crashes whenever the clamp does not divide n (e.g. 3
+    devices with model=2 -> a 1x2 mesh over 3 devices), and a
+    non-divisor would make ``n // model`` drop devices — or hit the
+    degenerate ``n // model == 0``.  Clamping to a divisor always
+    yields a (data, model) mesh over exactly all n devices.
+    """
     n = len(jax.devices())
-    model = min(model, n)
+    model = max(1, min(model, n))
+    while n % model:
+        model -= 1
     return jax.make_mesh((n // model, model), ("data", "model"))

@@ -303,8 +303,17 @@ def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, ad: dict,
 
 def _apply_segment(cfg, seg: Segment, p: dict, ad: dict,
                    lora: Optional[MultiLoRA], x, positions,
-                   caches, cache_pos, ring: bool, remat: bool):
-    """Apply one segment; returns (x, new_caches, aux_sum)."""
+                   caches, cache_pos, ring: bool, remat: bool,
+                   unroll: bool = False):
+    """Apply one segment; returns (x, new_caches, aux_sum).
+
+    ``unroll`` replays scanned cycles as a python loop over statically
+    sliced layers instead of ``lax.scan`` — same per-layer math, no scan
+    in the autodiff path.  Used by the sharded runtime (DESIGN.md §8):
+    XLA's SPMD partitioner cannot handle grad-through-scan inside a
+    partially-manual shard_map (manual data axis + GSPMD "model" axis),
+    so tensor-parallel sharded training unrolls the layer dimension.
+    """
     if not seg.scanned:
         new_caches, aux = {}, jnp.zeros((), jnp.float32)
         for j, spec in enumerate(seg.specs):
@@ -330,6 +339,19 @@ def _apply_segment(cfg, seg: Segment, p: dict, ad: dict,
 
     if remat:
         cycle = jax.checkpoint(cycle)
+
+    if unroll:
+        aux = jnp.zeros((), jnp.float32)
+        layer_caches = []
+        for i in range(seg.repeats):
+            sl = lambda t: jax.tree.map(lambda v: v[i], t)
+            layer_c = sl(caches) if caches is not None else None
+            x, new_c, a = cycle(x, sl(p), sl(ad), layer_c)
+            aux = aux + a
+            layer_caches.append(new_c)
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *layer_caches)
+                      if caches is not None else None)
+        return x, new_caches, aux
 
     def body(carry, xs):
         x, aux = carry
@@ -384,7 +406,8 @@ def _logits(cfg, params, x):
 def forward(cfg: ModelConfig, params: dict, adapters: Optional[dict],
             lora: Optional[MultiLoRA], batch: dict, *,
             caches: Optional[list] = None, cache_pos=None,
-            ring: bool = False, remat: bool = False):
+            ring: bool = False, remat: bool = False,
+            unroll_layers: bool = False):
     """Full model. batch keys: tokens / frames / patches (+tokens).
 
     Returns (logits, aux_loss, new_caches, text_offset).
@@ -408,7 +431,8 @@ def forward(cfg: ModelConfig, params: dict, adapters: Optional[dict],
         c = caches[i] if caches is not None else None
         x, nc, a = _apply_segment(cfg, seg, params["segments"][i],
                                   ad_segs[i], lora, x, positions,
-                                  c, cache_pos, ring, remat)
+                                  c, cache_pos, ring, remat,
+                                  unroll=unroll_layers)
         aux = aux + a
         if new_caches is not None:
             new_caches.append(nc)
@@ -419,7 +443,8 @@ def forward(cfg: ModelConfig, params: dict, adapters: Optional[dict],
 def loss_fn(cfg: ModelConfig, params: dict, adapters: dict,
             lora: Optional[MultiLoRA], batch: dict, *,
             remat: bool = True,
-            per_job_denom: Optional[jax.Array] = None
+            per_job_denom: Optional[jax.Array] = None,
+            unroll_layers: bool = False
             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Per-job-separated LM loss over a fused batch (lossless contract).
 
@@ -428,7 +453,7 @@ def loss_fn(cfg: ModelConfig, params: dict, adapters: dict,
     backbone being frozen — which it is).  Total = sum_j loss_j.
     """
     logits, aux, _, off = forward(cfg, params, adapters, lora, batch,
-                                  remat=remat)
+                                  remat=remat, unroll_layers=unroll_layers)
     labels = batch["labels"]
     if off:
         logits = logits[:, off:]
@@ -449,6 +474,27 @@ def loss_fn(cfg: ModelConfig, params: dict, adapters: dict,
                  else jnp.clip(onehot.T @ seq_count, 1))
         per_job = (onehot.T @ seq_loss) / denom
         total = per_job.sum() + aux
+        axis = getattr(lora, "axis_name", None)
+        if axis is not None and lora.grad_sync == "gather":
+            # Sharded exact mode (DESIGN.md §8): the gradient flows
+            # through the LOCAL partial above — its per-row cotangents
+            # are the same 1/denom scalars solo execution produces, and
+            # the kernel VJPs make the wgrads globally exact.  The
+            # REPORTED per-job losses are recomputed at full shape from
+            # the per-row losses reassembled in solo row order, so
+            # metrics are bit-identical to the single-device step.
+            # stop_gradient: metrics-only — no collective transposes in
+            # the backward.
+            from repro.kernels.ops import gather_solo
+            rp = lora.row_solo_pos
+            R = lora.shards * lora.local_rows
+            sl = jax.lax.stop_gradient(gather_solo(seq_loss, axis, rp, R))
+            sc = jax.lax.stop_gradient(gather_solo(seq_count, axis, rp, R))
+            idg = gather_solo(lora.adapter_ids, axis, rp, R)
+            oh_g = jax.nn.one_hot(idg, K, dtype=jnp.float32)
+            per_job = (oh_g.T @ sl) / denom
+            return total, {"per_job": per_job, "aux": aux,
+                           "per_job_count": oh_g.T @ sc}
         return total, {"per_job": per_job, "aux": aux,
                        "per_job_count": onehot.T @ seq_count}
     total = seq_loss.sum() / jnp.clip(seq_count.sum(), 1) + aux

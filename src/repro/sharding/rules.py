@@ -58,31 +58,39 @@ _W_RULES = {
 }
 
 
-def _axis_size(mesh: Mesh, name: str) -> int:
-    return mesh.shape[name] if name in mesh.axis_names else 1
+def _axis_size(axis_sizes, name: str) -> int:
+    return axis_sizes.get(name, 1)
 
 
-def _resolve(mesh: Mesh, tag) -> Tuple:
+def _resolve(axis_sizes, tag) -> Tuple:
     if tag == "M":
-        return ("model",) if "model" in mesh.axis_names else ()
+        return ("model",) if "model" in axis_sizes else ()
     if tag == "D":
-        return ("data",) if "data" in mesh.axis_names else ()
+        return ("data",) if "data" in axis_sizes else ()
     if tag == "B":
-        return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return tuple(a for a in ("pod", "data") if a in axis_sizes)
     return ()
 
 
-def _spec(mesh: Mesh, shape: Sequence[int], tags: Sequence) -> P:
-    """Right-aligned tags -> PartitionSpec with divisibility dropping."""
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _spec(axis_sizes, shape: Sequence[int], tags: Sequence) -> P:
+    """Right-aligned tags -> PartitionSpec with divisibility dropping.
+
+    Operates on a plain ``{axis_name: size}`` mapping, NOT a device
+    mesh — spec derivation is pure arithmetic, so property tests can
+    sweep arbitrary mesh geometries on a single-device host."""
     entries = [None] * len(shape)
     for i, tag in enumerate(tags):
         dim_idx = len(shape) - len(tags) + i
         if dim_idx < 0 or tag is None:
             continue
-        axes = _resolve(mesh, tag)
+        axes = _resolve(axis_sizes, tag)
         if not axes:
             continue
-        size = math.prod(_axis_size(mesh, a) for a in axes)
+        size = math.prod(_axis_size(axis_sizes, a) for a in axes)
         if shape[dim_idx] % size == 0 and shape[dim_idx] > 0:
             entries[dim_idx] = axes if len(axes) > 1 else axes[0]
     while entries and entries[-1] is None:
@@ -99,26 +107,54 @@ def _leaf_name(path) -> str:
     return ""
 
 
-def param_shardings(mesh: Mesh, params) -> Any:
-    """NamedSharding tree for a frozen backbone param tree (SDS ok).
+def _param_spec(axis_sizes, path, leaf, drop: Tuple[str, ...] = ()) -> P:
+    name = _leaf_name(path)
+    in_ssd = any(isinstance(k, jax.tree_util.DictKey) and k.key == "ssd"
+                 for k in path)
+    tags = _W_RULES.get(name)
+    if name in ("w_in", "w_out") and in_ssd:
+        # SSD projections are plain 2-D TP, not expert stacks
+        tags = ("D", "M") if name == "w_in" else ("M", "D")
+    if tags is None:
+        return P()
+    if drop:
+        tags = tuple(None if t in drop else t for t in tags)
+    return _spec(axis_sizes, leaf.shape, tags)
+
+
+def param_specs(axis_sizes, params, *, drop: Tuple[str, ...] = ()) -> Any:
+    """PartitionSpec tree for a backbone param tree (SDS ok) against a
+    ``{axis_name: size}`` geometry — the device-free core of
+    ``param_shardings`` (property-testable without a real mesh).
 
     MoE w_in/w_out are 3-D (E, d, f) -> expert-parallel; SSD w_in/w_out
     are 2-D (d_in, d_out) -> TP. Disambiguated by trailing ndim.
-    """
-    def rule(path, leaf):
-        name = _leaf_name(path)
-        shape = leaf.shape
-        in_ssd = any(isinstance(k, jax.tree_util.DictKey) and k.key == "ssd"
-                     for k in path)
-        tags = _W_RULES.get(name)
-        if name in ("w_in", "w_out") and in_ssd:
-            # SSD projections are plain 2-D TP, not expert stacks
-            tags = ("D", "M") if name == "w_in" else ("M", "D")
-        if tags is None:
-            return NamedSharding(mesh, P())
-        return NamedSharding(mesh, _spec(mesh, shape, tags))
+    ``drop`` removes rule tags (e.g. drop=("D","B") keeps pure-TP
+    weight specs for the executing runtime)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(axis_sizes, path, leaf, drop),
+        params)
 
-    return jax.tree_util.tree_map_with_path(rule, params)
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    """NamedSharding tree for a frozen backbone param tree (SDS ok)."""
+    specs = param_specs(_axis_sizes(mesh), params)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def runtime_param_shardings(mesh: Mesh, params) -> Any:
+    """Param placement for the EXECUTING sharded runtime (DESIGN.md §8).
+
+    Same name-driven rules, but with the FSDP-style "D"/"B" weight tags
+    dropped: under shard_map the data axis is manual (per-shard programs
+    see local arrays), so weights there must be replicated over "data"
+    and shard only over the GSPMD-auto "model" axis — classic Megatron
+    1D TP x DP.  The dry-run/HLO-analysis path keeps the 2-D layout for
+    memory-feasibility studies."""
+    specs = param_specs(_axis_sizes(mesh), params, drop=("D", "B"))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
 
 
 def replicated(mesh: Mesh, tree) -> Any:
@@ -128,16 +164,17 @@ def replicated(mesh: Mesh, tree) -> Any:
 def batch_shardings(mesh: Mesh, batch, *, seq_axis: bool = False) -> Any:
     """Fused-batch inputs: rows over (pod, data); optionally seq over data
     (sequence parallelism for batch=1 long-context)."""
+    sizes = _axis_sizes(mesh)
     baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     def rule(path, leaf):
         shape = leaf.shape
         entries = [None] * len(shape)
-        size = math.prod(_axis_size(mesh, a) for a in baxes)
+        size = math.prod(_axis_size(sizes, a) for a in baxes)
         if baxes and shape[0] % size == 0:
             entries[0] = baxes if len(baxes) > 1 else baxes[0]
         elif (seq_axis and len(shape) >= 2 and "data" in mesh.axis_names
-                and shape[1] % _axis_size(mesh, "data") == 0):
+                and shape[1] % _axis_size(sizes, "data") == 0):
             entries[1] = "data"
         while entries and entries[-1] is None:
             entries.pop()
@@ -149,16 +186,17 @@ def batch_shardings(mesh: Mesh, batch, *, seq_axis: bool = False) -> Any:
 # ------------------------------------------------------------- caches
 def _cache_spec(mesh: Mesh, nt, stacked: bool):
     """Per-cache-type sharding; `stacked` = leading layer axis present."""
+    sizes = _axis_sizes(mesh)
     baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     b = (baxes if len(baxes) > 1 else baxes[0]) if baxes else None
-    bsz = math.prod(_axis_size(mesh, a) for a in baxes) if baxes else 1
+    bsz = math.prod(_axis_size(sizes, a) for a in baxes) if baxes else 1
     lead: tuple = (None,) if stacked else ()
 
     def fit(dim, axis, size):
         return axis if (axis is not None and dim % size == 0) else None
 
     m = "model" if "model" in mesh.axis_names else None
-    msz = _axis_size(mesh, "model") if m else 1
+    msz = _axis_size(sizes, "model") if m else 1
 
     if isinstance(nt, KVCache):
         B, _, KV, hd = nt.k.shape[-4:]

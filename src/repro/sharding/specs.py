@@ -37,22 +37,36 @@ def _seq_over_batch() -> bool:
     return getattr(_state, "seq_over_batch", False)
 
 
+def _manual_axes() -> Tuple[str, ...]:
+    return getattr(_state, "manual", ())
+
+
 @contextlib.contextmanager
-def use_mesh(mesh: Optional[Mesh], seq_over_batch: bool = False):
+def use_mesh(mesh: Optional[Mesh], seq_over_batch: bool = False,
+             manual: Tuple[str, ...] = ()):
     """Activate *mesh* for ``shard()`` calls made while tracing.
 
     seq_over_batch: route the "seq" logical axis onto the data axis
     (sequence parallelism) — used for long-context batch=1 shapes.
+
+    manual: mesh axes that are MANUAL inside a surrounding shard_map
+    (sharded runtime, DESIGN.md §8) — constraints must not reference
+    them (each per-shard program already sees local arrays), so
+    logical-axis resolution silently drops them and the remaining
+    (GSPMD-auto) axes keep guiding the planner.
     """
     prev = getattr(_state, "mesh", None)
     prev_sp = getattr(_state, "seq_over_batch", False)
+    prev_manual = getattr(_state, "manual", ())
     _state.mesh = mesh
     _state.seq_over_batch = seq_over_batch
+    _state.manual = tuple(manual)
     try:
         yield
     finally:
         _state.mesh = prev
         _state.seq_over_batch = prev_sp
+        _state.manual = prev_manual
 
 
 def logical_to_mesh(mesh: Mesh, name: LogicalAxis) -> Tuple[str, ...]:
@@ -63,7 +77,7 @@ def logical_to_mesh(mesh: Mesh, name: LogicalAxis) -> Tuple[str, ...]:
         for n in name:
             out = out + logical_to_mesh(mesh, n)
         return out
-    axes = mesh.axis_names
+    axes = tuple(a for a in mesh.axis_names if a not in _manual_axes())
     if name == "batch":
         return tuple(a for a in ("pod", "data") if a in axes)
     if name == "seq":

@@ -1,7 +1,13 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
-must see 1 device; only launch/dryrun.py (and the dryrun subprocess test)
-force 512/8 host devices."""
+must see 1 device; jax locks the device count at first backend init, so
+multi-device tests go through the ``forced_devices`` fixture, which runs
+a worker script in a SPAWNED subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
+imports (the pattern the dry-run subprocess test also uses)."""
 import dataclasses
+import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -10,6 +16,31 @@ import jax
 
 from repro.configs import get_config
 from repro.core.jobs import LoRAJobSpec
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def forced_devices():
+    """Run a python script under N forced virtual host devices.
+
+    Returns ``run(script, devices=8, timeout=900) -> CompletedProcess``.
+    The subprocess env sets XLA_FLAGS before any jax import, so the
+    script sees *devices* CPU devices regardless of the host; the main
+    pytest process stays single-device.
+    """
+    def run(script: str, devices: int = 8, timeout: int = 900):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                            f"{devices}")
+        env["PYTHONPATH"] = os.path.join(_ROOT, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        return subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True,
+                              timeout=timeout, env=env)
+
+    return run
 
 
 @pytest.fixture(scope="session")

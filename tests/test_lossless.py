@@ -69,8 +69,14 @@ def _grads(cfg, jobs, params, adapters, batch):
 
 def test_fused_equals_isolated_grads(setup):
     """The exact mathematical claim: job k's adapter gradient under fused
-    execution equals its gradient under isolated execution."""
+    execution equals its gradient under isolated execution.
+
+    XLA:CPU partitions its intra-op reductions by the host device
+    count, so the forced-multi-device CI leg rounds a handful of
+    near-zero coordinates ~1e-6 differently than the 1-device leg —
+    the tight solo bound stays in force on 1 device."""
     cfg, jobs, params, adapters, batches = setup
+    atol = 1e-6 if len(jax.devices()) == 1 else 5e-6
     fused_g = _grads(cfg, jobs, params, adapters, batches[0])
     for k, job in enumerate(jobs):
         solo_ad = _slice_adapter_tree(adapters, k)
@@ -79,7 +85,7 @@ def test_fused_equals_isolated_grads(setup):
         want = _slice_adapter_tree(fused_g, k)
         jax.tree.map(
             lambda a, b: np.testing.assert_allclose(
-                np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6),
+                np.asarray(a), np.asarray(b), rtol=2e-4, atol=atol),
             want, solo_g)
 
 

@@ -1,0 +1,112 @@
+"""Property tests for the name-driven sharding rules (sharding/rules.py).
+
+``param_specs`` is pure arithmetic over a {axis_name: size} geometry, so
+hypothesis can sweep arbitrary mesh shapes on a single-device host —
+no forced devices needed.  Invariants, for EVERY config in
+configs/registry.py:
+
+  * every sharded spec entry divides its dimension exactly, or the axis
+    was dropped (the divisibility-dropping contract);
+  * LoRA adapter leaves and AdamW optimizer leaves always replicate
+    (that IS the paper's memory win — DESIGN.md §5/§8);
+  * the runtime variant (drop=("D","B")) never references the data/pod
+    axes on weights (shard_map's manual axes must stay out of GSPMD).
+"""
+import functools
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding import rules
+
+# eval_shape only — full-size configs are cheap (no allocation)
+@functools.lru_cache(maxsize=None)
+def _params_of(arch: str):
+    cfg = get_config(arch)
+    return jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _adapter_state_of(arch: str):
+    cfg = get_config(arch)
+    ranks = jnp.asarray([4, 16], jnp.int32)
+    adapters = jax.eval_shape(
+        lambda: M.init_adapters(jax.random.PRNGKey(0), cfg, ranks,
+                                r_pad=16))
+    opt = jax.eval_shape(lambda: adamw.init(
+        jax.eval_shape(lambda: M.init_adapters(
+            jax.random.PRNGKey(0), cfg, ranks, r_pad=16)), per_job=2))
+    return adapters, opt
+
+
+def _axes_of(entry):
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _check_divides(params, specs, axis_sizes):
+    def check(leaf, spec):
+        assert isinstance(spec, P), spec
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            size = math.prod(axis_sizes.get(a, 1)
+                             for a in _axes_of(entry))
+            assert size >= 1 and dim % size == 0, \
+                (leaf.shape, spec, axis_sizes)
+    jax.tree.map(check, params, specs)
+
+
+mesh_sizes = st.fixed_dictionaries({
+    "data": st.integers(min_value=1, max_value=16),
+    "model": st.integers(min_value=1, max_value=16),
+}).flatmap(lambda d: st.one_of(
+    st.just(d), st.just({**d, "pod": 2})))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(axis_sizes=mesh_sizes)
+def test_param_specs_divide_or_drop(arch, axis_sizes):
+    params = _params_of(arch)
+    specs = rules.param_specs(axis_sizes, params)
+    _check_divides(params, specs, axis_sizes)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@settings(max_examples=10, deadline=None)
+@given(axis_sizes=mesh_sizes)
+def test_adapters_and_optimizer_always_replicate(arch, axis_sizes):
+    adapters, opt = _adapter_state_of(arch)
+    for tree in (adapters, opt.mu, opt.nu):
+        specs = rules.param_specs(axis_sizes, tree)
+        assert all(s == P() for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@settings(max_examples=10, deadline=None)
+@given(axis_sizes=mesh_sizes)
+def test_runtime_specs_avoid_manual_axes(arch, axis_sizes):
+    """drop=("D","B") — the executing runtime's weight placement must
+    only use GSPMD-auto axes ("model"), never the manual data/pod axes
+    of the surrounding shard_map."""
+    params = _params_of(arch)
+    specs = rules.param_specs(axis_sizes, params, drop=("D", "B"))
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for entry in tuple(spec):
+            for a in _axes_of(entry):
+                assert a == "model", (spec,)
+    _check_divides(params, specs, axis_sizes)
