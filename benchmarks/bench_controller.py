@@ -1,0 +1,171 @@
+"""Controller benchmark — concurrent multi-group execution + online
+oracle calibration (DESIGN.md §9).
+
+Two headline numbers, written to ``BENCH_controller.json``:
+
+  * ``concurrent_x``: wall-clock of 2 fused groups training on disjoint
+    per-group submeshes CONCURRENTLY (threaded chunk loops) vs the same
+    partition executed sequentially — the win the ClusterController
+    exists for.  The scheduler assigns each group 1 chip, so the
+    allocator carves two 1-device submeshes out of the pool (extra
+    devices stay free for arrivals); concurrency then overlaps the
+    groups' host-serial fractions, which dominate small-model steps.
+  * ``calibration_x``: mean relative step-time error of the throughput
+    oracle before vs after online calibration, measured on the same
+    execution-backed simulator run (StepRecord.predicted vs
+    .predicted_cal) — closing the §4.1 loop must make the oracle
+    STRICTLY better on the machine it observes.
+
+Run as a script to force a virtual device count (like bench_step_loop's
+``--mesh``): ``python -m benchmarks.bench_controller --devices 8``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _peek_devices_arg(argv):
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+if __name__ == "__main__":
+    _spec = _peek_devices_arg(sys.argv)
+    if _spec:
+        try:
+            _need = int(_spec)
+        except ValueError:
+            _need = 0
+        _flags = os.environ.get("XLA_FLAGS", "")
+        if _need > 1 and \
+                "xla_force_host_platform_device_count" not in _flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{_flags} --xla_force_host_platform_device_count={_need}"
+            ).strip()
+
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.cluster.controller import ClusterController
+from repro.cluster.execution import ExecutionBackend
+from repro.cluster.simulator import ClusterConfig, ClusterSimulator, \
+    tlora_policy
+
+from benchmarks.common import banner
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_controller.json"
+CHUNK = 4
+
+
+def _build_controller(concurrency: str, seed: int = 0):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    ctl = ClusterController(lambda m: cfg, impl="xla", block_t=8,
+                            lr=1e-3, remat=False, chunk_size=CHUNK,
+                            concurrency=concurrency, seed=seed)
+    gkeys = []
+    for g in range(2):
+        for i in range(2):
+            ctl.submit(LoRAJobSpec(f"g{g}j{i}", rank=(8, 16)[i],
+                                   batch_size=2, seq_len=64,
+                                   base_model=cfg.name, gpus=1))
+        gkeys.append((f"g{g}j0", f"g{g}j1"))
+    # scheduler assignment: 1 chip per group -> two 1-device submeshes
+    ctl.apply_grouping(gkeys, chips=[1, 1])
+    ctl.run(CHUNK)                           # compile the chunked steps
+    return ctl
+
+
+def _bench_concurrency(steps: int, reps: int) -> dict:
+    """2 groups, disjoint submeshes: threaded vs sequential wall-clock.
+    Interleaved reps so host load drift hits both modes equally."""
+    ctl_seq = _build_controller("sequential")
+    ctl_conc = _build_controller("threads")
+    devs = ctl_conc.group_devices()
+    t_seq = t_conc = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        ctl_seq.run(steps)
+        t_seq = min(t_seq, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ctl_conc.run(steps)
+        t_conc = min(t_conc, time.perf_counter() - t0)
+    x = t_seq / t_conc
+    print(f"  sequential {t_seq:7.3f}s   concurrent {t_conc:7.3f}s   "
+          f"x{x:.2f}  (2 groups, submeshes "
+          f"{[list(d) for d in devs.values()]})")
+    return {"sequential_s": t_seq, "concurrent_s": t_conc,
+            "concurrent_x": x, "groups": 2,
+            "group_devices": {"-".join(k): list(v)
+                              for k, v in devs.items()},
+            "partitioned": ctl_conc.partition}
+
+
+def _bench_calibration(quick: bool) -> dict:
+    """Execution-backed simulator run: oracle error before vs after the
+    online fit, on the SAME StepRecord stream."""
+    def J(i, arr, budget, rank=4):
+        return LoRAJobSpec(f"c{i}", rank=rank, batch_size=1, seq_len=32,
+                           base_model="smollm-360m", steps_budget=budget,
+                           arrival_time=arr, max_slowdown=2.0)
+
+    trace = [J(0, 0.0, 20_000), J(1, 0.0, 20_000, rank=8),
+             J(2, 40.0, 4_000, rank=2)]
+    cc = ClusterConfig(total_chips=8, horizon=30.0, concurrency_cap=4,
+                       reduced_models=True)
+    backend = ExecutionBackend(steps_per_measure=2, block_t=8)
+    sim = ClusterSimulator(cc, None, execution=backend)
+    sim.policy = tlora_policy(sim._cfg_of,
+                              calibrator=backend.calibrator)
+    sim.run(trace, max_time=300.0 if quick else 700.0)
+
+    recs = backend.records
+    assert recs, "no execution observations recorded"
+    err_uncal = sum(r.error for r in recs) / len(recs)
+    err_cal = sum(r.error_cal for r in recs) / len(recs)
+    print(f"  oracle mean rel error: uncalibrated {err_uncal:.3f}  "
+          f"calibrated {err_cal:.3f}  "
+          f"(x{err_uncal / max(err_cal, 1e-12):.1f} better, "
+          f"{len(recs)} observations)")
+    return {"oracle_err_uncal": err_uncal, "oracle_err_cal": err_cal,
+            "calibration_x": err_uncal / max(err_cal, 1e-12),
+            "observations": len(recs),
+            "regroup_events": backend.regroup_events,
+            "calibration": backend.calibrator.summary()}
+
+
+def run(quick: bool = False) -> dict:
+    banner("Controller: concurrent groups + online-calibrated oracle")
+    n = len(jax.devices())
+    steps = CHUNK * (3 if quick else 6)
+    reps = 3 if quick else 5
+    print(f"  device pool: {n}")
+    out = {"config": {"devices": n, "chunk_size": CHUNK,
+                      "steps_timed": steps, "reps": reps,
+                      "model": "tinyllama-1.1b-reduced", "quick": quick}}
+    out.update(_bench_concurrency(steps, reps))
+    out.update(_bench_calibration(quick))
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"  wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force a virtual host device count (script "
+                         "mode only; e.g. 8 for the CI leg)")
+    a = ap.parse_args()
+    run(quick=a.quick)

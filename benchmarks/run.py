@@ -10,6 +10,7 @@ import time
 import traceback
 
 MODULES = [
+    "bench_controller",
     "bench_step_loop",
     "fig2_naive_batching",
     "fig5_e2e",

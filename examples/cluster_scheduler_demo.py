@@ -3,6 +3,13 @@ trace against a 64-chip cluster and watch tLoRA's grouping decisions vs
 mLoRA's FIFO batching and Megatron's isolated execution.
 
     PYTHONPATH=src python examples/cluster_scheduler_demo.py
+
+``--execute`` additionally drives the ClusterController end-to-end on
+REDUCED models: jobs submit, Algorithm 1 partitions the local device
+pool into per-group submeshes, groups train real fused steps
+concurrently, an arrival triggers a live repartition (state migrating
+losslessly), and every measured step re-fits the throughput oracle
+online (DESIGN.md §9).
 """
 from repro.cluster.baselines import make_simulator
 from repro.cluster.metrics import compare, size_terciles, summarize
@@ -68,6 +75,56 @@ def cluster_replay():
           f"(paper Fig 6b: small & large group most)")
 
 
+def controller_execute(steps: int = 8):
+    """End-to-end on the live controller (reduced models, real steps)."""
+    from repro.cluster.controller import ClusterController
+
+    print("-- controller: concurrent execution on reduced models ------")
+    cal = tp.OnlineCalibrator()
+    ctl = ClusterController(lambda m: get_config(m).reduced(),
+                            calibrator=cal, impl="xla", block_t=8,
+                            lr=1e-3, remat=False, chunk_size=2, seed=0)
+    print(f"  pool: {len(ctl.devices)} devices, "
+          f"partitioning {'ON' if ctl.partition else 'OFF (1-device host)'}"
+          f", concurrency={ctl.concurrency}")
+    for i, (rank, batch) in enumerate([(4, 2), (8, 1), (16, 2), (2, 1)]):
+        ctl.submit(LoRAJobSpec(f"job-{i}", rank=rank, batch_size=batch,
+                               seq_len=64, base_model="tinyllama-1.1b",
+                               steps_budget=4 * steps, max_slowdown=2.0))
+    ctl.reschedule()
+    for gkey, dev in ctl.group_devices().items():
+        print(f"  group {list(gkey)} -> devices {list(dev) or '[shared]'}")
+    ctl.run(steps)
+    print(f"  trained {steps} steps/group; measured step times fed the "
+          f"oracle:")
+    for bucket, d in cal.summary().items():
+        print(f"    {bucket}: alpha={d['alpha']:.3g} beta={d['beta']:.3g} "
+              f"({d['observations']} obs)")
+
+    # a late arrival: reschedule repartitions the pool, live state
+    # migrates losslessly to the new submeshes
+    ctl.submit(LoRAJobSpec("late", rank=8, batch_size=2, seq_len=64,
+                           base_model="tinyllama-1.1b",
+                           steps_budget=4 * steps, max_slowdown=2.0))
+    before = ctl.current_grouping()
+    ctl.reschedule(pressure=True)            # arrivals queue -> pressure
+    print(f"  arrival 'late': regrouped {before} -> "
+          f"{ctl.current_grouping()} "
+          f"({ctl.regroup_events} live migrations)")
+    ctl.run(steps)
+    for jid in sorted(ctl.active_job_ids) + sorted(ctl.finished):
+        print(f"  {jid}: {ctl.steps_done(jid)} steps"
+              f"{' (finished)' if jid in ctl.finished else ''}")
+
+
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--execute", action="store_true",
+                    help="drive the ClusterController end-to-end on "
+                         "reduced models (real fused steps)")
+    a = ap.parse_args()
     grouping_walkthrough()
     cluster_replay()
+    if a.execute:
+        controller_execute()

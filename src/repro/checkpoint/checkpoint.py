@@ -11,6 +11,7 @@ Format: one ``.npz`` per job (portable, offline-friendly).
 from __future__ import annotations
 
 import io
+import json
 import os
 from typing import Any, Dict, Optional, Tuple
 
@@ -84,10 +85,30 @@ def insert_job(adapters: dict, idx: int, rank: int, flat_slices: dict) -> dict:
     return _unflatten_into(adapters, out)
 
 
+def stream_state(stream) -> str:
+    """Serialize a JobStream's rng position (JSON, npz-storable).
+
+    The data half of the lossless contract: a restored job must see the
+    SAME token sequence it would have seen uninterrupted, so checkpoints
+    carry the bit-generator state, not just the seed."""
+    return json.dumps(stream._rng.bit_generator.state)
+
+
+def restore_stream_state(stream, state: str):
+    """Rewind/advance a fresh JobStream to a serialized rng position."""
+    stream._rng.bit_generator.state = json.loads(state)
+    return stream
+
+
 def save_job(path: str, job_id: str, idx: int, rank: int,
              adapters: dict, opt_state: Optional[AdamWState] = None,
              step: int = 0, meta: Optional[dict] = None):
-    """Persist job *idx*'s adapter (and its Adam moments) to ``path``."""
+    """Persist job *idx*'s adapter (and its Adam moments) to ``path``.
+
+    ``meta`` entries land as ``__meta_<key>__`` arrays (scalars and
+    strings only — strings stay unicode arrays, no pickling), so
+    portable accounting like ``steps_done`` and the stream rng position
+    survive the round trip."""
     payload = {f"adapter/{k}": np.asarray(v)
                for k, v in slice_job(adapters, idx, rank).items()}
     if opt_state is not None:
@@ -98,9 +119,21 @@ def save_job(path: str, job_id: str, idx: int, rank: int,
     payload["__step__"] = np.asarray(step)
     payload["__rank__"] = np.asarray(rank)
     payload["__job_id__"] = np.asarray(job_id)
+    for k, v in (meta or {}).items():
+        payload[f"__meta_{k}__"] = np.asarray(v)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "wb") as f:
         np.savez(f, **payload)
+
+
+def load_meta(z: dict) -> dict:
+    """Extract the ``meta`` dict a checkpoint was saved with."""
+    out = {}
+    for k, v in z.items():
+        if k.startswith("__meta_") and k.endswith("__"):
+            name = k[len("__meta_"):-2]
+            out[name] = v.item() if v.ndim == 0 else v
+    return out
 
 
 def load_job(path: str) -> dict:

@@ -1,3 +1,6 @@
-from repro.cluster import baselines, execution, metrics, simulator, trace
+from repro.cluster import (baselines, controller, execution, metrics,
+                           simulator, trace)
+from repro.cluster.controller import ClusterController
 
-__all__ = ["baselines", "execution", "metrics", "simulator", "trace"]
+__all__ = ["baselines", "controller", "execution", "metrics", "simulator",
+           "trace", "ClusterController"]

@@ -1,0 +1,528 @@
+"""ClusterController — concurrent multi-group execution on partitioned
+submeshes (DESIGN.md §9).
+
+The executing half of the repo ran one group at a time on a single
+engine; the paper's cluster layer (§3.4, §4.1) runs MANY heterogeneous
+fused groups at once.  The controller owns the global device pool and
+closes that gap:
+
+  * ``apply_grouping`` partitions the pool into disjoint per-group
+    submeshes (``launch/mesh.device_shares`` maps the scheduler's chip
+    assignments onto real devices, ``partition_mesh`` carves the
+    meshes) and runs one ``ElasticEngine`` per submesh;
+  * ``run`` drives every group's chunked step loop concurrently —
+    per-group worker threads by default (XLA:CPU's inline execution
+    gives almost no cross-device overlap from a single dispatching
+    thread; real accelerators can use the single-threaded round-robin
+    ``dispatch_chunk``/``collect_chunk`` mode), so disjoint submeshes
+    compute at the same time;
+  * arrivals and completions trigger ``reschedule`` → pool repartition
+    → cross-mesh migration: members leave their old submesh as portable
+    ``JobTrainState``s (mesh-agnostic — the PR 1/3 lossless path) and
+    re-fuse on the new one; groups whose member set AND device slice
+    are unchanged keep their runtime and compiled step cache.
+
+An ``OnlineCalibrator`` (core/throughput) can be attached: every
+measured step feeds it, and the ``AdapterScheduler``s used by
+``reschedule`` price merges with the calibrated constants — the
+oracle → scheduler → execution feedback loop of the paper's online
+design.
+"""
+from __future__ import annotations
+
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core import throughput as tp
+from repro.core.jobs import JobRuntimeState, LoRAJobSpec
+from repro.core.lora import pad_rank
+from repro.core.scheduler import AdapterScheduler, SchedulerConfig
+from repro.elastic.engine import ElasticEngine
+from repro.elastic.migrate import JobTrainState
+from repro.elastic.runtime import GroupRuntime, TrainReport
+from repro.launch.mesh import device_shares, partition_mesh
+from repro.models import model as M
+
+GroupKey = Tuple[str, ...]
+
+
+def effective_grad_sync(impl: str, mesh, grad_sync: str) -> str:
+    """The ONE copy of the sharded-wgrad fallback rule: the autodiffed
+    ref/loop oracles have no shard-local VJP for exact gathered wgrads
+    (DESIGN.md §8), so on a mesh they fall back to classic-DP psum."""
+    if mesh is not None and impl in ("ref", "loop") \
+            and grad_sync == "gather":
+        return "psum"
+    return grad_sync
+
+
+@dataclass
+class GroupSlot:
+    """One live group: its engine, submesh, and pool bookkeeping."""
+    base_model: str
+    engine: ElasticEngine
+    mesh: object                      # jax Mesh or None (meshless)
+    device_ids: Tuple[int, ...]       # indices into the controller pool
+    chips: int                        # scheduler's abstract assignment
+
+    def runtime(self, gkey: GroupKey) -> GroupRuntime:
+        return self.engine.ensure_group(gkey)
+
+
+class ModelView:
+    """Per-base-model aggregate over a controller's slots + parked/
+    finished jobs — the surface ``ExecutionBackend.engine`` exposes."""
+
+    def __init__(self, controller: "ClusterController", base_model: str):
+        self._c = controller
+        self.base_model = base_model
+
+    @property
+    def job_ids(self) -> List[str]:
+        return [jid for jid in self._c.active_job_ids
+                if self._c.spec_of(jid).base_model == self.base_model]
+
+    @property
+    def finished(self) -> Dict[str, JobTrainState]:
+        return {jid: st for jid, st in self._c.finished.items()
+                if st.spec.base_model == self.base_model}
+
+    def steps_done(self, job_id: str) -> int:
+        return self._c.steps_done(job_id)
+
+    @property
+    def regroup_events(self) -> int:
+        return self._c._regroups.get(self.base_model, 0)
+
+
+class ClusterController:
+    """Owns the device pool; runs many fused groups concurrently."""
+
+    def __init__(self, cfg_of: Callable[[str], ModelConfig], *,
+                 devices: Optional[Sequence] = None,
+                 fixed_mesh=None, partition: Optional[bool] = None,
+                 sched: Optional[SchedulerConfig] = None,
+                 calibrator: Optional[tp.OnlineCalibrator] = None,
+                 concurrency: Optional[str] = None,
+                 impl: str = "xla", block_t: int = 8, lr: float = 1e-3,
+                 lr_fn=None, remat: bool = False, nano_batches: int = 1,
+                 adaptive_nano: bool = False, weight_decay: float = 0.0,
+                 chunk_size: int = 4, data_axis: str = "data",
+                 grad_sync: str = "gather", tp_mode: str = "dp",
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, seed: int = 0):
+        self.cfg_of = cfg_of
+        self.devices = list(devices if devices is not None
+                            else jax.devices())
+        self.fixed_mesh = fixed_mesh
+        # partition mode: per-group submeshes carved from the pool.
+        # Disabled under a fixed mesh (legacy measurement path) or a
+        # pool too small to split.
+        self.partition = (fixed_mesh is None and len(self.devices) > 1) \
+            if partition is None else bool(partition)
+        assert not (self.partition and fixed_mesh is not None)
+        self.sched_cfg = sched or SchedulerConfig()
+        self.calibrator = calibrator
+        # threads by default when submeshes are disjoint (the only case
+        # with device parallelism to win); sequential otherwise
+        self.concurrency = concurrency or \
+            ("threads" if self.partition else "sequential")
+        assert self.concurrency in ("threads", "roundrobin", "sequential")
+        self.data_axis = data_axis
+        self.block_t = block_t
+        self.seed = seed
+        self._key = jax.random.PRNGKey(seed)
+        self._impl = impl
+        self._grad_sync = grad_sync
+        self._engine_kwargs = dict(
+            impl=impl, block_t=block_t, lr=lr, lr_fn=lr_fn, remat=remat,
+            nano_batches=nano_batches, adaptive_nano=adaptive_nano,
+            weight_decay=weight_decay, chunk_size=chunk_size,
+            data_axis=data_axis, tp_mode=tp_mode,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, seed=seed)
+        self._cfgs: Dict[str, ModelConfig] = {}
+        self._backbones: Dict[str, object] = {}
+        self._schedulers: Dict[str, AdapterScheduler] = {}
+        self._specs: Dict[str, LoRAJobSpec] = {}
+        self._parked: Dict[str, JobTrainState] = {}
+        self._slots: Dict[GroupKey, GroupSlot] = {}
+        self.finished: Dict[str, JobTrainState] = {}
+        # jobs whose parked state came out of a live runtime — the next
+        # group build containing one is a migration (regroup event)
+        self._had_runtime: set = set()
+        self._regroups: Dict[str, int] = {}
+        self.repartitions = 0
+
+    # ------------------------------------------------------------ registry
+    def _cfg(self, base_model: str) -> ModelConfig:
+        if base_model not in self._cfgs:
+            self._cfgs[base_model] = self.cfg_of(base_model)
+        return self._cfgs[base_model]
+
+    def register_cfg(self, base_model: str, cfg: ModelConfig):
+        """Pin the executable config for a base model (e.g. the
+        simulator's reduced variant) ahead of ``cfg_of`` resolution."""
+        self._cfgs[base_model] = cfg
+
+    def _backbone(self, base_model: str):
+        """ONE frozen backbone per base model, shared by every engine —
+        deterministic from the controller seed (same derivation as a
+        solo ``ElasticEngine``), so cross-engine migration is exact."""
+        if base_model not in self._backbones:
+            self._backbones[base_model] = M.init_model(
+                jax.random.fold_in(self._key, 0), self._cfg(base_model))
+        return self._backbones[base_model]
+
+    def scheduler(self, base_model: str) -> AdapterScheduler:
+        if base_model not in self._schedulers:
+            self._schedulers[base_model] = AdapterScheduler(
+                self._cfg(base_model), self.sched_cfg,
+                calibrator=self.calibrator)
+        return self._schedulers[base_model]
+
+    # ------------------------------------------------------------- job set
+    @property
+    def active_job_ids(self) -> List[str]:
+        ids = list(self._parked)
+        for gkey in self._slots:
+            ids.extend(gkey)
+        return ids
+
+    def spec_of(self, job_id: str) -> LoRAJobSpec:
+        return self._specs[job_id]
+
+    def submit(self, spec: LoRAJobSpec,
+               state: Optional[JobTrainState] = None) -> JobTrainState:
+        """Admit a job — fresh LoRA init, or existing portable state
+        (restored checkpoint / migration from another controller)."""
+        assert spec.job_id not in self._specs, f"duplicate {spec.job_id}"
+        if state is None:
+            # crc32 key derivation matches ElasticEngine.add_job, so a
+            # controller-run job reproduces a solo engine's trajectory
+            key = jax.random.fold_in(
+                self._key, zlib.crc32(spec.job_id.encode()) % (2 ** 31))
+            state = JobTrainState.fresh(
+                spec, self._cfg(spec.base_model), key,
+                r_pad=pad_rank(spec.rank, multiple=min(self.block_t, 16)),
+                seed=self.seed)
+        self._specs[spec.job_id] = spec
+        self._parked[spec.job_id] = state
+        return state
+
+    def remove_job(self, job_id: str) -> JobTrainState:
+        """Decouple a job (its group dissolves; peers park)."""
+        st = self._claim(job_id)
+        del self._specs[job_id]
+        self._had_runtime.discard(job_id)
+        return st
+
+    # ------------------------------------------------------ state plumbing
+    def _home(self, job_id: str) -> Optional[GroupKey]:
+        for gkey in self._slots:
+            if job_id in gkey:
+                return gkey
+        return None
+
+    def _dissolve(self, gkey: GroupKey):
+        """Tear a slot down: members leave as portable JobTrainStates
+        (cross-mesh migration — the engine exports are mesh-agnostic),
+        pool devices return to the free list."""
+        slot = self._slots.pop(gkey)
+        for jid in gkey:
+            self._parked[jid] = slot.engine.remove_job(jid)
+            self._had_runtime.add(jid)
+
+    def _claim(self, job_id: str) -> JobTrainState:
+        if job_id in self._parked:
+            return self._parked.pop(job_id)
+        if job_id in self.finished:
+            return self.finished.pop(job_id)
+        gkey = self._home(job_id)
+        assert gkey is not None, f"unknown job {job_id}"
+        self._dissolve(gkey)
+        return self._parked.pop(job_id)
+
+    # -------------------------------------------------------- device pool
+    def _used_device_ids(self) -> set:
+        return {i for s in self._slots.values() for i in s.device_ids}
+
+    def _submesh(self, device_ids: Tuple[int, ...]):
+        if not device_ids:
+            return self.fixed_mesh          # None in meshless mode
+        return partition_mesh([len(device_ids)],
+                              [self.devices[i] for i in device_ids],
+                              axis=self.data_axis)[0]
+
+    def _alloc_free(self, want: int) -> Tuple[int, ...]:
+        """Incremental allocation (ensure_group path): up to *want* free
+        pool devices; empty → the group runs meshless/fixed-mesh."""
+        if not self.partition:
+            return ()
+        used = self._used_device_ids()
+        free = [i for i in range(len(self.devices)) if i not in used]
+        return tuple(free[:max(1, want)]) if free else ()
+
+    # ------------------------------------------------------------ grouping
+    def current_grouping(self) -> List[GroupKey]:
+        return list(self._slots) + [(jid,) for jid in self._parked]
+
+    def _build_slot(self, gkey: GroupKey,
+                    device_ids: Optional[Tuple[int, ...]],
+                    chips: int) -> GroupRuntime:
+        states = [self._claim(jid) for jid in gkey]
+        if device_ids is None:
+            # incremental path: allocate AFTER claiming — claiming just
+            # dissolved whatever slots the members came from, so their
+            # devices are back in the free pool for this group
+            device_ids = self._alloc_free(max(1, chips))
+        base = states[0].spec.base_model
+        assert all(s.spec.base_model == base for s in states), \
+            "groups fuse jobs of one base model"
+        mesh = self._submesh(device_ids)
+        kw = dict(self._engine_kwargs)
+        kw["mesh"] = mesh
+        kw["grad_sync"] = effective_grad_sync(self._impl, mesh,
+                                              self._grad_sync)
+        engine = ElasticEngine(self._cfg(base),
+                               params=self._backbone(base), **kw)
+        for st in states:
+            engine.admit(st)
+        try:
+            rt = engine.ensure_group(gkey)
+        except Exception:
+            # infeasible group: recover the claimed states so no job's
+            # training identity is lost in the throwaway engine
+            for jid in gkey:
+                if jid in engine.job_ids:
+                    self._parked[jid] = engine.remove_job(jid)
+            raise
+        if any(jid in self._had_runtime for jid in gkey):
+            self._regroups[base] = self._regroups.get(base, 0) + 1
+            self._had_runtime.difference_update(gkey)
+        self._slots[gkey] = GroupSlot(base_model=base, engine=engine,
+                                      mesh=mesh, device_ids=device_ids,
+                                      chips=chips)
+        return rt
+
+    def ensure_group(self, job_ids: Sequence[str],
+                     chips: Optional[int] = None) -> GroupRuntime:
+        """Guarantee a live runtime with exactly *job_ids* (incremental
+        path — devices come from the free pool; a full-pool layout goes
+        through ``apply_grouping``).
+
+        A matching live group keeps its runtime AND its submesh even if
+        *chips* changed — rebuilding per chip-count drift would
+        recompile every horizon; the chips bookkeeping is refreshed and
+        a repartition (``apply_grouping``/``reschedule``) applies the
+        new width when the layout is actually recomputed."""
+        gkey = tuple(job_ids)
+        for existing, slot in self._slots.items():
+            if frozenset(existing) == frozenset(gkey):
+                if chips is not None:
+                    slot.chips = chips
+                return slot.runtime(existing)
+        want = chips if chips is not None else len(gkey)
+        return self._build_slot(gkey, None, want)
+
+    def apply_grouping(self, groups: Sequence[Sequence[str]],
+                       chips: Optional[Sequence[int]] = None
+                       ) -> Dict[str, list]:
+        """Install a full grouping decision: repartition the pool into
+        per-group submeshes honoring the scheduler's chip assignments
+        and migrate whoever moved.  Groups keeping both their member set
+        and their device slice keep their runtime (compiled steps
+        included)."""
+        groups = [tuple(g) for g in groups]
+        chips = list(chips) if chips is not None \
+            else [len(g) for g in groups]
+        assert len(chips) == len(groups)
+        covered = {j for g in groups for j in g}
+        assert len(covered) == sum(len(g) for g in groups), \
+            "grouping assigns a job twice"
+        # deterministic pool layout: sorted by (base model, members) so
+        # stable compositions keep stable device slices across calls
+        order = sorted(range(len(groups)),
+                       key=lambda i: (self._specs[groups[i][0]].base_model,
+                                      groups[i]))
+        sizes = device_shares([chips[i] for i in order],
+                              len(self.devices)) if self.partition \
+            else [0] * len(groups)
+        plan: Dict[GroupKey, Tuple[Tuple[int, ...], int]] = {}
+        cur = 0
+        for pos, i in enumerate(order):
+            n = sizes[pos] if sizes else 0
+            plan[groups[i]] = (tuple(range(cur, cur + n)), chips[i])
+            cur += n
+
+        keep, build = [], []
+        planned_sets = {frozenset(g): g for g in groups}
+        for gkey in list(self._slots):
+            tgt = planned_sets.get(frozenset(gkey))
+            if tgt is not None and \
+                    self._slots[gkey].device_ids == plan[tgt][0]:
+                keep.append(gkey)
+                self._slots[gkey].chips = plan[tgt][1]
+            else:
+                self._dissolve(gkey)
+        kept_sets = {frozenset(g) for g in keep}
+        for g in groups:
+            if frozenset(g) not in kept_sets:
+                build.append(g)
+                self._build_slot(g, *plan[g])
+        if build:
+            self.repartitions += 1
+        return {"keep": keep, "build": build}
+
+    def reschedule(self, pressure: bool = False,
+                   node_of: Optional[Callable[[str], int]] = None
+                   ) -> List[GroupKey]:
+        """Arrival/completion hook: re-run Algorithm 1 per base model
+        over the active jobs (calibrated oracle when attached) and
+        repartition the pool to the new grouping."""
+        by_model: Dict[str, List[str]] = {}
+        for jid in self.active_job_ids:
+            by_model.setdefault(self._specs[jid].base_model, []).append(jid)
+        groups: List[GroupKey] = []
+        weights: List[int] = []
+        for base, ids in sorted(by_model.items()):
+            sched = self.scheduler(base)
+            jrs = []
+            for jid in ids:
+                spec = self._specs[jid]
+                s = JobRuntimeState(spec=spec,
+                                    steps_done=self.steps_done(jid))
+                s.standalone_step_time = tp.standalone_step_time(
+                    self._cfg(base), spec,
+                    hw=sched.hw_for(max(spec.gpus, 1)),
+                    kernel_fused=sched.sched.kernel_fused)
+                gkey = self._home(jid)
+                if gkey is not None:
+                    s.current_step_time = self._slots[gkey].runtime(
+                        gkey).report.measured_step_time()
+                jrs.append(s)
+            for g in sched.schedule(jrs, node_of=node_of,
+                                    pressure=pressure):
+                groups.append(g.job_ids)
+                weights.append(g.chips)
+        self.apply_grouping(groups, chips=weights)
+        return groups
+
+    # ----------------------------------------------------------- execution
+    def run(self, steps: int, chunk_size: Optional[int] = None,
+            log: Optional[Callable[[str], None]] = None
+            ) -> Dict[GroupKey, TrainReport]:
+        """Advance every live group by *steps* — concurrently.
+
+        threads (default under partitioning): one worker per group
+        drives its chunked ``run`` loop; disjoint submeshes execute in
+        parallel.  roundrobin: a single thread keeps one pending chunk
+        per group via ``dispatch_chunk``/``collect_chunk`` (pure JAX
+        async dispatch — the right mode on accelerators where dispatch
+        is cheap and truly asynchronous).  sequential: groups run one
+        after another (the measurement-instrument mode)."""
+        for jid in list(self._parked):        # stragglers train solo
+            self.ensure_group((jid,))
+        rts = {gkey: slot.runtime(gkey)
+               for gkey, slot in self._slots.items()}
+        if not rts or steps <= 0:
+            return {}
+        if self.concurrency == "threads" and len(rts) > 1:
+            with ThreadPoolExecutor(max_workers=len(rts)) as ex:
+                futs = {g: ex.submit(rt.run, steps, log, chunk_size)
+                        for g, rt in rts.items()}
+                reports = {g: f.result() for g, f in futs.items()}
+        elif self.concurrency == "roundrobin" and len(rts) > 1:
+            reports = self._run_roundrobin(rts, steps, chunk_size, log)
+        else:
+            reports = {g: rt.run(steps, log=log, chunk_size=chunk_size)
+                       for g, rt in rts.items()}
+        if self.calibrator is not None:
+            # close the loop: every run feeds measured step times back,
+            # so the NEXT reschedule prices with this machine's
+            # effective constants (min-of-window discards compile
+            # outliers after a rebuild).  Bucket by the device count
+            # the group ACTUALLY ran on, not the scheduler's abstract
+            # assignment — a group assigned 8 chips but carved a
+            # 4-device submesh measures 4-device physics, and mixing
+            # widths in one bucket would make the fit oscillate;
+            # unmeasured widths borrow the nearest same-K bucket.
+            for gkey, rt in rts.items():
+                slot = self._slots.get(gkey)
+                measured = rt.report.measured_step_time()
+                if slot is not None and measured > 0:
+                    self.calibrator.observe(
+                        self._cfg(slot.base_model), rt.specs,
+                        max(len(slot.device_ids), 1), measured)
+        self.retire_finished()
+        return reports
+
+    def _run_roundrobin(self, rts: Dict[GroupKey, GroupRuntime],
+                        steps: int, chunk_size: Optional[int], log
+                        ) -> Dict[GroupKey, TrainReport]:
+        """One pending chunk per group; collect + redispatch in rotation
+        so every submesh always has work queued."""
+        chunk = {g: max(1, chunk_size or rt.chunk_size)
+                 for g, rt in rts.items()}
+        length = {g: min(chunk[g], steps) for g in rts}
+        remaining = {g: steps for g in rts}
+        pend = {}
+        for g, rt in rts.items():
+            pend[g] = rt.dispatch_chunk(
+                length[g], count_aimd=length[g] > 1 or chunk[g] == 1)
+        while pend:
+            for g in list(pend):
+                rt = rts[g]
+                rt.collect_chunk(pend.pop(g), log=log)
+                remaining[g] -= length[g]
+                if remaining[g] > 0:
+                    length[g] = chunk[g] if remaining[g] >= chunk[g] else 1
+                    pend[g] = rt.dispatch_chunk(
+                        length[g],
+                        count_aimd=length[g] > 1 or chunk[g] == 1)
+        return {g: rt.report for g, rt in rts.items()}
+
+    # ---------------------------------------------------------- accounting
+    def steps_done(self, job_id: str) -> int:
+        if job_id in self._parked:
+            return self._parked[job_id].steps_done
+        if job_id in self.finished:
+            return self.finished[job_id].steps_done
+        gkey = self._home(job_id)
+        assert gkey is not None, f"unknown job {job_id}"
+        return self._slots[gkey].runtime(gkey).steps_done[job_id]
+
+    def job_state(self, job_id: str) -> JobTrainState:
+        """Live snapshot (non-destructive) of any known job."""
+        if job_id in self._parked:
+            return self._parked[job_id]
+        if job_id in self.finished:
+            return self.finished[job_id]
+        gkey = self._home(job_id)
+        assert gkey is not None, f"unknown job {job_id}"
+        return self._slots[gkey].runtime(gkey).export(job_id)
+
+    def retire_finished(self) -> List[str]:
+        """Move jobs past their step budget out of the active set."""
+        done = [jid for jid in self.active_job_ids
+                if self.steps_done(jid) >= self._specs[jid].steps_budget]
+        for jid in done:
+            self.finished[jid] = self._claim(jid)
+            self._had_runtime.discard(jid)
+        return done
+
+    @property
+    def regroup_events(self) -> int:
+        return sum(self._regroups.values())
+
+    def model_view(self, base_model: str) -> ModelView:
+        return ModelView(self, base_model)
+
+    def group_devices(self) -> Dict[GroupKey, Tuple[int, ...]]:
+        """Pool indices per live group (introspection/tests)."""
+        return {g: s.device_ids for g, s in self._slots.items()}

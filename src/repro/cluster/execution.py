@@ -3,21 +3,27 @@ discrete-event simulator (paper §4.1 methodology, closed-loop variant).
 
 The analytic simulator prices every group step with the throughput
 oracle (core/throughput).  ``ExecutionBackend`` closes the loop for
-small configs (smollm_360m, tinyllama_1_1b): at each scheduling horizon
-it mirrors the simulator's grouping decisions onto a live
-``ElasticEngine`` — adapters and optimizer state migrating losslessly as
-groups change — runs a few *real* fused train steps per group, and
-feeds the measured step time back as the simulated step time.  Every
-(predicted, measured) pair is recorded so the scheduler's oracle can be
-validated against execution (SimResult.step_records).
+small configs: at each scheduling horizon it mirrors the simulator's
+grouping decisions onto a live ``ClusterController`` (one
+``ElasticEngine`` per group — adapters and optimizer state migrating
+losslessly as groups change), runs a few *real* fused train steps per
+group, and feeds the measured step time back as the simulated step
+time.  Every (predicted, measured) pair is recorded AND fed to the
+attached ``OnlineCalibrator``, so the scheduler's oracle is not just
+validated against execution — it is re-fitted from it online
+(StepRecord.predicted vs .predicted_cal tracks the improvement).
 
-The engine is a measurement instrument: it executes
+The backend is a measurement instrument: it executes
 ``steps_per_measure`` real steps per (group, horizon), not the full
 simulated step count — exactly the paper's two-level micro-benchmark /
 emulator split, but with the micro-benchmarks taken online against the
 *current* group compositions.
 
-Layer map: DESIGN.md §6.
+Which base models execute is registry-driven: any registered config
+small enough to step on a host chip qualifies (``executable_models``),
+so new small configs become executable without editing this module.
+
+Layer map: DESIGN.md §6 (execution-backed mode), §9 (controller).
 """
 from __future__ import annotations
 
@@ -25,10 +31,36 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.elastic.engine import ElasticEngine
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.cluster.controller import (ClusterController, ModelView,
+                                      effective_grad_sync)
+from repro.core import throughput as tp
 
-# models small enough to step for real on a host CPU/single chip
-EXECUTABLE_MODELS = ("smollm-360m", "tinyllama-1.1b")
+
+def executable_models(max_params: float = 2e9) -> Tuple[str, ...]:
+    """Registry-driven discovery of host-executable base models.
+
+    A model qualifies when it offers a reduced variant and its FULL
+    backbone stays under *max_params* parameters — small enough that
+    real fused steps on a host CPU/single chip finish inside a test
+    horizon.  Replaces the old hardcoded allowlist: registering a new
+    small config makes it executable with no edit here.
+    """
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        try:
+            cfg.reduced()
+        except Exception:               # no reduced variant -> not runnable
+            continue
+        if tp.param_counts(cfg)[0] <= max_params:
+            out.append(arch)
+    return tuple(out)
+
+
+# evaluated once at import: the default allowlist (currently
+# smollm-360m + tinyllama-1.1b, and any future config under the cap)
+EXECUTABLE_MODELS = executable_models()
 
 
 @dataclass
@@ -38,50 +70,86 @@ class StepRecord:
     base_model: str
     job_ids: Tuple[str, ...]
     chips: int
-    predicted: float               # analytic oracle step time (s)
+    predicted: float               # analytic oracle step time (s), uncal
     measured: float                # wall-clock fused step time (s)
+    predicted_cal: float = -1.0    # calibrated oracle at observation time
+    #                                (-1 while the bucket is uncalibrated)
 
     @property
     def error(self) -> float:
-        """Relative prediction error of the throughput oracle."""
+        """Relative prediction error of the uncalibrated oracle."""
         return abs(self.predicted - self.measured) / max(self.measured,
                                                          1e-12)
 
+    @property
+    def error_cal(self) -> float:
+        """Relative error of the calibrated oracle (falls back to the
+        uncalibrated prediction while the bucket has no fit)."""
+        p = self.predicted_cal if self.predicted_cal >= 0 else self.predicted
+        return abs(p - self.measured) / max(self.measured, 1e-12)
+
 
 class ExecutionBackend:
-    """Mirrors simulator grouping onto live ElasticEngines and measures."""
+    """Mirrors simulator grouping onto a live ClusterController and
+    measures real step times, feeding the online calibrator."""
 
     def __init__(self, *, steps_per_measure: int = 2,
-                 models: Sequence[str] = EXECUTABLE_MODELS,
+                 models: Optional[Sequence[str]] = None,
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
                  remat: bool = False, mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 devices: Optional[Sequence] = None,
+                 calibrator: Optional[tp.OnlineCalibrator] = None,
+                 hw: tp.HardwareSpec = tp.V5E,
                  seed: int = 0):
         assert steps_per_measure >= 2, \
             "need >=2 steps so min() discards the jit-compile outlier"
         self.steps_per_measure = steps_per_measure
-        self.models = tuple(models)
+        self.models = tuple(models) if models is not None \
+            else EXECUTABLE_MODELS
         # mesh: measure on a real sharded mesh (DESIGN.md §8) so the
         # oracle is validated against distributed execution, not a
-        # single-device proxy.  The default ref impl has no shard-local
-        # VJP for exact gathered wgrads — fall back to the classic
-        # psum strategy instead of failing at measurement time.
-        if mesh is not None and impl in ("ref", "loop"):
-            grad_sync = "psum"
+        # single-device proxy.  effective_grad_sync falls ref/loop back
+        # to psum instead of failing at measurement time.
+        grad_sync = effective_grad_sync(impl, mesh, grad_sync)
+        # the effective measurement config, for introspection/tests —
+        # engine construction itself moved into the controller, which
+        # receives these same values below
         self._engine_kwargs = dict(impl=impl, block_t=block_t, lr=lr,
                                    remat=remat, seed=seed, mesh=mesh,
                                    data_axis=data_axis,
                                    grad_sync=grad_sync, tp_mode=tp_mode)
-        self._engines: Dict[str, ElasticEngine] = {}
+        self.calibrator = calibrator if calibrator is not None \
+            else tp.OnlineCalibrator(hw)
+        # controller modes: an explicit device pool partitions into
+        # per-group submeshes (concurrent measurement); an explicit mesh
+        # pins every group to it; neither = the legacy meshless
+        # measurement instrument (single-device semantics).
+        self.controller = ClusterController(
+            self._cfg_of, devices=devices, fixed_mesh=mesh,
+            partition=devices is not None and mesh is None,
+            calibrator=self.calibrator,
+            concurrency="sequential", impl=impl, block_t=block_t, lr=lr,
+            remat=remat, chunk_size=1, data_axis=data_axis,
+            grad_sync=grad_sync, tp_mode=tp_mode, seed=seed)
+        self._cfgs: Dict[str, ModelConfig] = {}
         self.records: List[StepRecord] = []
+
+    def _cfg_of(self, base_model: str) -> ModelConfig:
+        """The executable config is whatever the simulator passes to
+        ``observe`` (usually the reduced variant)."""
+        return self._cfgs[base_model]
 
     @property
     def regroup_events(self) -> int:
-        """Live-state migrations executed across all engines."""
-        return sum(e.regroup_events for e in self._engines.values())
+        """Live-state migrations executed across all groups."""
+        return self.controller.regroup_events
 
-    def engine(self, base_model: str) -> Optional[ElasticEngine]:
-        return self._engines.get(base_model)
+    def engine(self, base_model: str) -> Optional[ModelView]:
+        """Per-model aggregate view (job ids, finished, step counts)."""
+        if base_model not in self._cfgs:
+            return None
+        return self.controller.model_view(base_model)
 
     def observe(self, cfg: ModelConfig, group, predicted: float,
                 now: float) -> Optional[float]:
@@ -90,24 +158,29 @@ class ExecutionBackend:
         base = group.jobs[0].spec.base_model
         if self.models and base not in self.models:
             return None
-        eng = self._engines.get(base)
-        if eng is None:
-            eng = ElasticEngine(cfg, **self._engine_kwargs)
-            self._engines[base] = eng
-        known = set(eng.job_ids) | set(eng.finished)
+        self._cfgs[base] = cfg
+        self.controller.register_cfg(base, cfg)
+        known = set(self.controller.active_job_ids) \
+            | set(self.controller.finished)
         for spec in group.specs:
             if spec.job_id not in known:
-                eng.add_job(spec)
-        rt = eng.ensure_group(group.job_ids)
+                self.controller.submit(spec)
+        rt = self.controller.ensure_group(group.job_ids, chips=group.chips)
+        # calibrated prediction BEFORE this observation updates the fit —
+        # the honest "what would the calibrated oracle have said" number
+        pred_cal = self.calibrator.predict(cfg, group.specs, group.chips) \
+            if self.calibrator.calibrated else -1.0
         # chunk_size=1: the backend is a measurement instrument — per-step
         # wall times are the signal, so keep step-at-a-time granularity
         # rather than chunk means (steps are AOT-compiled, so no compile
         # outlier lands in the window either way).
         rt.run(self.steps_per_measure, chunk_size=1)
         measured = rt.report.measured_step_time(self.steps_per_measure)
+        self.calibrator.observe(cfg, group.specs, group.chips, measured)
         self.records.append(StepRecord(
             t=now, base_model=base, job_ids=tuple(group.job_ids),
-            chips=group.chips, predicted=predicted, measured=measured))
+            chips=group.chips, predicted=predicted, measured=measured,
+            predicted_cal=pred_cal))
         return measured
 
     # ------------------------------------------------------------ report
@@ -115,6 +188,7 @@ class ExecutionBackend:
         if not self.records:
             return {"observations": 0, "regroup_events": 0}
         errs = [r.error for r in self.records]
+        errs_cal = [r.error_cal for r in self.records]
         return {
             "observations": len(self.records),
             "regroup_events": self.regroup_events,
@@ -124,4 +198,5 @@ class ExecutionBackend:
             / len(self.records),
             "mean_rel_error": sum(errs) / len(errs),
             "max_rel_error": max(errs),
+            "mean_rel_error_cal": sum(errs_cal) / len(errs_cal),
         }

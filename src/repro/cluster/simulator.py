@@ -100,8 +100,11 @@ GroupPolicy = Callable[[List[JobRuntimeState], ClusterConfig, bool],
 
 
 def tlora_policy(cfg_of: Callable[[str], ModelConfig],
-                 kernel_fused: bool = True) -> GroupPolicy:
-    """The paper's Adapter Scheduler (Algorithm 1) as a policy."""
+                 kernel_fused: bool = True,
+                 calibrator=None) -> GroupPolicy:
+    """The paper's Adapter Scheduler (Algorithm 1) as a policy.  With a
+    *calibrator* the grouping decisions price against the online-fitted
+    effective constants instead of the static HardwareSpec."""
     def policy(jobs: List[JobRuntimeState], cc: ClusterConfig,
                pressure: bool = False) -> List[Group]:
         groups: List[Group] = []
@@ -112,7 +115,8 @@ def tlora_policy(cfg_of: Callable[[str], ModelConfig],
         for model, js in by_model.items():
             sched = AdapterScheduler(
                 cfg_of(model),
-                SchedulerConfig(hw=cc.hw, kernel_fused=kernel_fused))
+                SchedulerConfig(hw=cc.hw, kernel_fused=kernel_fused),
+                calibrator=calibrator)
             node_of = _node_assigner(js, cc)
             groups.extend(sched.schedule(js, node_of=node_of,
                                          pressure=pressure))
@@ -144,10 +148,15 @@ class ClusterSimulator:
 
     def __init__(self, cluster: ClusterConfig, policy: GroupPolicy,
                  cfg_of: Optional[Callable[[str], ModelConfig]] = None,
-                 execution=None):
+                 execution=None, calibrator=None):
         self.cc = cluster
         self.policy = policy
         self.execution = execution
+        # close the loop: with an execution backend, measured step times
+        # re-fit the oracle's effective constants online, and every
+        # analytic price (non-executed groups included) uses the fit
+        self.calibrator = calibrator if calibrator is not None \
+            else getattr(execution, "calibrator", None)
         self._cfg_cache: Dict[str, ModelConfig] = {}
         self._cfg_of = cfg_of or self._default_cfg_of
 
@@ -159,10 +168,21 @@ class ClusterSimulator:
         return self._cfg_cache[model]
 
     # ----------------------------------------------------------- pricing
-    def _group_step_time(self, g: Group) -> float:
+    def _group_step_time(self, g: Group, calibrated: bool = True) -> float:
         cfg = self._cfg_of(g.jobs[0].spec.base_model)
+        hw = self.cc.hw
+        # calibrated pricing only when the fit's frame of reference
+        # matches this simulator's: the calibrator regresses against
+        # fused-kernel pricing on ITS base constants, so a cluster
+        # configured with different constants (pass hw=cc.hw to
+        # ExecutionBackend to align) or the unfused-kernel ablation
+        # must not silently reprice through a mismatched fit
+        if calibrated and self.calibrator is not None \
+                and self.calibrator.hw == self.cc.hw \
+                and self.cc.kernel_fused:
+            hw = self.calibrator.hw_for(cfg.name, g.chips, len(g.jobs))
         return tp.group_step_cost(
-            cfg, g.specs, g.chips, hw=self.cc.hw,
+            cfg, g.specs, g.chips, hw=hw,
             spans_nodes=g.spans_nodes,
             kernel_fused=self.cc.kernel_fused).total
 
@@ -234,9 +254,13 @@ class ClusterSimulator:
             for g in running:
                 step_t = self._group_step_time(g)
                 if self.execution is not None:
+                    # the backend records the UNCALIBRATED analytic
+                    # prediction (its calibrated counterpart is computed
+                    # backend-side) so StepRecords measure how much the
+                    # online fit improves on the static constants
                     measured = self.execution.observe(
                         self._cfg_of(g.jobs[0].spec.base_model), g,
-                        step_t, t)
+                        self._group_step_time(g, calibrated=False), t)
                     if measured:
                         step_t = measured
                 comp_t = self._group_compute_time(g)

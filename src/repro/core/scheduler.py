@@ -60,17 +60,35 @@ class SchedulerConfig:
 
 
 class AdapterScheduler:
-    """Hierarchical incremental grouping (Algorithm 1, lines 4-16)."""
+    """Hierarchical incremental grouping (Algorithm 1, lines 4-16).
+
+    With a ``calibrator`` (core/throughput.OnlineCalibrator) every
+    oracle probe — joint throughput, slowdown feasibility, residual
+    capacity, elastic shrink — is priced with MEASURED effective
+    hardware constants for this model at the probed chip count, so
+    grouping decisions track how groups actually run (paper §3.4's
+    online scheduling, closed-loop)."""
 
     def __init__(self, cfg: ModelConfig,
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None,
+                 calibrator: Optional[tp.OnlineCalibrator] = None):
         self.cfg = cfg
         self.sched = sched or SchedulerConfig()
+        self.calibrator = calibrator
 
     # ------------------------------------------------------------ oracle
+    def hw_for(self, chips: int, k: int = 1) -> tp.HardwareSpec:
+        """Hardware constants used to price a K-job group on *chips* —
+        the calibrated fit when one exists, the static config
+        otherwise."""
+        if self.calibrator is None:
+            return self.sched.hw
+        return self.calibrator.hw_for(self.cfg.name, chips, k)
+
     def throughput(self, group: Group) -> float:
         return tp.group_throughput(self.cfg, group.specs, group.chips,
-                                   hw=self.sched.hw,
+                                   hw=self.hw_for(group.chips,
+                                                  len(group.jobs)),
                                    spans_nodes=group.spans_nodes,
                                    kernel_fused=self.sched.kernel_fused)
 
@@ -83,7 +101,8 @@ class AdapterScheduler:
             return False
         if len({j.spec.seq_len for j in g.jobs}) != 1:
             return False       # fused batch layout requires shared seq_len
-        deltas = tp.slowdowns(self.cfg, g.specs, g.chips, hw=self.sched.hw,
+        deltas = tp.slowdowns(self.cfg, g.specs, g.chips,
+                              hw=self.hw_for(g.chips, len(g.jobs)),
                               spans_nodes=g.spans_nodes,
                               kernel_fused=self.sched.kernel_fused)
         return all(deltas[j.spec.job_id] <= j.spec.max_slowdown
@@ -134,7 +153,8 @@ class AdapterScheduler:
         floor = max(tp.min_chips(self.cfg, hw=self.sched.hw), 1)
 
         def ok(c: int) -> bool:
-            deltas = tp.slowdowns(self.cfg, g.specs, c, hw=self.sched.hw,
+            deltas = tp.slowdowns(self.cfg, g.specs, c,
+                                  hw=self.hw_for(c, len(g.jobs)),
                                   spans_nodes=g.spans_nodes,
                                   kernel_fused=self.sched.kernel_fused)
             return all(deltas[j.spec.job_id] <= margin * j.spec.max_slowdown
@@ -181,17 +201,23 @@ class AdapterScheduler:
     def _pack(self, queue: List[Group], spans: bool,
               pressure: bool = False) -> List[Group]:
         """Incremental pack-and-reinsert loop within one tier."""
-        # sort: urgency desc, residual asc (Algorithm 1 line 5)
-        queue = sorted(queue, key=lambda g: (-g.urgency(),
-                                             g.residual(self.cfg,
-                                                        self.sched.hw)))
+        # sort: urgency desc, residual asc (Algorithm 1 line 5) — the
+        # residual signal uses measured (calibrated) throughput when the
+        # feedback loop is closed
+        queue = sorted(queue,
+                       key=lambda g: (-g.urgency(),
+                                      g.residual(self.cfg,
+                                                 self.hw_for(g.chips,
+                                                             len(g.jobs)))))
         finals: List[Group] = []
         while queue:
             seed = queue.pop(0)
             # candidates sorted by residual DESC: most slack first — they
             # are the complementary partners for a constrained seed.
             tail = sorted(queue,
-                          key=lambda g: -g.residual(self.cfg, self.sched.hw))
+                          key=lambda g: -g.residual(
+                              self.cfg,
+                              self.hw_for(g.chips, len(g.jobs))))
             cut = self._binary_cut(seed, tail, spans, pressure=pressure)
             if cut == 0:
                 finals.append(seed)

@@ -292,3 +292,196 @@ def min_chips(cfg: ModelConfig, *, hw: HardwareSpec = V5E) -> int:
     while need / c > hw.hbm_capacity:
         c *= 2
     return c
+
+
+# ----------------------------------------------------- online calibration
+@dataclass
+class _CalBucket:
+    """EWMA-weighted least-squares accumulators for one (model, chips)."""
+    sw: float = 0.0      # sum of weights
+    sx: float = 0.0      # sum of w * x          (x = analytic machine time)
+    sy: float = 0.0      # sum of w * y          (y = measured step time)
+    sxx: float = 0.0
+    sxy: float = 0.0
+    n: int = 0           # raw observation count
+
+
+class OnlineCalibrator:
+    """Fit effective hardware constants from measured `StepRecord`s.
+
+    Closes the §3.4/§4.1 feedback loop: the analytic oracle prices a
+    step with fixed `HardwareSpec` constants, but the machine the groups
+    actually run on (a CPU host in tests, a real accelerator in prod)
+    has different effective mfu, bandwidth efficiency and launch/step
+    overheads.  Per (base model, chips, group size) bucket this
+    maintains an exponentially-weighted least-squares fit
+
+        measured  ≈  alpha * t_machine  +  beta
+
+    where ``t_machine = StepCost.total - hw.step_overhead`` is the
+    machine-rate part of the analytic prediction (compute/memory/
+    collective roofline + kernel launches) and ``beta`` absorbs the
+    per-step framework overhead.  ``alpha`` rescales every rate
+    constant at once — mfu_cap, hbm_bw, ici/dcn bandwidth, launch and
+    sync latencies all divide (or multiply) by it — so the calibrated
+    `HardwareSpec` returned by :meth:`hw_for` reproduces the fit
+    EXACTLY through the unchanged `group_step_cost` machinery:
+    ``total(hw_cal) = alpha * (total(hw) - step_overhead) + beta``.
+
+    Buckets include the group size K because a single (alpha, beta)
+    cannot absorb MODEL error, only constant error: on hosts where the
+    analytic step is floored by a token-independent term (tiny configs
+    sit on the weight-streaming floor) t_machine barely moves with K
+    while the true cost is token-dominated, and one shared fit would
+    oscillate between compositions — measured exactly this way on
+    XLA:CPU (DESIGN.md §9).  Per-K buckets are the online analogue of
+    the paper's per-configuration micro-benchmarks.
+
+    EWMA weighting (``decay`` per observation) tracks drift — thermal
+    throttling, host load, dataset-shape shifts; with at least
+    ``min_obs`` observations and a well-spread x the two-parameter fit
+    engages, otherwise a through-origin ratio fit (beta = 0) covers the
+    degenerate all-identical-workload stream.  Until ``min_obs``
+    observations arrive the bucket stays uncalibrated (base constants,
+    or the same-K bucket with the nearest chip count) — never
+    extrapolate from a single noisy point, and never across group
+    sizes.
+    """
+
+    def __init__(self, hw: HardwareSpec = V5E, *, decay: float = 0.9,
+                 min_obs: int = 2):
+        assert 0.0 < decay <= 1.0
+        self.hw = hw
+        self.decay = decay
+        self.min_obs = max(1, int(min_obs))
+        self._buckets: Dict[Tuple[str, int, int], _CalBucket] = {}
+        self._hw_cache: Dict[Tuple[str, int, int], HardwareSpec] = {}
+
+    # ------------------------------------------------------------- intake
+    def machine_time(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                     chips: int, **kw) -> float:
+        """The regressor x: analytic step time minus framework overhead,
+        priced with the UNCALIBRATED base constants."""
+        return group_step_cost(cfg, jobs, chips, hw=self.hw, **kw).total \
+            - self.hw.step_overhead
+
+    def observe(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                chips: int, measured: float, **kw):
+        """Fold one measured step time into its (model, chips, K)
+        bucket."""
+        assert measured > 0, measured
+        x = self.machine_time(cfg, jobs, chips, **kw)
+        key = (cfg.name, int(chips), len(jobs))
+        b = self._buckets.setdefault(key, _CalBucket())
+        r = self.decay
+        b.sw = b.sw * r + 1.0
+        b.sx = b.sx * r + x
+        b.sy = b.sy * r + measured
+        b.sxx = b.sxx * r + x * x
+        b.sxy = b.sxy * r + x * measured
+        b.n += 1
+        # invalidate the WHOLE spec cache, not just this key: hw_for
+        # caches entries for never-observed keys too (base constants or
+        # a nearest-bucket borrow), and those must re-derive once a new
+        # observation could change what they borrow — stale entries
+        # would freeze the scheduler's probe pricing at whatever it saw
+        # before calibration engaged
+        self._hw_cache.clear()
+
+    # -------------------------------------------------------------- fits
+    def fit(self, model: str, chips: int,
+            k: int = 1) -> Optional[Tuple[float, float]]:
+        """(alpha, beta) for the bucket, or None while uncalibrated."""
+        b = self._buckets.get((model, int(chips), int(k)))
+        if b is None or b.n < self.min_obs or b.sw <= 0:
+            return None
+        mean_x = b.sx / b.sw
+        var_x = max(b.sxx / b.sw - mean_x * mean_x, 0.0)
+        alpha = beta = None
+        # two-parameter fit only when x is WELL spread (>=3% relative
+        # std): near-identical workloads cannot separate slope from
+        # intercept, and a hairline spread would amplify measurement
+        # noise into an arbitrary slope — distinct batch sizes move x
+        # by >=12% on every registered config, so real composition
+        # variation clears this easily
+        if var_x > (3e-2 * max(mean_x, 1e-12)) ** 2:
+            det = b.sw * b.sxx - b.sx * b.sx
+            a = (b.sw * b.sxy - b.sx * b.sy) / det
+            c = (b.sy - a * b.sx) / b.sw
+            if a > 0 and c >= 0:
+                alpha, beta = a, c
+        if alpha is None:
+            # through-origin ratio fit: all overhead folds into alpha
+            if b.sxx <= 0:
+                return None
+            alpha, beta = b.sxy / b.sxx, 0.0
+        return (alpha, beta) if alpha > 0 else None
+
+    def _nearest_fit(self, model: str, chips: int,
+                     k: int) -> Optional[Tuple[float, float]]:
+        """Fall back to the calibrated SAME-K bucket with the nearest
+        chip count — the scheduler probes chip counts it has never run,
+        and effective constants vary slowly with scale.  Never borrow
+        across group sizes: that is exactly the composition error the
+        per-K buckets exist to avoid."""
+        best, best_d = None, float("inf")
+        for (m, c, kb), _ in self._buckets.items():
+            if m != model or kb != k:
+                continue
+            f = self.fit(m, c, kb)
+            if f is None:
+                continue
+            d = abs(np.log(max(c, 1) / max(chips, 1)))
+            if d < best_d:
+                best, best_d = f, d
+        return best
+
+    # ------------------------------------------------------------ oracle
+    def hw_for(self, model: str, chips: int,
+               k: int = 1) -> HardwareSpec:
+        """Calibrated `HardwareSpec` for (model, chips, K); the base
+        constants when the bucket (and every same-K same-model
+        neighbour) is still uncalibrated."""
+        key = (model, int(chips), int(k))
+        hit = self._hw_cache.get(key)
+        if hit is not None:
+            return hit
+        f = self.fit(model, chips, k) or self._nearest_fit(model, chips, k)
+        if f is None:
+            hw = self.hw
+        else:
+            alpha, beta = f
+            hw = dataclasses.replace(
+                self.hw,
+                mfu_cap=self.hw.mfu_cap / alpha,
+                hbm_bw=self.hw.hbm_bw / alpha,
+                ici_bw=self.hw.ici_bw / alpha,
+                dcn_bw=self.hw.dcn_bw / alpha,
+                launch_overhead=self.hw.launch_overhead * alpha,
+                sync_latency=self.hw.sync_latency * alpha,
+                step_overhead=beta)
+        self._hw_cache[key] = hw
+        return hw
+
+    def predict(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                chips: int, **kw) -> float:
+        """Calibrated step-time prediction (falls back to the base oracle
+        while uncalibrated)."""
+        hw = self.hw_for(cfg.name, chips, len(jobs))
+        return group_step_cost(cfg, jobs, chips, hw=hw, **kw).total
+
+    @property
+    def calibrated(self) -> bool:
+        return any(self.fit(m, c, k) is not None
+                   for m, c, k in self._buckets)
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for (m, c, k), b in self._buckets.items():
+            f = self.fit(m, c, k)
+            out[f"{m}@{c}xK{k}"] = {
+                "observations": b.n,
+                "alpha": f[0] if f else float("nan"),
+                "beta": f[1] if f else float("nan"),
+            }
+        return out

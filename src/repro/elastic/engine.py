@@ -46,6 +46,7 @@ class ElasticEngine:
                  weight_decay: float = 0.0, chunk_size: int = 4,
                  mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 checkpoint_dir=None, checkpoint_every: int = 0,
                  seed: int = 0):
         self.cfg = cfg
         self._key = key if key is not None else jax.random.PRNGKey(seed)
@@ -64,7 +65,9 @@ class ElasticEngine:
                                weight_decay=weight_decay,
                                chunk_size=chunk_size, seed=seed,
                                mesh=mesh, data_axis=data_axis,
-                               grad_sync=grad_sync, tp_mode=tp_mode)
+                               grad_sync=grad_sync, tp_mode=tp_mode,
+                               checkpoint_dir=checkpoint_dir,
+                               checkpoint_every=checkpoint_every)
         self._parked: Dict[str, JobTrainState] = {}   # active, not grouped
         self._runtimes: Dict[GroupKey, GroupRuntime] = {}
         self.finished: Dict[str, JobTrainState] = {}
@@ -181,7 +184,8 @@ class ElasticEngine:
             spec = self._spec_of(jid)
             s = JobRuntimeState(spec=spec, steps_done=self.steps_done(jid))
             s.standalone_step_time = tp.standalone_step_time(
-                self.cfg, spec, hw=self.scheduler.sched.hw,
+                self.cfg, spec,
+                hw=self.scheduler.hw_for(max(spec.gpus, 1)),
                 kernel_fused=self.scheduler.sched.kernel_fused)
             gkey = self._home(jid)
             if gkey is not None:

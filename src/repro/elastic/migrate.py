@@ -24,10 +24,12 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.checkpoint import insert_job, slice_job
+from repro.checkpoint.checkpoint import (insert_job, load_job, load_meta,
+                                         restore_stream_state, slice_job)
 from repro.configs.base import ModelConfig
 from repro.core.jobs import LoRAJobSpec
 from repro.data.pipeline import JobStream
@@ -68,6 +70,41 @@ class JobTrainState:
                    opt_step=0, steps_done=0,
                    stream=JobStream(spec, cfg.vocab_size, seed))
 
+    @classmethod
+    def from_checkpoint(cls, path: str, spec: LoRAJobSpec,
+                        cfg: ModelConfig, *, seed: int = 0
+                        ) -> "JobTrainState":
+        """Rehydrate a job from its per-job ``.npz`` checkpoint.
+
+        The restored state is partition-agnostic: it can be admitted
+        into any controller/engine and re-fuse at a different
+        K/index/r_pad/submesh than it was saved under.  The data-stream
+        rng position persisted by ``GroupRuntime.save_checkpoints``
+        resumes the exact token sequence; checkpoints written without it
+        (e.g. external tools using ``save_job`` directly) fall back to a
+        fresh stream."""
+        z = load_job(path)
+        saved_id = str(np.asarray(z["__job_id__"]))
+        assert saved_id == spec.job_id, (saved_id, spec.job_id)
+        assert int(z["__rank__"]) == spec.rank, (int(z["__rank__"]),
+                                                 spec.rank)
+        adapter = {k[len("adapter/"):]: jnp.asarray(v)
+                   for k, v in z.items() if k.startswith("adapter/")}
+        mu = {k[3:]: jnp.asarray(v) for k, v in z.items()
+              if k.startswith("mu/")}
+        nu = {k[3:]: jnp.asarray(v) for k, v in z.items()
+              if k.startswith("nu/")}
+        assert mu and nu, f"{path} lacks optimizer moments"
+        meta = load_meta(z)
+        opt_step = int(z["__step__"])
+        stream = JobStream(spec, cfg.vocab_size, seed)
+        if "stream" in meta:
+            restore_stream_state(stream, str(meta["stream"]))
+        return cls(spec=spec, adapter=adapter, mu=mu, nu=nu,
+                   opt_step=opt_step,
+                   steps_done=int(meta.get("steps_done", opt_step)),
+                   stream=stream)
+
 
 def zeros_like_fused(cfg: ModelConfig, ranks: Sequence[int],
                      r_pad: int) -> dict:
@@ -103,15 +140,21 @@ def unfuse_state(adapters: dict, opt_state: AdamWState, idx: int,
                  spec: LoRAJobSpec, *, steps_done: int = 0,
                  stream: Optional[JobStream] = None) -> JobTrainState:
     """Extract job *idx* from a fused stack into portable form (the
-    inverse of fuse_states for one member)."""
+    inverse of fuse_states for one member).
+
+    Slices come back HOST-resident (device_get): the portable state
+    must be device-neutral, or a job exported from a runtime pinned to
+    one submesh could not re-fuse with states pinned to a disjoint one
+    (jax refuses mixed-commitment ops).  device_get -> device_put
+    round-trips bits exactly, so losslessness is unaffected."""
     opt_step = int(jax.device_get(opt_state.step)[idx]) \
         if getattr(opt_state.step, "ndim", 0) >= 1 \
         else int(jax.device_get(opt_state.step))
     return JobTrainState(
         spec=spec,
-        adapter=slice_job(adapters, idx, spec.rank),
-        mu=slice_job(opt_state.mu, idx, spec.rank),
-        nu=slice_job(opt_state.nu, idx, spec.rank),
+        adapter=jax.device_get(slice_job(adapters, idx, spec.rank)),
+        mu=jax.device_get(slice_job(opt_state.mu, idx, spec.rank)),
+        nu=jax.device_get(slice_job(opt_state.nu, idx, spec.rank)),
         opt_step=opt_step,
         steps_done=steps_done,
         stream=stream)

@@ -13,9 +13,10 @@ Layer map: DESIGN.md §6.
 from __future__ import annotations
 
 import copy
+import os
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
@@ -62,6 +63,25 @@ class TrainReport:
         return float(min(self.step_times[-window:]))
 
 
+@dataclass
+class PendingChunk:
+    """One dispatched-but-uncollected chunk (async on device).
+
+    ``dispatch_chunk`` returns this; the metrics leaves are jax arrays
+    whose computation may still be running — nothing blocks until
+    ``collect_chunk`` fetches them.  The controller keeps one pending
+    chunk per group so disjoint submeshes compute concurrently
+    (DESIGN.md §9)."""
+    metrics: Any
+    length: int
+    t0: float
+    count_aimd: bool = True
+    # stream rng positions AS OF this chunk's data (captured before any
+    # prefetch advances the batcher) — what the checkpoint hook must
+    # persist so a restore resumes on exactly the next unseen tokens
+    stream_states: Optional[List[str]] = None
+
+
 class GroupRuntime:
     """Owns one fused group's live training state; ``run`` is re-entrant."""
 
@@ -76,6 +96,8 @@ class GroupRuntime:
                  chunk_size: int = 4, scan_unroll: bool = False,
                  mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
                  seed: int = 0):
         self.cfg = cfg
         self.specs = list(specs)
@@ -160,6 +182,13 @@ class GroupRuntime:
         self.chunk_size = max(1, chunk_size)
         self.scan_unroll = scan_unroll
         self._step_cache: Dict[tuple, Callable] = {}
+        # periodic per-job checkpointing (every N collected chunks)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self._chunks_collected = 0
+        # prefetch buffer for the staged-next-chunk overlap
+        self._staged: Optional[dict] = None
+        self._staged_len = 0
         self.report = TrainReport(
             samples_per_step=sum(s.batch_size for s in self.specs))
 
@@ -255,6 +284,95 @@ class GroupRuntime:
         return {k: jax.device_put(v[:, self._perm], self._batch_sharding)
                 for k, v in batches.items()}
 
+    def dispatch_chunk(self, length: Optional[int] = None, *,
+                       prefetch: int = 0,
+                       count_aimd: Optional[bool] = None) -> PendingChunk:
+        """Dispatch one chunk of *length* steps asynchronously.
+
+        Returns immediately after the jitted call — the computation runs
+        on this runtime's devices in the background until
+        ``collect_chunk`` fetches the metrics.  A batch pre-staged by a
+        previous ``prefetch`` is consumed when its length matches;
+        *prefetch* > 0 stages the NEXT chunk's batches right after
+        dispatch, overlapping host data work with device compute.  The
+        split exists so a controller can keep one pending chunk per
+        group and round-robin across disjoint submeshes (DESIGN.md §9);
+        ``run`` is the single-group convenience loop over it.
+
+        Collect every pending chunk before ``export``/migration:
+        adapters are already rebound to the in-flight result while
+        ``steps_done`` lags until collection.
+        """
+        L = int(length or self.chunk_size)
+        assert L >= 1
+        if self._staged is not None:
+            # a mismatched prefetch would orphan stream data the batcher
+            # already consumed (breaking the lossless data contract), so
+            # it is a caller bug — fail loudly instead of dropping it
+            assert self._staged_len == L, (self._staged_len, L)
+            staged, self._staged = self._staged, None
+        else:
+            staged = self._stage(L)
+        step_fn = self._get_step(
+            self.n, L, (self.params, self.adapters, self.opt_state, staged))
+        t0 = time.perf_counter()
+        # async dispatch: nothing below blocks until the metrics fetch
+        self.adapters, self.opt_state, metrics = step_fn(
+            self.params, self.adapters, self.opt_state, staged)
+        # snapshot stream positions BEFORE prefetching: the checkpoint
+        # hook fires at collect time, after the prefetch has advanced
+        # the live streams past data this chunk never trained on —
+        # persisting the live position would make a restore skip the
+        # prefetched batches and silently fork the trajectory
+        streams = None
+        if self.checkpoint_every:
+            from repro.checkpoint.checkpoint import stream_state
+            streams = [stream_state(s) for s in self.batcher.streams]
+        if prefetch > 0:                     # overlaps with device compute
+            self._staged = self._stage(prefetch)
+            self._staged_len = prefetch
+        return PendingChunk(metrics=metrics, length=L, t0=t0,
+                            count_aimd=L > 1 if count_aimd is None
+                            else count_aimd,
+                            stream_states=streams)
+
+    def collect_chunk(self, pending: PendingChunk,
+                      log: Optional[Callable[[str], None]] = None
+                      ) -> TrainReport:
+        """Block on *pending*'s metrics and fold them into the report.
+
+        One host sync per chunk; also advances per-job step accounting,
+        feeds AIMD, and fires the periodic checkpoint hook."""
+        log = log or (lambda s: None)
+        rep = self.report
+        L = pending.length
+        host = jax.device_get(pending.metrics)  # the chunk's one host sync
+        dt = (time.perf_counter() - pending.t0) / L
+        losses = np.atleast_1d(np.asarray(host["loss"], np.float64))
+        per_job = np.atleast_2d(np.asarray(host["per_job_loss"]))
+        rep.steps += L
+        rep.losses.extend(losses.tolist())
+        rep.per_job_losses.extend(per_job)
+        rep.step_times.extend([dt] * L)
+        rep.nano_history.extend([self.n] * L)
+        for jid in self.job_ids:
+            self.steps_done[jid] += L
+        # AIMD (Eq. 2) fed the chunk's mean step time — compile-clean
+        # thanks to the AOT-compiled step.  Degenerate single-step
+        # tails inside a longer run are skipped (un-amortized
+        # dispatch/sync overhead would read as a spurious slowdown
+        # inside the controller's 2% noise band); deliberate
+        # chunk_size=1 observations are a uniform regime and count.
+        if self.aimd is not None and pending.count_aimd:
+            self.n = self.aimd.update(dt)
+        log(f"steps {rep.steps - L:4d}..{rep.steps - 1:4d} "
+            f"loss {losses[-1]:.4f} nano {self.n} dt {dt*1e3:.1f}ms/step")
+        self._chunks_collected += 1
+        if self.checkpoint_every and \
+                self._chunks_collected % self.checkpoint_every == 0:
+            self.save_checkpoints(stream_states=pending.stream_states)
+        return rep
+
     def run(self, steps: int,
             log: Optional[Callable[[str], None]] = None,
             chunk_size: Optional[int] = None) -> TrainReport:
@@ -275,53 +393,53 @@ class GroupRuntime:
         (an engine polling between horizons) reuse that one executable
         and keep feeding AIMD uniform observations.
         """
-        log = log or (lambda s: None)
-        rep = self.report
         if steps <= 0:
-            return rep
+            return self.report
         chunk = max(1, chunk_size or self.chunk_size)
 
         def next_len(remaining: int) -> int:
             return chunk if remaining >= chunk else min(1, remaining)
 
         L = min(chunk, steps)
-        staged = self._stage(L)
         done = 0
         while done < steps:
-            step_fn = self._get_step(
-                self.n, L,
-                (self.params, self.adapters, self.opt_state, staged))
-            t0 = time.perf_counter()
-            # async dispatch: nothing below blocks until the metrics fetch
-            self.adapters, self.opt_state, metrics = step_fn(
-                self.params, self.adapters, self.opt_state, staged)
             nxt = next_len(steps - done - L)
-            if nxt > 0:                      # overlaps with device compute
-                staged = self._stage(nxt)
-            host = jax.device_get(metrics)   # the chunk's single host sync
-            dt = (time.perf_counter() - t0) / L
-            losses = np.atleast_1d(np.asarray(host["loss"], np.float64))
-            per_job = np.atleast_2d(np.asarray(host["per_job_loss"]))
-            rep.steps += L
-            rep.losses.extend(losses.tolist())
-            rep.per_job_losses.extend(per_job)
-            rep.step_times.extend([dt] * L)
-            rep.nano_history.extend([self.n] * L)
-            for jid in self.job_ids:
-                self.steps_done[jid] += L
+            pending = self.dispatch_chunk(L, prefetch=nxt,
+                                          count_aimd=L > 1 or chunk == 1)
+            self.collect_chunk(pending, log=log)
             done += L
-            # AIMD (Eq. 2) fed the chunk's mean step time — compile-clean
-            # thanks to the AOT-compiled step.  Degenerate single-step
-            # tails inside a longer run are skipped (un-amortized
-            # dispatch/sync overhead would read as a spurious slowdown
-            # inside the controller's 2% noise band); deliberate
-            # chunk_size=1 observations are a uniform regime and count.
-            if self.aimd is not None and (L > 1 or chunk == 1):
-                self.n = self.aimd.update(dt)
-            log(f"steps {rep.steps - L:4d}..{rep.steps - 1:4d} "
-                f"loss {losses[-1]:.4f} nano {self.n} dt {dt*1e3:.1f}ms/step")
             L = nxt if nxt > 0 else L
         return self.report
+
+    # -------------------------------------------------------- checkpoints
+    def save_checkpoints(self, directory: Optional[str] = None, *,
+                         stream_states: Optional[List[str]] = None
+                         ) -> List[str]:
+        """Write every member's per-job checkpoint (adapter + Adam
+        moments + per-job Adam step + data-stream rng position) to
+        ``<dir>/<job_id>.npz`` — the portable format a job restores from
+        into ANY controller partition (checkpoint/checkpoint.py).
+
+        ``stream_states`` overrides the live rng positions — the
+        periodic hook passes the pre-prefetch snapshot so the persisted
+        position matches the persisted adapter state."""
+        from repro.checkpoint.checkpoint import save_job, stream_state
+        directory = directory or self.checkpoint_dir
+        assert directory, "no checkpoint_dir configured"
+        if stream_states is None:
+            stream_states = [stream_state(s) for s in self.batcher.streams]
+        step_vec = np.atleast_1d(np.asarray(
+            jax.device_get(self.opt_state.step)))
+        paths = []
+        for idx, spec in enumerate(self.specs):
+            path = os.path.join(directory, f"{spec.job_id}.npz")
+            save_job(path, spec.job_id, idx, spec.rank, self.adapters,
+                     self.opt_state,
+                     step=int(step_vec[idx % step_vec.size]),
+                     meta={"steps_done": self.steps_done[spec.job_id],
+                           "stream": stream_states[idx]})
+            paths.append(path)
+        return paths
 
     # ---------------------------------------------------------- migration
     def export(self, job_id: str) -> JobTrainState:

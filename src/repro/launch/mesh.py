@@ -1,9 +1,13 @@
-"""Production mesh construction (multi-pod dry-run target).
+"""Production mesh construction (multi-pod dry-run target) and the
+submesh partitioner of the cluster controller (DESIGN.md §9).
 
-A FUNCTION, not a module-level constant — importing this module must not
+FUNCTIONS, not module-level constants — importing this module must not
 touch jax device state (the dry-run sets XLA_FLAGS before first init).
 """
 from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
 
 import jax
 
@@ -13,6 +17,67 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def device_shares(weights: Sequence[float], n_devices: int) -> List[int]:
+    """Device counts for per-group submeshes, honoring the scheduler's
+    chip assignments (*weights*).
+
+    Weighted max-min fill: every group gets at least one device, no
+    group gets more than its assignment (cap = ceil(weight) — the
+    scheduler already decided how many chips the group deserves; extra
+    pool devices stay FREE for arrivals rather than over-sharding
+    running groups), and while devices and headroom remain the next
+    device goes to the group with the highest weight-per-allocated-
+    device ratio.  Returns all-zeros when the pool cannot give every
+    group a device (the controller falls back to time-multiplexed
+    meshless execution).  Pure arithmetic — no jax.
+    """
+    k = len(weights)
+    if k == 0:
+        return []
+    if n_devices < k:
+        return [0] * k
+    w = [max(float(x), 1e-9) for x in weights]
+    caps = [max(1, int(math.ceil(x))) for x in w]
+    shares = [1] * k
+    left = min(n_devices, sum(caps)) - k
+    while left > 0:
+        best, best_r = -1, -1.0
+        for i in range(k):
+            if shares[i] >= caps[i]:
+                continue
+            r = w[i] / shares[i]
+            if r > best_r:
+                best, best_r = i, r
+        if best < 0:
+            break
+        shares[best] += 1
+        left -= 1
+    assert sum(shares) <= n_devices
+    assert all(1 <= s <= c for s, c in zip(shares, caps))
+    return shares
+
+
+def partition_mesh(sizes: Sequence[int], devices: Optional[Sequence] = None,
+                   axis: str = "data") -> List:
+    """Partition the device pool into disjoint 1-D per-group submeshes.
+
+    ``sizes[i]`` devices (consecutive in pool order, so groups that keep
+    their size keep their devices across repartitions) become one
+    ``(sizes[i],)`` mesh over *axis*.  The controller runs one
+    ``ElasticEngine`` per returned submesh; disjointness is what lets
+    groups execute concurrently (DESIGN.md §9).
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    assert all(s >= 1 for s in sizes), sizes
+    assert sum(sizes) <= len(devices), (sizes, len(devices))
+    out, cur = [], 0
+    for s in sizes:
+        out.append(jax.make_mesh((int(s),), (axis,),
+                                 devices=devices[cur:cur + s]))
+        cur += s
+    return out
 
 
 def make_local_mesh(model: int = 1):

@@ -251,6 +251,108 @@ def local_mesh_clamps():
             (req, dict(mesh.shape))
 
 
+def _controller(conc, seed=0, pool=None, **kw):
+    from repro.cluster.controller import ClusterController
+    cfg = cfg_f32()
+    return ClusterController(lambda m: cfg, devices=pool, impl="xla",
+                             block_t=BT, lr=1e-2, remat=False,
+                             chunk_size=2, concurrency=conc, seed=seed,
+                             **kw), cfg
+
+
+def _two_group_jobs(cfg):
+    return [[LoRAJobSpec(f"g{g}j{i}", rank=(4, 8)[i], batch_size=2,
+                         seq_len=32, base_model=cfg.name)
+             for i in range(2)] for g in range(2)]
+
+
+def controller_concurrent_parity():
+    """2 concurrent groups on disjoint submeshes: threaded execution is
+    BIT-EXACT vs sequential execution of the same partition (same
+    submesh shapes, same inputs, same executables — concurrency must
+    change nothing but wall-clock)."""
+    runs = {}
+    for conc in ("threads", "sequential"):
+        ctl, cfg = _controller(conc, pool=jax.devices()[:4])
+        groups = _two_group_jobs(cfg)
+        for js in groups:
+            for j in js:
+                ctl.submit(j)
+        gkeys = [tuple(j.job_id for j in js) for js in groups]
+        ctl.apply_grouping(gkeys, chips=[2, 2])
+        devs = ctl.group_devices()
+        assert all(len(d) == 2 for d in devs.values()), devs
+        assert not (set(devs[gkeys[0]]) & set(devs[gkeys[1]])), devs
+        ctl.run(6)
+        runs[conc] = ctl
+    for gk in runs["threads"].group_devices():
+        rt_t = runs["threads"]._slots[gk].runtime(gk)
+        rt_s = runs["sequential"]._slots[gk].runtime(gk)
+        assert np.array_equal(np.asarray(rt_t.report.per_job_losses),
+                              np.asarray(rt_s.report.per_job_losses)), gk
+        for a, b in zip(jax.tree.leaves(rt_t.adapters),
+                        jax.tree.leaves(rt_s.adapters)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), gk
+
+
+def controller_repartition_migration():
+    """Cross-mesh migration during a pool repartition is lossless: a
+    job moving solo-submesh -> fused-wider-submesh -> solo reproduces
+    the solo-throughout trajectory (float tolerance — submesh shapes
+    change, DESIGN.md §8 backend caveat).  Per-job step and Adam
+    accounting stay exact across both migrations."""
+    k = 2
+    ref, cfg = _controller("sequential", seed=3, pool=jax.devices()[:4])
+    (j_a, j_b), _ = _two_group_jobs(cfg)
+    ga, gab = (j_a.job_id,), (j_a.job_id, j_b.job_id)
+    ref.submit(j_a)
+    ref.apply_grouping([ga], chips=[1])
+    ref.run(3 * k)
+    ref_losses = [l[0] for l in
+                  ref._slots[ga].runtime(ga).report.per_job_losses]
+
+    ctl, _ = _controller("sequential", seed=3, pool=jax.devices()[:4])
+    got = []
+    ctl.submit(j_a)
+    ctl.apply_grouping([ga], chips=[1])
+    ctl.run(k)
+    got += [l[0] for l in
+            ctl._slots[ga].runtime(ga).report.per_job_losses]
+    ctl.submit(j_b)                       # arrival -> repartition
+    ctl.apply_grouping([gab], chips=[4])
+    assert len(ctl.group_devices()[gab]) == 4
+    ctl.run(k)
+    got += [l[0] for l in
+            ctl._slots[gab].runtime(gab).report.per_job_losses]
+    st_b = ctl.remove_job(j_b.job_id)     # completion -> repartition
+    assert st_b.steps_done == k and st_b.opt_step == k
+    ctl.apply_grouping([ga], chips=[1])
+    ctl.run(k)
+    got += [l[0] for l in
+            ctl._slots[ga].runtime(ga).report.per_job_losses]
+    assert ctl.regroup_events >= 2, ctl.regroup_events
+    assert ctl.steps_done(j_a.job_id) == 3 * k
+    losses_close(got, ref_losses)
+    st = ctl.job_state(j_a.job_id)
+    ref_st = ref.job_state(j_a.job_id)
+    assert st.opt_step == ref_st.opt_step == 3 * k
+    state_close(st.adapter, ref_st.adapter)
+    state_close(st.mu, ref_st.mu)
+
+    # incremental regroup on a FULL pool: ensure_group must allocate
+    # AFTER dissolving the superseded slot, so the freed devices are
+    # reusable — a pre-dissolve allocation would land the new group
+    # meshless despite a now-free pool
+    ctl2, cfg2 = _controller("sequential", pool=jax.devices()[:2])
+    (jx, jy), _ = _two_group_jobs(cfg2)
+    ctl2.submit(jx)
+    ctl2.submit(jy)
+    ctl2.ensure_group((jx.job_id, jy.job_id), chips=2)
+    assert len(ctl2.group_devices()[(jx.job_id, jy.job_id)]) == 2
+    ctl2.ensure_group((jx.job_id,), chips=1)
+    assert len(ctl2.group_devices()[(jx.job_id,)]) == 1
+
+
 def execution_backend_sharded():
     """ExecutionBackend measures on a real mesh without falling over."""
     from repro.cluster.execution import ExecutionBackend
@@ -279,7 +381,9 @@ if __name__ == "__main__":
                parity_unequal_segments, parity_psum_mode,
                parity_pallas_gather, nano_regranulation_sharded,
                migration_across_meshes, gather_solo_bitexact,
-               local_mesh_clamps, execution_backend_sharded):
+               local_mesh_clamps, execution_backend_sharded,
+               controller_concurrent_parity,
+               controller_repartition_migration):
         scenario(fn)
     for r in RESULTS:
         print("SCENARIO " + json.dumps(r))

@@ -1,0 +1,161 @@
+"""Online oracle calibration (core/throughput.OnlineCalibrator).
+
+The closed-loop contract: feeding measured StepRecords makes the
+calibrated oracle's predictions converge to the machine that produced
+them, and NEVER makes them worse on a synthetic (noiseless, linear)
+stream — the hypothesis property the scheduler's feedback loop rests
+on.  Deterministic tests cover the fit algebra, the calibrated-
+HardwareSpec roundtrip, bucket isolation, and the degenerate
+single-workload stream.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.core import throughput as tp
+
+CFG = get_config("tinyllama-1.1b")
+CHIPS = 4
+
+
+def group(batch, n=2, rank=8):
+    return [LoRAJobSpec(f"j{batch}-{i}", rank=rank, batch_size=batch,
+                        seq_len=512) for i in range(n)]
+
+
+def synth(cal, jobs, alpha, beta):
+    """Noiseless synthetic measurement: alpha * t_machine + beta."""
+    return alpha * cal.machine_time(CFG, jobs, CHIPS) + beta
+
+
+def mean_rel_error(cal, alpha, beta, eval_groups):
+    errs = []
+    for jobs in eval_groups:
+        want = synth(cal, jobs, alpha, beta)
+        got = cal.predict(CFG, jobs, CHIPS)
+        errs.append(abs(got - want) / want)
+    return float(np.mean(errs))
+
+
+EVAL = [group(b) for b in (1, 2, 3, 4, 8)]
+
+
+# ------------------------------------------------------------ determinism
+def test_fit_recovers_constants_exactly():
+    alpha, beta = 1.7, 0.013
+    cal = tp.OnlineCalibrator()
+    for b in (2, 8, 1, 4):
+        cal.observe(CFG, group(b), CHIPS, synth(cal, group(b), alpha, beta))
+    a, c = cal.fit(CFG.name, CHIPS, 2)
+    assert a == pytest.approx(alpha, rel=1e-9)
+    assert c == pytest.approx(beta, rel=1e-6)
+    # the calibrated HardwareSpec roundtrips the fit exactly through
+    # group_step_cost (every rate constant scales by alpha, step
+    # overhead becomes beta)
+    assert mean_rel_error(cal, alpha, beta, EVAL) < 1e-9
+
+
+def test_uncalibrated_returns_base_constants():
+    cal = tp.OnlineCalibrator()
+    assert cal.hw_for(CFG.name, CHIPS, 2) is tp.V5E
+    assert not cal.calibrated
+    cal.observe(CFG, group(2), CHIPS, 0.5)
+    # min_obs=2: one observation must not move the oracle
+    assert cal.hw_for(CFG.name, CHIPS, 2) is tp.V5E
+
+
+def test_degenerate_stream_uses_ratio_fit():
+    """All-identical workloads cannot separate slope from intercept;
+    the through-origin ratio fit still nails the seen workload."""
+    alpha, beta = 2.1, 0.02
+    cal = tp.OnlineCalibrator()
+    for _ in range(4):
+        cal.observe(CFG, group(2), CHIPS, synth(cal, group(2), alpha, beta))
+    a, c = cal.fit(CFG.name, CHIPS, 2)
+    assert c == 0.0 and a > alpha          # beta folded into the slope
+    want = synth(cal, group(2), alpha, beta)
+    assert cal.predict(CFG, group(2), CHIPS) == pytest.approx(want,
+                                                              rel=1e-9)
+
+
+def test_buckets_are_isolated_with_nearest_chips_fallback():
+    alpha, beta = 1.5, 0.01
+    cal = tp.OnlineCalibrator()
+    for b in (1, 4):
+        cal.observe(CFG, group(b), CHIPS, synth(cal, group(b), alpha, beta))
+    # other model: untouched
+    other = get_config("smollm-360m")
+    assert cal.hw_for(other.name, CHIPS, 2) is tp.V5E
+    # same model, unmeasured chip count: nearest calibrated bucket
+    hw8 = cal.hw_for(CFG.name, 8, 2)
+    assert hw8.mfu_cap == pytest.approx(tp.V5E.mfu_cap / alpha, rel=1e-6)
+
+
+def test_ewma_tracks_drift():
+    """After the machine slows down 2x, the fit follows the recent
+    observations rather than averaging the regimes forever."""
+    cal = tp.OnlineCalibrator(decay=0.6)
+    for _ in range(3):
+        for b in (1, 8):
+            cal.observe(CFG, group(b), CHIPS,
+                        synth(cal, group(b), 1.0, 0.0))
+    for _ in range(8):
+        for b in (1, 8):
+            cal.observe(CFG, group(b), CHIPS,
+                        synth(cal, group(b), 2.0, 0.0))
+    a, _ = cal.fit(CFG.name, CHIPS, 2)
+    assert a == pytest.approx(2.0, rel=0.05)
+
+
+def test_scheduler_threads_calibrator():
+    """AdapterScheduler prices with the calibrated constants."""
+    from repro.core.scheduler import AdapterScheduler
+    cal = tp.OnlineCalibrator()
+    sched = AdapterScheduler(CFG, calibrator=cal)
+    assert sched.hw_for(CHIPS, 2) is tp.V5E
+    for b in (1, 8):
+        cal.observe(CFG, group(b), CHIPS, synth(cal, group(b), 3.0, 0.0))
+    hw = sched.hw_for(CHIPS, 2)
+    assert hw.mfu_cap == pytest.approx(tp.V5E.mfu_cap / 3.0, rel=1e-6)
+    # calibrated throughput is 3x lower than the static-constant claim
+    from repro.core.scheduler import Group
+    from repro.core.jobs import JobRuntimeState
+    g = Group([JobRuntimeState(spec=s) for s in group(4)], CHIPS)
+    t_static = AdapterScheduler(CFG).throughput(g)
+    assert sched.throughput(g) < t_static
+
+
+# ------------------------------------------------------ hypothesis property
+def test_calibration_error_non_increasing_property():
+    """THE acceptance property: on synthetic StepRecord streams the
+    calibrated oracle's mean relative error over a held-out eval set is
+    non-increasing in the number of observations, and strictly better
+    than the uncalibrated oracle once the fit engages."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    # streams open with two DISTINCT workloads (a scheduler probing the
+    # same cluster never measures one composition exclusively; the
+    # all-identical degenerate stream is covered deterministically
+    # above, where only seen-workload accuracy is promised)
+    @settings(max_examples=25, deadline=None)
+    @given(alpha=st.floats(0.3, 5.0),
+           beta=st.floats(0.0, 0.1),
+           head=st.sampled_from([(1, 2), (2, 8), (4, 1), (8, 3)]),
+           tail=st.permutations([1, 2, 3, 4, 8, 2]))
+    def prop(alpha, beta, head, tail):
+        cal = tp.OnlineCalibrator()
+        errs = [mean_rel_error(cal, alpha, beta, EVAL)]
+        for b in list(head) + tail:
+            cal.observe(CFG, group(b), CHIPS,
+                        synth(cal, group(b), alpha, beta))
+            errs.append(mean_rel_error(cal, alpha, beta, EVAL))
+        # monotone improvement (noiseless stream -> exact LS fit)
+        for prev, nxt in zip(errs, errs[1:]):
+            assert nxt <= prev + 1e-9, errs
+        # once >= 2 distinct workloads observed, the fit is exact
+        assert errs[-1] <= 1e-6, errs
+        assert errs[-1] < errs[0] or errs[0] <= 1e-6
+
+    prop()

@@ -1,0 +1,229 @@
+"""ClusterController (DESIGN.md §9): pool partitioning, concurrent
+multi-group lifecycle, periodic checkpoint hook + restore into a
+different controller partition, registry-driven executable discovery.
+
+The multi-device concurrency scenarios run in the forced-8-device
+subprocess (tests/sharded_worker.py); this module covers the
+single-device (meshless) semantics and the pure-python allocator math.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cluster.controller import ClusterController
+from repro.cluster.execution import (EXECUTABLE_MODELS, ExecutionBackend,
+                                     executable_models)
+from repro.core.jobs import LoRAJobSpec
+from repro.elastic.migrate import JobTrainState
+from repro.launch.mesh import device_shares, partition_mesh
+
+BT = 8
+
+
+def _spec(jid, rank=4, bs=1, budget=10_000):
+    return LoRAJobSpec(jid, rank=rank, batch_size=bs, seq_len=32,
+                       base_model="tinyllama-1.1b", steps_budget=budget,
+                       max_slowdown=2.0)
+
+
+@pytest.fixture
+def ctl(tiny_cfg):
+    return ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                             lr=1e-2, remat=False, chunk_size=2, seed=3)
+
+
+# ---------------------------------------------------------- allocator math
+def test_device_shares_honors_chip_assignments():
+    # floor of one device each, cap at the scheduler's assignment
+    assert device_shares([1, 1], 8) == [1, 1]        # extras stay free
+    assert device_shares([4, 4], 8) == [4, 4]
+    assert device_shares([2, 6], 8) == [2, 6]
+    assert device_shares([8, 8], 8) == [4, 4]        # fair split when tight
+    assert device_shares([3], 2) == [2]
+    assert device_shares([1, 1, 1], 2) == [0, 0, 0]  # pool too small
+    assert device_shares([], 4) == []
+    # weighted max-min: spare devices go to the heavier group first
+    assert device_shares([1, 4], 4) == [1, 3]
+    assert device_shares([2, 4], 4) == [2, 2]   # equal ratios -> even split
+    for w, n in [([5, 3, 9], 8), ([1, 2, 3, 4], 16), ([7], 4)]:
+        s = device_shares(w, n)
+        assert sum(s) <= n
+        assert all(1 <= x <= max(1, int(np.ceil(c)))
+                   for x, c in zip(s, w))
+
+
+def test_partition_mesh_disjoint_single_device():
+    meshes = partition_mesh([1], jax.devices()[:1])
+    assert len(meshes) == 1
+    assert dict(meshes[0].shape) == {"data": 1}
+    with pytest.raises(AssertionError):
+        partition_mesh([1, 1], jax.devices()[:1])
+
+
+# ------------------------------------------------------ lifecycle (1 dev)
+def test_controller_lifecycle_and_migration(ctl):
+    ctl.submit(_spec("a", rank=4, bs=2))
+    ctl.submit(_spec("b", rank=8))
+    ctl.ensure_group(("a", "b"))
+    ctl.run(3)
+    assert ctl.steps_done("a") == ctl.steps_done("b") == 3
+
+    ctl.submit(_spec("c", rank=2))
+    rt_before = ctl._slots[("a", "b")].runtime(("a", "b"))
+    ctl.apply_grouping([("a", "b"), ("c",)], chips=[2, 1])
+    # unchanged group keeps its runtime (and compiled step cache)
+    assert ctl._slots[("a", "b")].runtime(("a", "b")) is rt_before
+    assert ctl.regroup_events == 0
+
+    ctl.apply_grouping([("a", "b", "c")], chips=[3])
+    assert ctl.regroup_events == 1
+    ctl.run(2)
+    assert ctl.steps_done("a") == 5 and ctl.steps_done("c") == 2
+    assert ctl.job_state("a").opt_step == 5
+
+    st_a = ctl.remove_job("a")            # decouple: peers park
+    assert st_a.steps_done == 5
+    ctl.apply_grouping([("b", "c")], chips=[2])
+    ctl.run(1)
+    assert ctl.steps_done("b") == 6 and ctl.steps_done("c") == 3
+
+
+def test_controller_reschedule_and_retire(ctl):
+    ctl.submit(_spec("a", budget=4))
+    ctl.submit(_spec("b", budget=8))
+    grouping = ctl.reschedule(pressure=True)
+    assert sorted(j for g in grouping for j in g) == ["a", "b"]
+    ctl.run(4)                            # a hits its budget
+    assert "a" in ctl.finished
+    assert ctl.finished["a"].steps_done == 4
+    assert "a" not in ctl.active_job_ids and "b" in ctl.active_job_ids
+    view = ctl.model_view("tinyllama-1.1b")
+    assert view.job_ids == ["b"] and "a" in view.finished
+
+
+def test_controller_matches_solo_engine_trajectory(tiny_cfg):
+    """The controller's key/backbone derivation mirrors ElasticEngine:
+    the same seed produces the same trajectory (meshless, ref impl)."""
+    from repro.elastic import ElasticEngine
+    eng = ElasticEngine(tiny_cfg, impl="ref", block_t=BT, lr=1e-2,
+                        remat=False, seed=3)
+    eng.add_job(_spec("a", rank=4, bs=2))
+    eng.ensure_group(("a",)).run(3)
+
+    # partition=False: bit-exactness vs the meshless engine is the
+    # claim, so the controller must run meshless even on the forced-
+    # 8-device CI leg (submesh-vs-meshless parity is float-tolerance —
+    # DESIGN.md §8 — and covered in tests/sharded_worker.py)
+    ctl = ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                            lr=1e-2, remat=False, chunk_size=2, seed=3,
+                            partition=False)
+    ctl.submit(_spec("a", rank=4, bs=2))
+    ctl.ensure_group(("a",)).run(3)
+    a = eng.job_state("a")
+    b = ctl.job_state("a")
+    for k in a.adapter:
+        np.testing.assert_array_equal(np.asarray(a.adapter[k]),
+                                      np.asarray(b.adapter[k]))
+
+
+# -------------------------------------------------- checkpoint + restore
+def test_checkpoint_hook_and_restore_into_different_partition(
+        tiny_cfg, tmp_path):
+    """Every-N-chunks checkpointing from inside GroupRuntime.run, then a
+    restore into a DIFFERENT controller partition (solo group instead of
+    the fused pair) resumes the exact trajectory — adapter, Adam
+    moments, per-job Adam step, and the data-stream rng position all
+    travel through the .npz round trip."""
+    # meshless even under forced multi-device CI: the rtol-1e-5 cross-
+    # partition comparison encodes single-device semantics
+    kw = dict(impl="ref", block_t=BT, lr=1e-2, remat=False, seed=3,
+              chunk_size=2, partition=False)
+    ctl = ClusterController(lambda m: tiny_cfg,
+                            checkpoint_dir=str(tmp_path),
+                            checkpoint_every=2, **kw)
+    ctl.submit(_spec("a", rank=4, bs=2))
+    ctl.submit(_spec("b", rank=8))
+    ctl.ensure_group(("a", "b"))
+    ctl.run(4)                  # 2 chunks -> hook fires at chunk 2
+    assert os.path.exists(tmp_path / "a.npz")
+    assert os.path.exists(tmp_path / "b.npz")
+
+    st = JobTrainState.from_checkpoint(str(tmp_path / "a.npz"),
+                                       _spec("a", rank=4, bs=2),
+                                       tiny_cfg, seed=3)
+    assert st.opt_step == 4 and st.steps_done == 4
+
+    ctl2 = ClusterController(lambda m: tiny_cfg, **kw)
+    ctl2.submit(_spec("a", rank=4, bs=2), state=st)
+    ctl2.ensure_group(("a",))
+    ctl2.run(4)
+    got = [l[0] for l in
+           ctl2._slots[("a",)].runtime(("a",)).report.per_job_losses]
+
+    ctl.run(4)                  # original continues uninterrupted
+    rt = ctl._slots[("a", "b")].runtime(("a", "b"))
+    ref = [l[0] for l in rt.report.per_job_losses[-4:]]
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_midrun_checkpoint_stream_position_ignores_prefetch(
+        tiny_cfg, tmp_path):
+    """The periodic hook fires at collect time, AFTER the next chunk's
+    batches were prefetched (advancing the live stream rng).  The
+    persisted position must be the pre-prefetch snapshot: a restore
+    from a mid-run checkpoint has to resume on exactly the batches the
+    original runtime trains next, or the trajectories silently fork."""
+    import shutil
+    from repro.elastic.runtime import GroupRuntime
+
+    spec = _spec("a", rank=4, bs=2)
+    kw = dict(lr=1e-2, impl="ref", block_t=BT, remat=False, seed=3,
+              chunk_size=2, checkpoint_dir=str(tmp_path),
+              checkpoint_every=1)
+    rt = GroupRuntime.from_specs(tiny_cfg, [spec], jax.random.PRNGKey(3),
+                                 **kw)
+    # chunk 1 with chunk 2 prefetched -> hook fires mid-run
+    rt.collect_chunk(rt.dispatch_chunk(2, prefetch=2))
+    mid = str(tmp_path / "mid.npz")
+    shutil.copy(tmp_path / "a.npz", mid)     # freeze the mid-run file
+    rt.collect_chunk(rt.dispatch_chunk(2))   # trains the PREFETCHED data
+    ref = [l[0] for l in rt.report.per_job_losses[-2:]]
+
+    st = JobTrainState.from_checkpoint(mid, spec, tiny_cfg, seed=3)
+    assert st.steps_done == 2
+    rt2 = GroupRuntime.from_states(tiny_cfg, rt.params, [st],
+                                   lr=1e-2, impl="ref", block_t=BT,
+                                   remat=False, seed=3, chunk_size=2)
+    got = [l[0] for l in rt2.run(2).per_job_losses]
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_without_stream_state_falls_back(tiny_cfg, tmp_path):
+    """save_job without meta (external tools) still restores — with a
+    fresh stream."""
+    from repro.checkpoint.checkpoint import save_job
+    ctl = ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                            lr=1e-2, remat=False, seed=3)
+    ctl.submit(_spec("a"))
+    rt = ctl.ensure_group(("a",))
+    rt.run(2)
+    path = str(tmp_path / "bare.npz")
+    save_job(path, "a", 0, 4, rt.adapters, rt.opt_state, step=2)
+    st = JobTrainState.from_checkpoint(path, _spec("a"), tiny_cfg)
+    assert st.opt_step == 2 and st.steps_done == 2
+    assert st.stream is not None
+
+
+# --------------------------------------------------- registry discovery
+def test_executable_models_registry_driven():
+    got = executable_models()
+    assert "smollm-360m" in got and "tinyllama-1.1b" in got
+    assert "qwen1.5-110b" not in got and "command-r-35b" not in got
+    assert EXECUTABLE_MODELS == got
+    # the cap is the discovery rule: raising it admits more of the zoo
+    assert len(executable_models(max_params=1e12)) > len(got)
+    be = ExecutionBackend(block_t=BT)
+    assert be.models == got

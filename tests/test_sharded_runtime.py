@@ -32,6 +32,8 @@ SCENARIOS = [
     "gather_solo_bitexact",
     "local_mesh_clamps",
     "execution_backend_sharded",
+    "controller_concurrent_parity",
+    "controller_repartition_migration",
 ]
 
 
