@@ -1,0 +1,160 @@
+"""Ragged vs masked fused-LoRA kernel benchmark (DESIGN.md §10).
+
+Heterogeneous-rank sweep of the rank-bucketed ragged kernels against
+the masked max-rank baseline, fwd+bwd, on both math paths:
+
+  * "xla"    — compiled on the host CPU: the real FLOP story.  The
+    headline row is the K=8 {4,...,4,64} group where the masked path
+    pays 8·64 padded lanes for Σ pad(r_k) = 120 of useful ones.
+  * "pallas-interpret" — the TPU kernels under the Pallas interpreter:
+    not wall-clock-representative of a TPU, but the grid-step counts
+    ARE the launch geometry a real TPU executes, so the interpret-mode
+    ratio tracks the active-tile reduction (grid steps ∝ true rank
+    tiles instead of tiles × r_max lanes).
+
+Each timed pair also cross-checks values (fwd outputs allclose), and
+the grad parity suite (tests/test_ragged_kernels.py) pins the
+gradients; writes ``BENCH_kernels.json`` at the repo root.  The
+committed full-run JSON records the >=1.5x acceptance headline; the CI
+devices=1 leg reruns --quick as a SMOKE gate only (>= 1.0x — shared
+runners swing quick-mode mins too much to enforce the full bar there).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import RankLayout, unpack_dense
+from repro.kernels import ops
+
+from benchmarks.common import banner
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_kernels.json"
+
+# the acceptance layout: 7 small adapters riding with one rank-64 job
+HEADLINE_RANKS = (4, 4, 4, 4, 4, 4, 4, 64)
+SWEEP = [
+    HEADLINE_RANKS,
+    (8, 8, 8, 8, 8, 8, 8, 8),          # homogeneous: ragged == masked work
+    (4, 8, 16, 32, 4, 8, 16, 64),      # graded mix
+    (1, 64, 1, 64, 1, 64, 1, 64),      # bimodal
+]
+
+
+def _make_case(ranks, *, rows_per_job, seq, d_in, d_out, block_t, seed=0):
+    rng = np.random.default_rng(seed)
+    K = len(ranks)
+    layout = RankLayout(tuple(ranks), multiple=8)
+    R = layout.total
+    act = np.asarray(layout.active_cols)
+    Ap = (rng.standard_normal((d_in, R)) * 0.3).astype(np.float32)
+    Bp = ((rng.standard_normal((R, d_out)) * 0.3) + 0.1).astype(np.float32)
+    Ap *= act[None, :].astype(np.float32)
+    Bp *= act[:, None].astype(np.float32)
+    rows = (rows_per_job,) * K
+    ids = np.repeat(np.arange(K, dtype=np.int32), rows_per_job * seq)
+    T = ids.size
+    assert T % block_t == 0
+    x = rng.standard_normal((T, d_in)).astype(np.float32)
+    scal = (16.0 / np.asarray(ranks)).astype(np.float32)
+    return (layout, rows, jnp.asarray(Ap), jnp.asarray(Bp),
+            jnp.asarray(x), jnp.asarray(ids), jnp.asarray(scal), seq)
+
+
+def _grad_fn(fn):
+    return jax.jit(jax.value_and_grad(
+        lambda x, A, B: (fn(x, A, B).astype(jnp.float32) ** 2).sum(),
+        argnums=(0, 1, 2)))
+
+
+def _pair(case, impl, block_t, iters):
+    """(masked_ms, ragged_ms) fwd+bwd for one rank mix on one impl.
+
+    The two variants are timed INTERLEAVED (masked, ragged, masked, ...)
+    so host frequency/load drift hits both equally; min discards
+    outliers."""
+    layout, rows, Ap, Bp, x, ids, scal, seq = case
+    Af, Bf = unpack_dense(Ap, Bp, layout)
+    rk = jnp.asarray(layout.ranks, jnp.int32)
+
+    def masked(x, Af, Bf):
+        return ops.fused_lora(x, Af, Bf, ids, rk, scal, impl=impl,
+                              block_t=block_t, equal_segments=True)
+
+    def ragged(x, Ap, Bp):
+        return ops.fused_lora_ragged(x, Ap, Bp, ids, scal, layout,
+                                     impl=impl, block_t=block_t,
+                                     equal_segments=True,
+                                     slice_rows=rows, seq_len=seq,
+                                     solo_rows=rows)
+
+    g_m, g_r = _grad_fn(masked), _grad_fn(ragged)
+    out_m = g_m(x, Af, Bf)                               # compile
+    out_r = g_r(x, Ap, Bp)
+    jax.block_until_ready((out_m[1], out_r[1]))
+    np.testing.assert_allclose(np.asarray(out_m[0]), np.asarray(out_r[0]),
+                               rtol=1e-3, atol=1e-3)     # same loss value
+    t_m = t_r = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(g_m(x, Af, Bf)[1])
+        t_m = min(t_m, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(g_r(x, Ap, Bp)[1])
+        t_r = min(t_r, time.perf_counter() - t0)
+    return t_m * 1e3, t_r * 1e3
+
+
+def run(quick: bool = False) -> dict:
+    banner("Ragged vs masked fused-LoRA kernels (fwd+bwd)")
+    iters = 4 if quick else 12
+    out = {"config": {"K": len(HEADLINE_RANKS), "d_in": 256, "d_out": 256,
+                      "seq": 32, "rows_per_job": 8 if quick else 16,
+                      "block_t": 8, "iters": iters},
+           "sweep": []}
+
+    for ranks in SWEEP[:2] if quick else SWEEP:
+        # xla: compiled — the FLOP-level story at realistic size
+        case = _make_case(ranks, rows_per_job=8 if quick else 16, seq=32,
+                          d_in=256, d_out=256, block_t=8)
+        m_x, r_x = _pair(case, "xla", 8, iters)
+        # pallas interpret: grid geometry ratio at reduced size
+        case_p = _make_case(ranks, rows_per_job=2, seq=8,
+                            d_in=256, d_out=256, block_t=8)
+        m_p, r_p = _pair(case_p, "pallas", 8, max(2, iters // 2))
+        lay = RankLayout(tuple(ranks))
+        row = {"ranks": list(ranks),
+               "sum_rpad": lay.total,                      # ragged lanes
+               "max_rpad_x_K": lay.max_r_pad * len(ranks),  # masked lanes
+               "xla_masked_ms": m_x, "xla_ragged_ms": r_x,
+               "xla_speedup_x": m_x / r_x,
+               "pallas_interpret_masked_ms": m_p,
+               "pallas_interpret_ragged_ms": r_p,
+               "pallas_interpret_speedup_x": m_p / r_p}
+        out["sweep"].append(row)
+        print(f"  ranks {str(ranks):34s} xla {m_x:8.2f} -> {r_x:8.2f} ms "
+              f"(x{row['xla_speedup_x']:.2f})   pallas-int {m_p:8.1f} -> "
+              f"{r_p:8.1f} ms (x{row['pallas_interpret_speedup_x']:.2f})")
+
+    head = out["sweep"][0]
+    out["headline_ranks"] = list(HEADLINE_RANKS)
+    out["headline_xla_speedup_x"] = head["xla_speedup_x"]
+    out["headline_pallas_interpret_speedup_x"] = \
+        head["pallas_interpret_speedup_x"]
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"  wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -11,6 +11,7 @@ import traceback
 
 MODULES = [
     "bench_controller",
+    "bench_kernels",
     "bench_step_loop",
     "fig2_naive_batching",
     "fig5_e2e",

@@ -68,18 +68,22 @@ def main():
     print(f"\ntrained {steps} fused steps in {time.time()-t0:.1f}s "
           f"(AIMD settled at N={rep.nano_history[-1]})")
 
-    # per-job checkpoints (the decouple/re-fuse path, §3.4)
+    # per-job checkpoints (the decouple/re-fuse path, §3.4) — jobs are
+    # addressed by their packed ragged column offset (DESIGN.md §10),
+    # taken from the trained SSM's own layout
+    layout = out["ssm"].layout
     os.makedirs(CKPT_DIR, exist_ok=True)
     for k, job in enumerate(jobs):
         path = os.path.join(CKPT_DIR, f"{job.job_id}.npz")
-        save_job(path, job.job_id, k, job.rank, out["adapters"],
-                 opt_state=out["opt_state"], step=steps)
+        save_job(path, job.job_id, layout.offsets[k], job.rank,
+                 out["adapters"], opt_state=out["opt_state"], step=steps)
         print(f"  checkpointed {job.job_id} -> {path}")
 
     # simulate job 2 leaving and re-fusing at a different slot
+    off0, cap0 = layout.slice_of(0)
     adapters, opt, step = restore_job(
-        os.path.join(CKPT_DIR, "tenant-2.npz"), 0, out["adapters"],
-        out["opt_state"])
+        os.path.join(CKPT_DIR, "tenant-2.npz"), 0, off0, out["adapters"],
+        out["opt_state"], cap0)
     print(f"re-fused tenant-2 at slot 0 (step {step}) — adapters intact")
 
     print("\nfinal per-job losses:",

@@ -1,12 +1,17 @@
 """Checkpointing: per-job adapter extract/save/restore + optimizer state.
 
-A fused group trains one stacked adapter tree; checkpoints must remain
-*per-job* so a job can leave a group (decouple), resume in a different
-group (re-fuse at a different K/index/r_pad), or ship its adapter.  We
-therefore save each job's un-padded (A, B) slices + its Adam moments,
-keyed by the adapter tree path — not the fused stack.
+A fused group trains one packed ragged adapter tree; checkpoints must
+remain *per-job* so a job can leave a group (decouple), resume in a
+different group (re-fuse at a different K/offset/padding), or ship its
+adapter.  We therefore save each job's un-padded (A, B) slices + its
+Adam moments, keyed by the adapter tree path — not the fused stack.
+Jobs are addressed by their packed COLUMN OFFSET (core/lora.RankLayout
+``offsets[idx]``), so extraction and re-insertion are pure copies of
+the job's own segment — no max-rank-padded intermediate is ever built.
 
-Format: one ``.npz`` per job (portable, offline-friendly).
+Format: one ``.npz`` per job (portable, offline-friendly; the un-padded
+slice shapes are identical to the legacy stacked format, so checkpoints
+written before the ragged layout restore unchanged).
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.lora import rank_axis_is_last
 from repro.optim.adamw import AdamWState
 
 
@@ -46,42 +52,51 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=""):
     return jnp.asarray(flat[prefix[:-1]]).astype(template.dtype)
 
 
-def slice_job(adapters: dict, idx: int, rank: int) -> dict:
-    """Extract job *idx*'s un-padded adapter slices from the fused stack.
+def slice_job(adapters: dict, offset: int, rank: int) -> dict:
+    """Extract a job's un-padded adapter slices from the packed stack.
 
-    Leaves are {"A": (..., K, d, r_pad), "B": (..., K, r_pad, d)} — the
-    job axis is -3 for A / -3 for B; rank axis is last for A, -2 for B.
+    Leaves are {"A": (..., d, R), "B": (..., R, d)} — the job owns the
+    ``rank`` packed columns/rows starting at *offset* (its RankLayout
+    column offset; padding lanes beyond the rank are zero and dropped).
     """
     def f(path_leaf):
         name, leaf = path_leaf
-        if name.endswith("/A") or name == "A":
-            return leaf[..., idx, :, :rank]
-        return leaf[..., idx, :rank, :]
+        if rank_axis_is_last(name):
+            return leaf[..., :, offset:offset + rank]
+        return leaf[..., offset:offset + rank, :]
     flat = _flatten(adapters)
     return {k: f((k, v)) for k, v in flat.items()}
 
 
-def insert_job(adapters: dict, idx: int, rank: int, flat_slices: dict) -> dict:
-    """Write a job's saved slices back into a fused stack (re-fuse).
+def insert_job(adapters: dict, offset: int, rank: int, flat_slices: dict,
+               r_cap: int) -> dict:
+    """Write a job's saved slices back into a packed stack (re-fuse).
 
-    The destination stack may have a *different* r_pad than the source:
-    slices are un-padded (rank columns/rows only), so re-padding is just
-    writing into the first ``rank`` lanes of the destination — the lanes
-    beyond are zero by construction and must stay zero (the kernels'
-    rank mask guarantees they receive zero gradient).
+    The destination segment may be padded differently than the source
+    stack's: slices are un-padded (rank columns/rows only), so
+    re-padding is just writing into the first ``rank`` lanes of the
+    destination segment at *offset* — the lanes beyond are zero by
+    construction and must stay zero (the kernels' rank mask guarantees
+    they receive zero gradient).  ``r_cap`` (the destination segment's
+    padded width, RankLayout ``r_pads[idx]``) is REQUIRED: in the
+    packed layout the leaf shape alone cannot distinguish this job's
+    lanes from its neighbour's, so without the cap an over-wide insert
+    would silently corrupt the adjacent segment.
     """
+    assert rank <= r_cap, \
+        f"cannot insert rank-{rank} job into a {r_cap}-lane segment"
     flat = _flatten(adapters)
     out = {}
     for k, leaf in flat.items():
         s = jnp.asarray(flat_slices[k]).astype(leaf.dtype)
-        r_pad = leaf.shape[-1] if (k.endswith("/A") or k == "A") \
-            else leaf.shape[-2]
-        assert rank <= r_pad, \
-            f"cannot insert rank-{rank} job into r_pad={r_pad} stack ({k})"
-        if k.endswith("/A") or k == "A":
-            out[k] = leaf.at[..., idx, :, :rank].set(s)
+        a_leaf = rank_axis_is_last(k)
+        width = leaf.shape[-1] if a_leaf else leaf.shape[-2]
+        assert offset + rank <= width, \
+            f"rank-{rank} insert at offset {offset} overruns R={width} ({k})"
+        if a_leaf:
+            out[k] = leaf.at[..., :, offset:offset + rank].set(s)
         else:
-            out[k] = leaf.at[..., idx, :rank, :].set(s)
+            out[k] = leaf.at[..., offset:offset + rank, :].set(s)
     return _unflatten_into(adapters, out)
 
 
@@ -100,22 +115,23 @@ def restore_stream_state(stream, state: str):
     return stream
 
 
-def save_job(path: str, job_id: str, idx: int, rank: int,
+def save_job(path: str, job_id: str, offset: int, rank: int,
              adapters: dict, opt_state: Optional[AdamWState] = None,
              step: int = 0, meta: Optional[dict] = None):
-    """Persist job *idx*'s adapter (and its Adam moments) to ``path``.
+    """Persist the job at packed *offset*'s adapter (and its Adam
+    moments) to ``path``.
 
     ``meta`` entries land as ``__meta_<key>__`` arrays (scalars and
     strings only — strings stay unicode arrays, no pickling), so
     portable accounting like ``steps_done`` and the stream rng position
     survive the round trip."""
     payload = {f"adapter/{k}": np.asarray(v)
-               for k, v in slice_job(adapters, idx, rank).items()}
+               for k, v in slice_job(adapters, offset, rank).items()}
     if opt_state is not None:
         payload.update({f"mu/{k}": np.asarray(v) for k, v in
-                        slice_job(opt_state.mu, idx, rank).items()})
+                        slice_job(opt_state.mu, offset, rank).items()})
         payload.update({f"nu/{k}": np.asarray(v) for k, v in
-                        slice_job(opt_state.nu, idx, rank).items()})
+                        slice_job(opt_state.nu, offset, rank).items()})
     payload["__step__"] = np.asarray(step)
     payload["__rank__"] = np.asarray(rank)
     payload["__job_id__"] = np.asarray(job_id)
@@ -141,16 +157,17 @@ def load_job(path: str) -> dict:
         return {k: z[k] for k in z.files}
 
 
-def restore_job(path: str, idx: int, adapters: dict,
-                opt_state: Optional[AdamWState] = None
+def restore_job(path: str, idx: int, offset: int, adapters: dict,
+                opt_state: Optional[AdamWState], r_cap: int
                 ) -> Tuple[dict, Optional[AdamWState], int]:
-    """Insert a saved job checkpoint at stack index *idx* (possibly a
-    different index / K / r_pad than it was saved under)."""
+    """Insert a saved job checkpoint at stack slot *idx* / packed column
+    *offset* (possibly a different slot / K / padding than it was saved
+    under)."""
     z = load_job(path)
     rank = int(z["__rank__"])
     ad = {k[len("adapter/"):]: v for k, v in z.items()
           if k.startswith("adapter/")}
-    adapters = insert_job(adapters, idx, rank, ad)
+    adapters = insert_job(adapters, offset, rank, ad, r_cap)
     if opt_state is not None:
         mu = {k[3:]: v for k, v in z.items() if k.startswith("mu/")}
         nu = {k[3:]: v for k, v in z.items() if k.startswith("nu/")}
@@ -162,6 +179,6 @@ def restore_job(path: str, idx: int, adapters: dict,
                 st = st.at[idx].set(int(z["__step__"]))
             opt_state = AdamWState(
                 st,
-                insert_job(opt_state.mu, idx, rank, mu),
-                insert_job(opt_state.nu, idx, rank, nu))
+                insert_job(opt_state.mu, offset, rank, mu, r_cap),
+                insert_job(opt_state.nu, offset, rank, nu, r_cap))
     return adapters, opt_state, int(z["__step__"])

@@ -111,7 +111,8 @@ class ClusterController:
                  concurrency: Optional[str] = None,
                  impl: str = "xla", block_t: int = 8, lr: float = 1e-3,
                  lr_fn=None, remat: bool = False, nano_batches: int = 1,
-                 adaptive_nano: bool = False, weight_decay: float = 0.0,
+                 adaptive_nano: bool = False, aimd_max_n: int = 16,
+                 nano_order: str = "job", weight_decay: float = 0.0,
                  chunk_size: int = 4, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
                  checkpoint_dir: Optional[str] = None,
@@ -142,6 +143,7 @@ class ClusterController:
         self._engine_kwargs = dict(
             impl=impl, block_t=block_t, lr=lr, lr_fn=lr_fn, remat=remat,
             nano_batches=nano_batches, adaptive_nano=adaptive_nano,
+            aimd_max_n=aimd_max_n, nano_order=nano_order,
             weight_decay=weight_decay, chunk_size=chunk_size,
             data_axis=data_axis, tp_mode=tp_mode,
             checkpoint_dir=checkpoint_dir,
@@ -400,7 +402,8 @@ class ClusterController:
                 s.standalone_step_time = tp.standalone_step_time(
                     self._cfg(base), spec,
                     hw=sched.hw_for(max(spec.gpus, 1)),
-                    kernel_fused=sched.sched.kernel_fused)
+                    kernel_fused=sched.sched.kernel_fused,
+                    ragged_kernels=sched.sched.ragged_kernels)
                 gkey = self._home(jid)
                 if gkey is not None:
                     s.current_step_time = self._slots[gkey].runtime(

@@ -98,6 +98,7 @@ class ExecutionBackend:
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
                  remat: bool = False, mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 aimd_max_n: int = 16, nano_order: str = "job",
                  devices: Optional[Sequence] = None,
                  calibrator: Optional[tp.OnlineCalibrator] = None,
                  hw: tp.HardwareSpec = tp.V5E,
@@ -131,7 +132,8 @@ class ExecutionBackend:
             calibrator=self.calibrator,
             concurrency="sequential", impl=impl, block_t=block_t, lr=lr,
             remat=remat, chunk_size=1, data_axis=data_axis,
-            grad_sync=grad_sync, tp_mode=tp_mode, seed=seed)
+            grad_sync=grad_sync, tp_mode=tp_mode,
+            aimd_max_n=aimd_max_n, nano_order=nano_order, seed=seed)
         self._cfgs: Dict[str, ModelConfig] = {}
         self.records: List[StepRecord] = []
 

@@ -35,6 +35,7 @@ class ClusterConfig:
     concurrency_cap: int = 128           # runnable-job cap (paper A.1)
     hw: tp.HardwareSpec = tp.V5E
     kernel_fused: bool = True
+    ragged_kernels: bool = True          # per-adapter-rank pricing (§10)
     reduced_models: bool = False         # price full cfgs (analytic, cached)
 
 
@@ -115,7 +116,8 @@ def tlora_policy(cfg_of: Callable[[str], ModelConfig],
         for model, js in by_model.items():
             sched = AdapterScheduler(
                 cfg_of(model),
-                SchedulerConfig(hw=cc.hw, kernel_fused=kernel_fused),
+                SchedulerConfig(hw=cc.hw, kernel_fused=kernel_fused,
+                                ragged_kernels=cc.ragged_kernels),
                 calibrator=calibrator)
             node_of = _node_assigner(js, cc)
             groups.extend(sched.schedule(js, node_of=node_of,
@@ -184,14 +186,16 @@ class ClusterSimulator:
         return tp.group_step_cost(
             cfg, g.specs, g.chips, hw=hw,
             spans_nodes=g.spans_nodes,
-            kernel_fused=self.cc.kernel_fused).total
+            kernel_fused=self.cc.kernel_fused,
+            ragged_kernels=self.cc.ragged_kernels).total
 
     def _group_compute_time(self, g: Group) -> float:
         cfg = self._cfg_of(g.jobs[0].spec.base_model)
         return tp.group_step_cost(
             cfg, g.specs, g.chips, hw=self.cc.hw,
             spans_nodes=g.spans_nodes,
-            kernel_fused=self.cc.kernel_fused).t_compute_ideal
+            kernel_fused=self.cc.kernel_fused,
+            ragged_kernels=self.cc.ragged_kernels).t_compute_ideal
 
     # ---------------------------------------------------------------- run
     def run(self, trace: Sequence[LoRAJobSpec],
@@ -201,7 +205,8 @@ class ClusterSimulator:
         for s in states.values():
             s.standalone_step_time = tp.standalone_step_time(
                 self._cfg_of(s.spec.base_model), s.spec, hw=self.cc.hw,
-                kernel_fused=self.cc.kernel_fused)
+                kernel_fused=self.cc.kernel_fused,
+                ragged_kernels=self.cc.ragged_kernels)
 
         # the backend accumulates across runs; report only this run's slice
         rec0 = len(self.execution.records) if self.execution else 0

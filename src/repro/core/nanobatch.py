@@ -36,12 +36,22 @@ class AIMDController:
     tau_frac: float = 0.02          # stability margin, fraction of T
     n: int = 1                      # current nano-batch count
     max_n: Optional[int] = None
+    # explicit legal-N override: the sharded/ragged runtime pre-filters
+    # divisors to the rank-bucket tile boundary constraint of the ragged
+    # kernels (ssm.valid_nano_counts seg_rows=...) and hands the result
+    # here, so AIMD never proposes an un-compilable granulation
+    legal: Optional[List[int]] = None
 
     _last_t: Optional[float] = field(default=None, repr=False)
     history: List[tuple] = field(default_factory=list, repr=False)
 
     def __post_init__(self):
-        self._legal = valid_nano_counts(self.rows, self.max_n)
+        # `is not None`: an explicitly empty override must fail fast
+        # here, not silently fall back to unfiltered divisors and trip
+        # the kernel-legality assert mid-run
+        self._legal = (list(self.legal) if self.legal is not None
+                       else valid_nano_counts(self.rows, self.max_n))
+        assert self._legal, (self.rows, self.max_n, self.legal)
         self.n = self._snap(self.n)
 
     def _snap(self, n: int) -> int:

@@ -45,9 +45,11 @@ class Group:
     def urgency(self) -> float:
         return max(j.urgency() for j in self.jobs)
 
-    def residual(self, cfg: ModelConfig, hw: tp.HardwareSpec) -> float:
+    def residual(self, cfg: ModelConfig, hw: tp.HardwareSpec,
+                 ragged_kernels: bool = True) -> float:
         cost = tp.group_step_cost(cfg, self.specs, self.chips, hw=hw,
-                                  spans_nodes=self.spans_nodes)
+                                  spans_nodes=self.spans_nodes,
+                                  ragged_kernels=ragged_kernels)
         return max(0.0, 1.0 - cost.useful_fraction)
 
 
@@ -55,6 +57,9 @@ class Group:
 class SchedulerConfig:
     hw: tp.HardwareSpec = tp.V5E
     kernel_fused: bool = True
+    ragged_kernels: bool = True   # price true per-adapter padded ranks
+    #                               (False = legacy K·r_max masked cost,
+    #                               which over-penalizes mixed-rank merges)
     min_gain: float = 1.02        # merge must beat sum-of-parts by ≥2%
     max_group: int = 8            # SSM stack width cap (K)
 
@@ -90,7 +95,8 @@ class AdapterScheduler:
                                    hw=self.hw_for(group.chips,
                                                   len(group.jobs)),
                                    spans_nodes=group.spans_nodes,
-                                   kernel_fused=self.sched.kernel_fused)
+                                   kernel_fused=self.sched.kernel_fused,
+                                   ragged_kernels=self.sched.ragged_kernels)
 
     def _merged(self, a: Group, b: Group, spans: bool) -> Group:
         return Group(a.jobs + b.jobs, a.chips + b.chips,
@@ -104,7 +110,8 @@ class AdapterScheduler:
         deltas = tp.slowdowns(self.cfg, g.specs, g.chips,
                               hw=self.hw_for(g.chips, len(g.jobs)),
                               spans_nodes=g.spans_nodes,
-                              kernel_fused=self.sched.kernel_fused)
+                              kernel_fused=self.sched.kernel_fused,
+                              ragged_kernels=self.sched.ragged_kernels)
         return all(deltas[j.spec.job_id] <= j.spec.max_slowdown
                    for j in g.jobs)
 
@@ -156,7 +163,8 @@ class AdapterScheduler:
             deltas = tp.slowdowns(self.cfg, g.specs, c,
                                   hw=self.hw_for(c, len(g.jobs)),
                                   spans_nodes=g.spans_nodes,
-                                  kernel_fused=self.sched.kernel_fused)
+                                  kernel_fused=self.sched.kernel_fused,
+                                  ragged_kernels=self.sched.ragged_kernels)
             return all(deltas[j.spec.job_id] <= margin * j.spec.max_slowdown
                        for j in g.jobs)
 
@@ -208,7 +216,8 @@ class AdapterScheduler:
                        key=lambda g: (-g.urgency(),
                                       g.residual(self.cfg,
                                                  self.hw_for(g.chips,
-                                                             len(g.jobs)))))
+                                                             len(g.jobs)),
+                                                 self.sched.ragged_kernels)))
         finals: List[Group] = []
         while queue:
             seed = queue.pop(0)
@@ -217,7 +226,8 @@ class AdapterScheduler:
             tail = sorted(queue,
                           key=lambda g: -g.residual(
                               self.cfg,
-                              self.hw_for(g.chips, len(g.jobs))))
+                              self.hw_for(g.chips, len(g.jobs)),
+                              self.sched.ragged_kernels))
             cut = self._binary_cut(seed, tail, spans, pressure=pressure)
             if cut == 0:
                 finals.append(seed)

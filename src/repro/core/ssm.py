@@ -5,8 +5,11 @@ into a single executable model:
 
   * backbone operators run once over the *union* of all jobs' batches
     (job-major concatenation, tile-aligned — see data/pipeline.FusedBatcher);
-  * adapters stay job-private branches, stacked ``(L, K, d, r_pad)`` and
-    executed by the fused multi-LoRA kernel (§3.3);
+  * adapters stay job-private branches, packed ragged ``(L, d, R)`` /
+    ``(L, R, d)`` with per-adapter padded rank segments
+    (core/lora.RankLayout) and executed by the rank-bucketed ragged
+    multi-LoRA kernels (§3.3) — a mixed-rank group does true-rank work,
+    not K·r_max;
   * per-job loss normalization keeps forward/backward/optimizer semantics
     *identical* to isolated training (the paper's lossless claim —
     validated by tests/test_lossless.py).
@@ -29,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.jobs import LoRAJobSpec
-from repro.core.lora import MultiLoRA, pad_rank
+from repro.core.lora import MultiLoRA, RankLayout, pad_rank
 from repro.models import model as M
 from repro.optim import adamw
 
@@ -48,17 +51,27 @@ class SharedSuperModel:
 
     ranks: np.ndarray = field(init=False)
     scalings: np.ndarray = field(init=False)
-    r_pad: int = field(init=False)
+    layout: RankLayout = field(init=False)
 
     def __post_init__(self):
         assert self.jobs, "SSM needs at least one job"
         self.ranks = np.array([j.rank for j in self.jobs], np.int32)
         self.scalings = np.array([j.scaling for j in self.jobs], np.float32)
-        # pad ranks to a small sublane multiple, NOT the token tile: ranks
-        # are a contraction dim; padding 16 -> 128 would 8x the LoRA flops
-        # (§Perf iteration 3 in EXPERIMENTS.md).
-        self.r_pad = pad_rank(int(self.ranks.max()),
-                              multiple=min(self.block_t, 16))
+        # pad EACH job's rank to a small sublane multiple, NOT the token
+        # tile (ranks are a contraction dim; padding 16 -> 128 would 8x
+        # the LoRA flops — §Perf iteration 3 in EXPERIMENTS.md) and NOT
+        # the group max: the packed ragged layout gives every adapter
+        # its own padded segment, so a {4,...,4,64} group stores and
+        # computes Σ r_pad_k lanes instead of K·64 (§3.3 rank-aware
+        # tiles, taken into storage).
+        self.layout = RankLayout(tuple(int(r) for r in self.ranks),
+                                 multiple=min(self.block_t, 16))
+
+    @property
+    def r_pad(self) -> int:
+        """Widest per-adapter padded rank (legacy name; the packed rank
+        width is ``layout.total``)."""
+        return self.layout.max_r_pad
 
     # -------------------------------------------------------------- build
     @property
@@ -70,7 +83,8 @@ class SharedSuperModel:
         k1, k2 = jax.random.split(key)
         params = M.init_model(k1, self.cfg)
         adapters = M.init_adapters(k2, self.cfg,
-                                   jnp.asarray(self.ranks), r_pad=self.r_pad)
+                                   jnp.asarray(self.ranks),
+                                   layout=self.layout)
         return params, adapters
 
     def _rows_for(self, job: LoRAJobSpec) -> int:
@@ -85,11 +99,14 @@ class SharedSuperModel:
     def lora_ctx(self, adapter_ids: jax.Array, *,
                  axis_name: Optional[str] = None,
                  row_solo_pos: Optional[jax.Array] = None,
-                 grad_sync: str = "gather") -> MultiLoRA:
+                 grad_sync: str = "gather",
+                 nano_order: Optional[Tuple[int, ...]] = None) -> MultiLoRA:
         """Apply context.  With ``axis_name`` the context is shard-local:
         *adapter_ids* covers one data shard's rows, segment geometry is
         the per-shard layout (global rows / data_shards), and the exact
-        wgrads reassemble solo order via *row_solo_pos*."""
+        wgrads reassemble solo order via *row_solo_pos*.  ``nano_order``
+        is the static job order of segments inside a job-proportional
+        nano slice (the rank-bucketed pipeline ordering)."""
         rows = self.rows_per_job()
         if axis_name is not None:
             rows = [r // self.data_shards for r in rows]
@@ -99,6 +116,9 @@ class SharedSuperModel:
                          impl=self.impl, block_t=self.block_t,
                          seg_rows=max(rows),
                          equal_segments=len(set(rows)) == 1,
+                         layout=self.layout,
+                         rows_all=tuple(rows),
+                         nano_order=nano_order,
                          axis_name=axis_name,
                          row_solo_pos=row_solo_pos,
                          shards=self.data_shards,
@@ -114,7 +134,8 @@ class SharedSuperModel:
                         unroll: bool = False,
                         mesh=None, data_axis: str = "data",
                         grad_sync: str = "gather",
-                        tp_mode: str = "dp") -> Callable:
+                        tp_mode: str = "dp",
+                        nano_order: str = "job") -> Callable:
         """Build the fused train step (grad-accumulated over nano-batches).
 
         Nano-batching (§3.3) splits the fused batch along the batch dim
@@ -152,15 +173,22 @@ class SharedSuperModel:
         VJPs; "psum" reduces partial wgrads with one all-reduce per
         adapter leaf (cheaper, float-associativity-close instead of
         bit-equal, and the only mode the autodiffed "ref"/"loop" impls
-        support).
+        support).  ``nano_order`` picks the static job order of the
+        segments inside each (sharded, job-proportional) nano slice:
+        "job" (index order, the historical layout) or "rank_desc" — the
+        rank-bucketed pipeline ordering of §3.3: large-rank segments
+        lead each slice, so their (larger) adapter-gradient collectives
+        issue earliest in the backward and overlap the small-rank
+        segments' remaining compute.
         """
         cfg, K = self.cfg, self.num_jobs
+        assert nano_order in ("job", "rank_desc"), nano_order
         if mesh is not None:
             return self._make_sharded_step(
                 lr_fn=lr_fn, nano_batches=nano_batches, remat=remat,
                 weight_decay=weight_decay, steps=steps, unroll=unroll,
                 mesh=mesh, data_axis=data_axis, grad_sync=grad_sync,
-                tp_mode=tp_mode)
+                tp_mode=tp_mode, nano_order=nano_order)
 
         def train_step(params, adapters, opt_state, batch):
             denom = _per_job_token_counts(batch, K, causal=cfg.causal)
@@ -193,7 +221,8 @@ class SharedSuperModel:
             lr = lr_fn(opt_state.step)
             new_adapters, new_opt = adamw.update(
                 grads, opt_state, adapters, lr=lr,
-                weight_decay=weight_decay)
+                weight_decay=weight_decay,
+                col_jobs=self.layout.col_jobs)
             metrics = {"loss": per_job.sum(), "per_job_loss": per_job,
                        "lr": lr}
             return new_adapters, new_opt, metrics
@@ -219,7 +248,8 @@ class SharedSuperModel:
 
     def _make_sharded_step(self, *, lr_fn, nano_batches, remat,
                            weight_decay, steps, unroll, mesh, data_axis,
-                           grad_sync, tp_mode) -> Callable:
+                           grad_sync, tp_mode,
+                           nano_order: str = "job") -> Callable:
         """shard_map-wrapped train step — see make_train_step docstring.
 
         The body is the exact single-device train step evaluated on this
@@ -262,11 +292,27 @@ class SharedSuperModel:
         # identity without axis_index — unsupported under partial-auto
         # on this backend)
         perm = shard_permutation(rows, D)
+        seg_order = None
         if nano_batches > 1:
             g = math.gcd(*rows_loc)
             assert g % nano_batches == 0, \
                 (f"nano_batches={nano_batches} must divide every job's "
                  f"per-shard rows {rows_loc}")
+            if self.impl == "pallas":
+                # ragged kernel legality: every job's per-slice token
+                # count must stay whole token tiles, or the static
+                # rank-bucket tile metadata cannot describe the slice
+                # (valid_nano_counts(seg_rows=...) pre-filters AIMD to
+                # exactly this set)
+                S = self.jobs[0].seq_len
+                assert all((r * S) % (nano_batches * self.block_t) == 0
+                           for r in rows_loc), \
+                    (f"nano_batches={nano_batches} breaks rank-bucket "
+                     f"tile alignment for per-shard rows {rows_loc} "
+                     f"(seq_len={S}, block_t={self.block_t})")
+            seg_order = tuple(
+                sorted(range(K), key=lambda k: (-int(self.ranks[k]), k))
+                if nano_order == "rank_desc" else range(K))
         # XLA's SPMD partitioner cannot take grad-through-scan inside a
         # partially-manual shard_map: with a live (>1) GSPMD "model"
         # axis the layer scan must unroll (same per-layer math — the
@@ -290,7 +336,8 @@ class SharedSuperModel:
                 lora = self.lora_ctx(nb["adapter_ids"],
                                      axis_name=axis,
                                      row_solo_pos=rp,
-                                     grad_sync=grad_sync)
+                                     grad_sync=grad_sync,
+                                     nano_order=seg_order)
                 return M.loss_fn(cfg, params, ad, lora, nb, remat=remat,
                                  per_job_denom=denom,
                                  unroll_layers=unroll_layers)
@@ -304,7 +351,7 @@ class SharedSuperModel:
                 per_job = aux["per_job"]
             else:
                 nb_batch = _reshape_nano_jobwise(batch, nano_batches,
-                                                 rows_loc)
+                                                 rows_loc, order=seg_order)
                 zero_g = jax.tree.map(
                     lambda a: jnp.zeros(a.shape, jnp.float32), adapters)
 
@@ -326,7 +373,8 @@ class SharedSuperModel:
             lr = lr_fn(opt_state.step)
             new_adapters, new_opt = adamw.update(
                 grads, opt_state, adapters, lr=lr,
-                weight_decay=weight_decay)
+                weight_decay=weight_decay,
+                col_jobs=self.layout.col_jobs)
             metrics = {"loss": per_job.sum(), "per_job_loss": per_job,
                        "lr": lr}
             return new_adapters, new_opt, metrics
@@ -433,18 +481,31 @@ def _reshape_nano(batch: dict, n: int) -> dict:
     return jax.tree.map(f, batch)
 
 
-def _reshape_nano_jobwise(batch: dict, n: int, rows: Sequence[int]) -> dict:
+def _reshape_nano_jobwise(batch: dict, n: int, rows: Sequence[int],
+                          order: Optional[Sequence[int]] = None) -> dict:
     """Job-aware nano split for the sharded step: slice *i* takes rows
     ``[i*r_j/n, (i+1)*r_j/n)`` of EVERY job, so each slice is itself a
     job-major mini fused batch — the per-shard kernel contract (sorted
     contiguous segments, equal composition) survives re-granulation.
     The plain contiguous split would hand slices dominated by one job,
     whose ids break the equal-segment reshape dispatch.
+
+    ``order`` permutes the job SEGMENTS inside each slice (default: job
+    index order).  The rank-bucketed pipeline passes rank-descending
+    order so every slice leads with its large-rank segments — their
+    adapter-gradient collectives are the biggest, and issuing them
+    first in the backward overlaps them against the small-rank
+    segments' remaining compute.  Segments stay contiguous whatever the
+    order, so the kernels' tile contract (one adapter per token tile)
+    is preserved; adapter_ids ride the permutation as data.
     """
+    order = list(order) if order is not None else list(range(len(rows)))
+    assert sorted(order) == list(range(len(rows))), order
     offs = np.concatenate([[0], np.cumsum(rows)])
     idx = np.concatenate([
-        np.arange(offs[j] + i * (r // n), offs[j] + (i + 1) * (r // n))
-        for i in range(n) for j, r in enumerate(rows)])
+        np.arange(offs[j] + i * (rows[j] // n),
+                  offs[j] + (i + 1) * (rows[j] // n))
+        for i in range(n) for j in order])
     idx = jnp.asarray(idx, jnp.int32)
     R = int(sum(rows))
 
@@ -456,11 +517,22 @@ def _reshape_nano_jobwise(batch: dict, n: int, rows: Sequence[int]) -> dict:
     return jax.tree.map(f, batch)
 
 
-def valid_nano_counts(rows: int, max_n: Optional[int] = None) -> List[int]:
+def valid_nano_counts(rows: int, max_n: Optional[int] = None, *,
+                      seg_rows: Optional[Sequence[int]] = None,
+                      seq_len: int = 1,
+                      block_t: int = 1) -> List[int]:
     """Divisors of the fused row count (legal nano-batch counts), sorted
     ascending.  O(√rows) paired enumeration — this runs inside
     ``AIMDController.__post_init__`` on every regroup and *rows* reaches
-    the thousands at production batch sizes."""
+    the thousands at production batch sizes.
+
+    ``seg_rows`` extends the legal set to the RANK-BUCKET boundary
+    constraint of the ragged kernels: with a job-proportional split
+    every job's per-slice token count must stay a whole number of token
+    tiles ((seg_rows[j] * seq_len) % (n * block_t) == 0 for all j), or
+    the static per-slice tile→(job, rank-tile) metadata cannot describe
+    the slice.  *rows* should then be the gcd of ``seg_rows`` (the
+    divisibility base of the job-proportional split)."""
     small, large = [], []
     d = 1
     while d * d <= rows:
@@ -472,4 +544,8 @@ def valid_nano_counts(rows: int, max_n: Optional[int] = None) -> List[int]:
     out = small + large[::-1]
     if max_n is not None:
         out = [n for n in out if n <= max_n]
+    if seg_rows is not None:
+        out = [n for n in out
+               if all((r * seq_len) % (n * block_t) == 0
+                      for r in seg_rows)]
     return out

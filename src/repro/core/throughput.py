@@ -126,6 +126,25 @@ def lora_param_count(cfg: ModelConfig, rank: int) -> int:
     return adapter_param_count(cfg, [rank])
 
 
+@lru_cache(maxsize=256)
+def lora_dims_per_rank(cfg: ModelConfig) -> int:
+    """Σ over LoRA-targeted projections of (d_in + d_out), layer
+    repeats included — the per-rank-lane parameter (and per-token-lane
+    FLOP) footprint of one adapter."""
+    return lora_param_count(cfg, 1)
+
+
+def _padded_rank(rank: int) -> int:
+    """What the ragged kernels compute/store per adapter: the runtime
+    padding rule (core/lora.pad_rank) at the SSM's small-scale default
+    lane multiple.  A real-TPU deployment pads to wider lanes (the
+    SSM uses min(block_t, 16)); the oracle's constant multiple is an
+    analytic-model simplification, same spirit as the fixed mfu/bw
+    constants it sits next to."""
+    from repro.core.lora import pad_rank
+    return pad_rank(rank, multiple=8)
+
+
 # ----------------------------------------------------------- step model
 @dataclass(frozen=True)
 class StepCost:
@@ -164,21 +183,31 @@ def group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                     chips: int, *, hw: HardwareSpec = V5E,
                     spans_nodes: bool = False,
                     kernel_fused: bool = True,
-                    nano_batches: int = 4) -> StepCost:
+                    nano_batches: int = 4,
+                    ragged_kernels: bool = True) -> StepCost:
     """Price one fused step of *jobs* co-located on *chips* accelerators.
+
+    ``ragged_kernels`` selects the LoRA-kernel pricing rule: True (the
+    production rank-bucketed ragged path) prices each adapter's tokens
+    at ITS OWN padded rank; False reproduces the masked max-rank
+    baseline where every token pays the group-wide maximum — the waste
+    that used to discourage exactly the heterogeneous fusions tLoRA
+    exists to make cheap.
 
     Memoized on the workload signature — the scheduler probes the same
     candidate groups many times per round."""
     sig = (cfg.name, tuple(sorted((j.rank, j.batch_size, j.seq_len)
                                   for j in jobs)),
-           chips, hw, spans_nodes, kernel_fused, nano_batches)
+           chips, hw, spans_nodes, kernel_fused, nano_batches,
+           ragged_kernels)
     hit = _COST_CACHE.get(sig)
     if hit is not None:
         return hit
     cost = _group_step_cost(cfg, jobs, chips, hw=hw,
                             spans_nodes=spans_nodes,
                             kernel_fused=kernel_fused,
-                            nano_batches=nano_batches)
+                            nano_batches=nano_batches,
+                            ragged_kernels=ragged_kernels)
     if len(_COST_CACHE) > 200_000:
         _COST_CACHE.clear()
     _COST_CACHE[sig] = cost
@@ -192,7 +221,8 @@ def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                      chips: int, *, hw: HardwareSpec = V5E,
                      spans_nodes: bool = False,
                      kernel_fused: bool = True,
-                     nano_batches: int = 4) -> StepCost:
+                     nano_batches: int = 4,
+                     ragged_kernels: bool = True) -> StepCost:
     assert chips >= 1
     total_p, active_p = param_counts(cfg)
     tokens = sum(j.batch_size * j.seq_len for j in jobs)
@@ -204,6 +234,19 @@ def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
     for j in jobs:
         flops += 4 * 2 * n_attn * cfg.q_dim * j.seq_len ** 2 * j.batch_size / 2
 
+    # fused-LoRA kernel term (fwd 2 + dgrad 2 + wgrad 2 FLOPs per lane):
+    # ragged kernels do true per-adapter padded-rank work; the masked
+    # baseline pays the group max on every token.  Negligible for
+    # homogeneous small-rank groups, but K·r_max pricing over-penalized
+    # mixed-rank fusions by up to r_max/r_j per member.
+    dims = lora_dims_per_rank(cfg)
+    r_max_pad = _padded_rank(max(j.rank for j in jobs))
+    lora_lane_tokens = 0.0
+    for j in jobs:
+        r_eff = _padded_rank(j.rank) if ragged_kernels else r_max_pad
+        lora_lane_tokens += j.batch_size * j.seq_len * r_eff
+    flops += 6 * lora_lane_tokens * dims
+
     # efficiency saturates with per-chip workload (small-GEMM occupancy —
     # the residual capacity complementarity exploits, §3.4)
     tpc = tokens / chips
@@ -213,8 +256,14 @@ def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
 
     # weight traffic: every chip streams its weight shard once per pass
     # (fwd + bwd-recompute + bwd) per nano-batch — batching amortizes this
-    # across the union batch; isolated small jobs pay it alone.
-    wbytes = total_p * 2 / chips
+    # across the union batch; isolated small jobs pay it alone.  Adapter
+    # streaming (and the same-shaped AdamW moments) rides along at
+    # PADDED width: the ragged layout stores Σ r_pad_j lanes, the
+    # masked baseline K·r_max — 16x more for a {4,...,4,64} group.
+    lora_pad_params = sum(
+        (_padded_rank(j.rank) if ragged_kernels else r_max_pad) * dims
+        for j in jobs)
+    wbytes = (total_p * 2 + lora_pad_params * 2) / chips
     t_memory = wbytes * 3 * max(1, nano_batches if kernel_fused else 1) \
         / hw.hbm_bw
     act_bytes = tokens * cfg.d_model * 2 * 12 / chips
@@ -250,29 +299,36 @@ def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
 
 def standalone_step_time(cfg: ModelConfig, job: LoRAJobSpec, *,
                          hw: HardwareSpec = V5E,
-                         kernel_fused: bool = True) -> float:
+                         kernel_fused: bool = True,
+                         ragged_kernels: bool = True) -> float:
     return group_step_cost(cfg, [job], max(job.gpus, 1), hw=hw,
-                           kernel_fused=kernel_fused).total
+                           kernel_fused=kernel_fused,
+                           ragged_kernels=ragged_kernels).total
 
 
 def group_throughput(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                      chips: int, *, hw: HardwareSpec = V5E,
                      spans_nodes: bool = False,
-                     kernel_fused: bool = True) -> float:
+                     kernel_fused: bool = True,
+                     ragged_kernels: bool = True) -> float:
     """Samples/sec of the fused group (the scheduler objective T̂(G))."""
     t = group_step_cost(cfg, jobs, chips, hw=hw, spans_nodes=spans_nodes,
-                        kernel_fused=kernel_fused).total
+                        kernel_fused=kernel_fused,
+                        ragged_kernels=ragged_kernels).total
     return sum(j.batch_size for j in jobs) / t
 
 
 def slowdowns(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], chips: int,
               *, hw: HardwareSpec = V5E, spans_nodes: bool = False,
-              kernel_fused: bool = True) -> Dict[str, float]:
+              kernel_fused: bool = True,
+              ragged_kernels: bool = True) -> Dict[str, float]:
     """Δ_j(G): per-job step-time inflation vs standalone execution."""
     t_g = group_step_cost(cfg, jobs, chips, hw=hw, spans_nodes=spans_nodes,
-                          kernel_fused=kernel_fused).total
-    return {j.job_id: t_g / standalone_step_time(cfg, j, hw=hw,
-                                                 kernel_fused=kernel_fused)
+                          kernel_fused=kernel_fused,
+                          ragged_kernels=ragged_kernels).total
+    return {j.job_id: t_g / standalone_step_time(
+                cfg, j, hw=hw, kernel_fused=kernel_fused,
+                ragged_kernels=ragged_kernels)
             for j in jobs}
 
 

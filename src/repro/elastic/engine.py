@@ -43,6 +43,7 @@ class ElasticEngine:
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
                  lr_fn: Optional[Callable] = None, remat: bool = True,
                  nano_batches: int = 1, adaptive_nano: bool = False,
+                 aimd_max_n: int = 16, nano_order: str = "job",
                  weight_decay: float = 0.0, chunk_size: int = 4,
                  mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
@@ -62,6 +63,8 @@ class ElasticEngine:
                                lr_fn=lr_fn, remat=remat,
                                nano_batches=nano_batches,
                                adaptive_nano=adaptive_nano,
+                               aimd_max_n=aimd_max_n,
+                               nano_order=nano_order,
                                weight_decay=weight_decay,
                                chunk_size=chunk_size, seed=seed,
                                mesh=mesh, data_axis=data_axis,
@@ -186,7 +189,8 @@ class ElasticEngine:
             s.standalone_step_time = tp.standalone_step_time(
                 self.cfg, spec,
                 hw=self.scheduler.hw_for(max(spec.gpus, 1)),
-                kernel_fused=self.scheduler.sched.kernel_fused)
+                kernel_fused=self.scheduler.sched.kernel_fused,
+                ragged_kernels=self.scheduler.sched.ragged_kernels)
             gkey = self._home(jid)
             if gkey is not None:
                 s.current_step_time = \

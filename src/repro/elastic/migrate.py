@@ -9,12 +9,16 @@ A job's *complete* training identity is captured by ``JobTrainState``:
   * its lifetime step counter.
 
 ``fuse_states`` re-fuses any set of such states into one SSM-shaped
-adapter stack + optimizer state, re-padding each job from whatever r_pad
-its previous stack used to the destination stack's r_pad.  Because the
-fused-kernel rank mask guarantees zero gradient (hence zero Adam moments)
-in padding lanes, pack → train → unpack → re-pack is *exact*: no
-information lives outside the un-padded slices.  This is the invariant
-tests/test_lossless.py::test_elastic_migration_is_lossless checks.
+PACKED RAGGED adapter stack + optimizer state (core/lora.RankLayout):
+each job's un-padded slices copy into its own per-adapter-padded
+segment, so fusing next to a wider-rank member never re-pads anyone to
+the group max — migrations between groups of different max rank are
+copy-only, and no max-rank-padded intermediate is ever allocated.
+Because the fused-kernel rank mask guarantees zero gradient (hence zero
+Adam moments) in padding lanes, pack → train → unpack → re-pack is
+*exact*: no information lives outside the un-padded slices.  This is
+the invariant tests/test_lossless.py::test_elastic_migration_is_lossless
+checks.
 
 Layer map: DESIGN.md §6 (elastic runtime).
 """
@@ -32,6 +36,7 @@ from repro.checkpoint.checkpoint import (insert_job, load_job, load_meta,
                                          restore_stream_state, slice_job)
 from repro.configs.base import ModelConfig
 from repro.core.jobs import LoRAJobSpec
+from repro.core.lora import RankLayout
 from repro.data.pipeline import JobStream
 from repro.models import model as M
 from repro.optim.adamw import AdamWState
@@ -56,7 +61,9 @@ class JobTrainState:
         ``r_pad`` must match the padding rule of the stack the job would
         have been initialized into (init scale depends on it); the
         un-padded slices carried here are exactly what a solo init with
-        the same key would hold.
+        the same key would hold.  With per-adapter padding the rule
+        depends only on the job's own rank, so the init is
+        composition-independent.
         """
         from repro.core.lora import pad_rank
         r_pad = r_pad or pad_rank(spec.rank)
@@ -107,40 +114,48 @@ class JobTrainState:
 
 
 def zeros_like_fused(cfg: ModelConfig, ranks: Sequence[int],
-                     r_pad: int) -> dict:
-    """All-zero adapter stack with the destination group's shapes."""
+                     layout: RankLayout) -> dict:
+    """All-zero adapter stack with the destination group's ragged shapes."""
     ranks = jnp.asarray(list(ranks), jnp.int32)
     shapes = jax.eval_shape(
         lambda: M.init_adapters(jax.random.PRNGKey(0), cfg, ranks,
-                                r_pad=r_pad))
+                                layout=layout))
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
 
 def fuse_states(cfg: ModelConfig, states: Sequence[JobTrainState],
-                r_pad: int) -> Tuple[dict, AdamWState]:
-    """Pack K job states into one fused adapter stack + AdamW state.
+                layout: RankLayout) -> Tuple[dict, AdamWState]:
+    """Pack K job states into one ragged fused adapter stack + AdamW
+    state.
 
-    Handles heterogeneous source r_pad transparently (slices are
-    un-padded; destination lanes beyond each rank stay zero).  The Adam
-    step is the per-job vector ``[s.opt_step for s in states]`` so bias
-    correction stays per-job exact across migrations.
+    Handles heterogeneous source padding transparently (slices are
+    un-padded; each job copies into its OWN padded segment of the
+    destination layout, lanes beyond each rank stay zero — no member is
+    ever re-padded to the group max).  The Adam step is the per-job
+    vector ``[s.opt_step for s in states]`` so bias correction stays
+    per-job exact across migrations.
     """
-    adapters = zeros_like_fused(cfg, [s.spec.rank for s in states], r_pad)
+    assert layout.num_jobs == len(states)
+    assert layout.ranks == tuple(s.spec.rank for s in states), \
+        (layout.ranks, [s.spec.rank for s in states])
+    adapters = zeros_like_fused(cfg, [s.spec.rank for s in states], layout)
     mu = adapters
     nu = adapters
     for idx, s in enumerate(states):
-        adapters = insert_job(adapters, idx, s.spec.rank, s.adapter)
-        mu = insert_job(mu, idx, s.spec.rank, s.mu)
-        nu = insert_job(nu, idx, s.spec.rank, s.nu)
+        off, r_cap = layout.slice_of(idx)
+        adapters = insert_job(adapters, off, s.spec.rank, s.adapter, r_cap)
+        mu = insert_job(mu, off, s.spec.rank, s.mu, r_cap)
+        nu = insert_job(nu, off, s.spec.rank, s.nu, r_cap)
     step = jnp.asarray([s.opt_step for s in states], jnp.int32)
     return adapters, AdamWState(step, mu, nu)
 
 
 def unfuse_state(adapters: dict, opt_state: AdamWState, idx: int,
-                 spec: LoRAJobSpec, *, steps_done: int = 0,
+                 spec: LoRAJobSpec, *, layout: RankLayout,
+                 steps_done: int = 0,
                  stream: Optional[JobStream] = None) -> JobTrainState:
-    """Extract job *idx* from a fused stack into portable form (the
-    inverse of fuse_states for one member).
+    """Extract job *idx* from a ragged fused stack into portable form
+    (the inverse of fuse_states for one member).
 
     Slices come back HOST-resident (device_get): the portable state
     must be device-neutral, or a job exported from a runtime pinned to
@@ -150,11 +165,12 @@ def unfuse_state(adapters: dict, opt_state: AdamWState, idx: int,
     opt_step = int(jax.device_get(opt_state.step)[idx]) \
         if getattr(opt_state.step, "ndim", 0) >= 1 \
         else int(jax.device_get(opt_state.step))
+    off, _ = layout.slice_of(idx)
     return JobTrainState(
         spec=spec,
-        adapter=jax.device_get(slice_job(adapters, idx, spec.rank)),
-        mu=jax.device_get(slice_job(opt_state.mu, idx, spec.rank)),
-        nu=jax.device_get(slice_job(opt_state.nu, idx, spec.rank)),
+        adapter=jax.device_get(slice_job(adapters, off, spec.rank)),
+        mu=jax.device_get(slice_job(opt_state.mu, off, spec.rank)),
+        nu=jax.device_get(slice_job(opt_state.nu, off, spec.rank)),
         opt_step=opt_step,
         steps_done=steps_done,
         stream=stream)

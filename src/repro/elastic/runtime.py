@@ -92,6 +92,7 @@ class GroupRuntime:
                  lr: float = 1e-3, lr_fn: Optional[Callable] = None,
                  impl: str = "ref", block_t: int = 8,
                  nano_batches: int = 1, adaptive_nano: bool = False,
+                 aimd_max_n: int = 16, nano_order: str = "job",
                  remat: bool = True, weight_decay: float = 0.0,
                  chunk_size: int = 4, scan_unroll: bool = False,
                  mesh=None, data_axis: str = "data",
@@ -167,16 +168,35 @@ class GroupRuntime:
         self.lr_fn = lr_fn or constant(lr)
         self.remat = remat
         self.weight_decay = weight_decay
+        # rank-aware nano pipeline: static job order of segments within
+        # each (sharded, job-proportional) nano slice — "rank_desc"
+        # leads every slice with its large-rank segments so their
+        # bigger adapter-grad collectives overlap small-rank compute
+        assert nano_order in ("job", "rank_desc"), nano_order
+        self.nano_order = nano_order
         if D > 1:
             # legal nano counts must divide EVERY job's per-shard rows
-            # (the job-aware nano split keeps per-slice composition equal)
+            # (the job-aware nano split keeps per-slice composition
+            # equal), and — for the ragged pallas kernels — keep every
+            # job's per-slice token count on a rank-bucket tile
+            # boundary (static tile metadata; ssm.valid_nano_counts)
             import math
-            nano_rows = math.gcd(*[r // D
-                                   for r in self.batcher.rows_per_job()])
+            from repro.core.ssm import valid_nano_counts
+            rows_loc = [r // D for r in self.batcher.rows_per_job()]
+            nano_rows = math.gcd(*rows_loc)
+            legal_kw = (dict(seg_rows=rows_loc,
+                             seq_len=self.specs[0].seq_len,
+                             block_t=block_t)
+                        if impl == "pallas" else {})
+            legal = valid_nano_counts(nano_rows,
+                                      min(nano_rows, aimd_max_n),
+                                      **legal_kw)
         else:
             nano_rows = self.batcher.total_rows()
+            legal = None
         self.aimd = AIMDController(rows=nano_rows, n=nano_batches,
-                                   max_n=min(nano_rows, 16)) \
+                                   max_n=min(nano_rows, aimd_max_n),
+                                   legal=legal) \
             if adaptive_nano else None
         self.n = nano_batches
         self.chunk_size = max(1, chunk_size)
@@ -199,10 +219,12 @@ class GroupRuntime:
                     **kw) -> "GroupRuntime":
         """Fuse K portable job states into a live group (join/migrate)."""
         specs = [s.spec for s in states]
-        # r_pad follows the SSM's padding rule for this group composition
+        # the ragged layout follows the SSM's per-adapter padding rule —
+        # each member keeps its OWN padded width, so this fuse is a
+        # copy into per-job segments regardless of the group's max rank
         probe = SharedSuperModel(cfg, specs, impl=kw.get("impl", "ref"),
                                  block_t=kw.get("block_t", 8))
-        adapters, opt_state = fuse_states(cfg, states, probe.r_pad)
+        adapters, opt_state = fuse_states(cfg, states, probe.layout)
         # carry each member's live stream; only stream-less states (e.g.
         # restored checkpoints) start a fresh one
         streams = [s.stream if s.stream is not None
@@ -255,7 +277,8 @@ class GroupRuntime:
                                           mesh=self.mesh,
                                           data_axis=self.data_axis,
                                           grad_sync=self.grad_sync,
-                                          tp_mode=self.tp_mode)
+                                          tp_mode=self.tp_mode,
+                                          nano_order=self.nano_order)
             jitted = jax.jit(fn, donate_argnums=(1, 2))
             if self.mesh is None or self.tp_mode == "dp":
                 # full-manual shard_map: no GSPMD axes to constrain
@@ -432,8 +455,9 @@ class GroupRuntime:
             jax.device_get(self.opt_state.step)))
         paths = []
         for idx, spec in enumerate(self.specs):
+            off, _ = self.ssm.layout.slice_of(idx)
             path = os.path.join(directory, f"{spec.job_id}.npz")
-            save_job(path, spec.job_id, idx, spec.rank, self.adapters,
+            save_job(path, spec.job_id, off, spec.rank, self.adapters,
                      self.opt_state,
                      step=int(step_vec[idx % step_vec.size]),
                      meta={"steps_done": self.steps_done[spec.job_id],
@@ -450,7 +474,7 @@ class GroupRuntime:
         advancing afterwards cannot corrupt it (and vice versa)."""
         idx = self.index_of(job_id)
         return unfuse_state(self.adapters, self.opt_state, idx,
-                            self.specs[idx],
+                            self.specs[idx], layout=self.ssm.layout,
                             steps_done=self.steps_done[job_id],
                             stream=copy.deepcopy(self.batcher.streams[idx]))
 

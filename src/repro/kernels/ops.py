@@ -1,6 +1,11 @@
 """jit-ready wrappers around the fused multi-LoRA kernels.
 
-``fused_lora`` dispatches between:
+Two kernel families share this module:
+
+``fused_lora`` — the legacy MASKED max-rank family over stacked
+(K, d, r_pad) adapters (every adapter padded to the group max, dead
+lanes zero-masked).  Kept as the reference/baseline path and for direct
+callers with stacked state:
   * "pallas" — the TPU kernel (interpret-mode on CPU), custom VJP whose
     backward is grouped end-to-end: two grouped-mm launches for dx and
     two segment-aware grouped-wgrad launches for dA/dB (no one-hot
@@ -10,6 +15,19 @@
     Same math; custom VJP with segment-dense batched-einsum wgrads.
   * "ref"    — gather oracle (tests, small scale).
   * "loop"   — per-adapter GEMM pair, the *unfused* baseline (Fig. 7).
+
+``fused_lora_ragged`` — the RANK-BUCKETED RAGGED family over packed
+(d, R)/(R, d) adapters with per-adapter padded segments
+(core/lora.RankLayout), the production path (DESIGN.md §10): work is
+proportional to each adapter's true padded rank, never K·r_max.
+  * "pallas" — kernels/ragged.py: flat (token tile × rank tile) grids
+    enumerating only active rank tiles via scalar-prefetched rank
+    metadata; fused fwd and dgrad launches, packed ragged wgrads.
+  * "xla"    — bucket-concatenated einsums: jobs grouped by padded
+    width, one segment-dense batched GEMM pair per bucket (fallback:
+    per-bucket one-hot combine for non-equal-segment layouts).
+  * "ref"/"loop" — densify the packed pair to the stacked max-rank view
+    and run the gather oracle / unfused baseline (tests, ablation).
 
 Contract required by "pallas"/"xla": tokens sorted by adapter id,
 contiguous segments, each segment length a multiple of block_t (the SSM
@@ -36,6 +54,7 @@ from __future__ import annotations
 
 import functools
 import os
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -43,6 +62,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_impl
 from repro.kernels import fused_lora as pk
+from repro.kernels import ragged as rg
+from repro.kernels.ragged import RaggedMeta
 
 
 def _env_interpret() -> bool:
@@ -65,6 +86,8 @@ def set_interpret(flag: bool) -> None:
     _INTERPRET = bool(flag)
     _make_pallas_fn.cache_clear()
     _make_pallas_sharded_fn.cache_clear()
+    _make_ragged_pallas_fn.cache_clear()
+    _make_ragged_pallas_sharded_fn.cache_clear()
 
 
 def get_interpret() -> bool:
@@ -449,6 +472,520 @@ def _make_pallas_sharded_fn(block_t: int, axis_name: str,
 
     f.defvjp(_fwd, _bwd)
     return f
+
+
+# ------------------------------------------------------- ragged (xla)
+def _bucket_params(A, B, layout):
+    """Static per-bucket dense views of a packed ragged pair: for each
+    padded width rp, the member jobs and their stacked (K_b, d, rp) /
+    (K_b, rp, d_out) slabs.  A bucket whose jobs are consecutive owns a
+    CONTIGUOUS packed column range, so its slab is one reshape of one
+    slice; pure static slicing either way — the compiler fuses the
+    stack into the consuming einsum."""
+    out = []
+    for rp, jobs in layout.buckets:
+        if _contiguous(jobs):
+            o0 = layout.offsets[jobs[0]]
+            Ab = jax.lax.slice_in_dim(
+                A, o0, o0 + rp * len(jobs), axis=1
+            ).reshape(A.shape[0], len(jobs), rp).transpose(1, 0, 2)
+            Bb = jax.lax.slice_in_dim(
+                B, o0, o0 + rp * len(jobs), axis=0
+            ).reshape(len(jobs), rp, B.shape[-1])
+        else:
+            Ab = jnp.stack([jax.lax.slice_in_dim(
+                A, layout.offsets[k], layout.offsets[k] + rp, axis=1)
+                for k in jobs])
+            Bb = jnp.stack([jax.lax.slice_in_dim(
+                B, layout.offsets[k], layout.offsets[k] + rp, axis=0)
+                for k in jobs])
+        out.append((rp, jobs, Ab, Bb))
+    return out
+
+
+def _contiguous(jobs) -> bool:
+    return all(b == a + 1 for a, b in zip(jobs, jobs[1:]))
+
+
+def _bucket_rows(buf, jobs):
+    """The bucket's job rows of a (K, C, ...) job-major tensor — one
+    slice when the bucket is a consecutive job range, a static gather
+    otherwise."""
+    if _contiguous(jobs):
+        return jax.lax.slice_in_dim(buf, jobs[0], jobs[-1] + 1, axis=0)
+    return buf[jnp.asarray(jobs)]
+
+
+def _assemble_jobs(pieces):
+    """Per-job (C, ...) pieces (job order) -> (K, C, ...) job-major."""
+    return jnp.stack(pieces, axis=0)
+
+
+def _bucket_rank_mask(layout, rp, jobs):
+    """(K_b, rp) bool lane mask, or None when every member fills its
+    padded width (no masking work at all — the common aligned case)."""
+    ranks = [layout.ranks[k] for k in jobs]
+    if all(r == rp for r in ranks):
+        return None
+    lane = np.arange(rp)[None, :] < np.asarray(ranks)[:, None]
+    return jnp.asarray(lane)
+
+
+def _concat_pieces(pieces_a, pieces_b):
+    """Per-job (d, rp_k)/(rp_k, d) gradient pieces (job order) -> packed."""
+    return (jnp.concatenate(pieces_a, axis=-1),
+            jnp.concatenate(pieces_b, axis=0))
+
+
+def _ragged_equal_forward(x, A, B, scalings, layout):
+    """Equal-segment ragged forward: one segment-dense batched GEMM pair
+    PER RANK BUCKET — FLOPs = Σ_k 2·C·d·rp_k, the true-rank ideal the
+    masked max-rank path misses by up to r_max/rp_k per member."""
+    T, d_in = x.shape
+    K = layout.num_jobs
+    C = T // K
+    buf = x.reshape(K, C, d_in)
+    pieces = [None] * K
+    for rp, jobs, Ab, Bb in _bucket_params(A, B, layout):
+        xa = jnp.einsum("kcd,kdr->kcr", _bucket_rows(buf, jobs), Ab,
+                        preferred_element_type=jnp.float32)
+        m = _bucket_rank_mask(layout, rp, jobs)
+        if m is not None:
+            xa = jnp.where(m[:, None, :], xa, 0.0)
+        xa = xa.astype(x.dtype)
+        y = jnp.einsum("kcr,kro->kco", xa, Bb,
+                       preferred_element_type=jnp.float32)
+        y = y * scalings[jnp.asarray(jobs)][:, None, None]
+        for i, k in enumerate(jobs):
+            pieces[k] = y[i]
+    return _assemble_jobs(pieces).reshape(T, -1).astype(x.dtype)
+
+
+def _ragged_equal_bwd_parts(x, A, B, scalings, layout, dy):
+    """Per-bucket recomputed backward intermediates of the equal path:
+    yields (rp, jobs, Ab, buf_b, dy_s, xa, dxa) — shared by dx and the
+    wgrads so solo and sharded VJPs evaluate literally the same
+    expressions (the sharded bit-exactness contract)."""
+    T, d_in = x.shape
+    K = layout.num_jobs
+    C = T // K
+    buf = x.reshape(K, C, d_in)
+    dyb = dy.reshape(K, C, -1)
+    for rp, jobs, Ab, Bb in _bucket_params(A, B, layout):
+        buf_b = _bucket_rows(buf, jobs)
+        dy_s = (_bucket_rows(dyb, jobs).astype(jnp.float32)
+                * scalings[jnp.asarray(jobs)][:, None, None])
+        xa = jnp.einsum("kcd,kdr->kcr", buf_b, Ab,
+                        preferred_element_type=jnp.float32)
+        dxa = jnp.einsum("kco,kro->kcr", dy_s, Bb.astype(jnp.float32))
+        m = _bucket_rank_mask(layout, rp, jobs)
+        if m is not None:
+            xa = jnp.where(m[:, None, :], xa, 0.0)
+            dxa = jnp.where(m[:, None, :], dxa, 0.0)
+        yield rp, jobs, Ab, buf_b, dy_s, xa.astype(x.dtype), dxa
+
+
+def _ragged_equal_dx(x, A, B, scalings, layout, dy):
+    T, d_in = x.shape
+    pieces = [None] * layout.num_jobs
+    for rp, jobs, Ab, buf_b, dy_s, xa, dxa in _ragged_equal_bwd_parts(
+            x, A, B, scalings, layout, dy):
+        dx_b = jnp.einsum("kcr,kdr->kcd", dxa, Ab.astype(jnp.float32))
+        for i, k in enumerate(jobs):
+            pieces[k] = dx_b[i]
+    return _assemble_jobs(pieces).reshape(T, d_in)
+
+
+def _ragged_equal_bwd(x, A, B, scalings, layout, dy):
+    """Single-pass solo backward: dx + dA + dB from ONE evaluation of
+    the per-bucket intermediates (the sharded VJP instead splits dx
+    (local) from the wgrads (gathered), paying the recompute only where
+    the operands genuinely differ)."""
+    T, d_in = x.shape
+    K = layout.num_jobs
+    dx_p, dA_p, dB_p = [None] * K, [None] * K, [None] * K
+    for rp, jobs, Ab, buf_b, dy_s, xa, dxa in _ragged_equal_bwd_parts(
+            x, A, B, scalings, layout, dy):
+        dx_b = jnp.einsum("kcr,kdr->kcd", dxa, Ab.astype(jnp.float32))
+        dA_b = jnp.einsum("kcd,kcr->kdr", buf_b.astype(jnp.float32), dxa)
+        dB_b = jnp.einsum("kcr,kco->kro", xa.astype(jnp.float32), dy_s)
+        for i, k in enumerate(jobs):
+            dx_p[k], dA_p[k], dB_p[k] = dx_b[i], dA_b[i], dB_b[i]
+    dA, dB = _concat_pieces(dA_p, dB_p)
+    return _assemble_jobs(dx_p).reshape(T, d_in), dA, dB
+
+
+def _ragged_equal_wgrads(x, A, B, scalings, layout, dy):
+    K = layout.num_jobs
+    dA_p, dB_p = [None] * K, [None] * K
+    for rp, jobs, Ab, buf_b, dy_s, xa, dxa in _ragged_equal_bwd_parts(
+            x, A, B, scalings, layout, dy):
+        dA_b = jnp.einsum("kcd,kcr->kdr", buf_b.astype(jnp.float32), dxa)
+        dB_b = jnp.einsum("kcr,kco->kro", xa.astype(jnp.float32), dy_s)
+        for i, k in enumerate(jobs):
+            dA_p[k] = dA_b[i]
+            dB_p[k] = dB_b[i]
+    return _concat_pieces(dA_p, dB_p)
+
+
+def _ragged_fallback_forward(x, A, B, ids, scalings, layout):
+    """Dense-over-BUCKET fallback for layouts without equal segments
+    (nano slices, test batches): exact for any ids, and still
+    rank-aware — each bucket densifies over its own members at its own
+    width (K_b · rp_b), never over all K at r_max."""
+    T, _ = x.shape
+    K = layout.num_jobs
+    y = jnp.zeros((T, B.shape[-1]), jnp.float32)
+    for rp, jobs, Ab, Bb in _bucket_params(A, B, layout):
+        ji = jnp.asarray(jobs)
+        table = np.full(K, len(jobs), np.int32)
+        table[list(jobs)] = np.arange(len(jobs), dtype=np.int32)
+        lids = jnp.asarray(table)[ids]        # bucket-local id (K_b = miss)
+        onehot = jax.nn.one_hot(lids, len(jobs), dtype=jnp.float32)
+        xa = jnp.einsum("td,kdr->tkr", x, Ab,
+                        preferred_element_type=jnp.float32)
+        m = _bucket_rank_mask(layout, rp, jobs)
+        if m is not None:
+            xa = jnp.where(m[None, :, :], xa, 0.0)
+        xa = xa.astype(x.dtype)
+        yb = jnp.einsum("tkr,kro->tko", xa, Bb,
+                        preferred_element_type=jnp.float32)
+        yb = yb * scalings[ji][None, :, None]
+        y = y + jnp.einsum("tko,tk->to", yb, onehot)
+    return y.astype(x.dtype)
+
+
+def _ragged_fallback_bwd_parts(x, A, B, ids, scalings, layout, dy):
+    """Per-bucket (rp, jobs, Ab, dy_k, xa, dxa) of the fallback backward
+    — dy_k carries the bucket-local one-hot, so dxa is segment-sparse
+    and the wgrads need no further masking."""
+    K = layout.num_jobs
+    for rp, jobs, Ab, Bb in _bucket_params(A, B, layout):
+        ji = jnp.asarray(jobs)
+        table = np.full(K, len(jobs), np.int32)
+        table[list(jobs)] = np.arange(len(jobs), dtype=np.int32)
+        lids = jnp.asarray(table)[ids]
+        onehot = jax.nn.one_hot(lids, len(jobs), dtype=jnp.float32)
+        dy_k = (dy.astype(jnp.float32)[:, None, :]
+                * onehot[:, :, None] * scalings[ji][None, :, None])
+        xa = jnp.einsum("td,kdr->tkr", x, Ab,
+                        preferred_element_type=jnp.float32)
+        dxa = jnp.einsum("tko,kro->tkr", dy_k, Bb.astype(jnp.float32))
+        m = _bucket_rank_mask(layout, rp, jobs)
+        if m is not None:
+            xa = jnp.where(m[None, :, :], xa, 0.0)
+            dxa = jnp.where(m[None, :, :], dxa, 0.0)
+        yield rp, jobs, Ab, dy_k, xa.astype(x.dtype), dxa
+
+
+def _ragged_fallback_dx(x, A, B, ids, scalings, layout, dy):
+    dx = jnp.zeros(x.shape, jnp.float32)
+    for rp, jobs, Ab, dy_k, xa, dxa in _ragged_fallback_bwd_parts(
+            x, A, B, ids, scalings, layout, dy):
+        dx = dx + jnp.einsum("tkr,kdr->td", dxa, Ab.astype(jnp.float32))
+    return dx
+
+
+def _ragged_fallback_wgrads(x, A, B, ids, scalings, layout, dy):
+    K = layout.num_jobs
+    dA_p, dB_p = [None] * K, [None] * K
+    for rp, jobs, Ab, dy_k, xa, dxa in _ragged_fallback_bwd_parts(
+            x, A, B, ids, scalings, layout, dy):
+        dA_b = jnp.einsum("td,tkr->kdr", x.astype(jnp.float32), dxa)
+        dB_b = jnp.einsum("tkr,tko->kro", xa.astype(jnp.float32), dy_k)
+        for i, k in enumerate(jobs):
+            dA_p[k] = dA_b[i]
+            dB_p[k] = dB_b[i]
+    return _concat_pieces(dA_p, dB_p)
+
+
+def _ragged_fallback_bwd(x, A, B, ids, scalings, layout, dy):
+    """Single-pass solo fallback backward (dx + dA + dB)."""
+    K = layout.num_jobs
+    dx = jnp.zeros(x.shape, jnp.float32)
+    dA_p, dB_p = [None] * K, [None] * K
+    for rp, jobs, Ab, dy_k, xa, dxa in _ragged_fallback_bwd_parts(
+            x, A, B, ids, scalings, layout, dy):
+        dx = dx + jnp.einsum("tkr,kdr->td", dxa, Ab.astype(jnp.float32))
+        dA_b = jnp.einsum("td,tkr->kdr", x.astype(jnp.float32), dxa)
+        dB_b = jnp.einsum("tkr,tko->kro", xa.astype(jnp.float32), dy_k)
+        for i, k in enumerate(jobs):
+            dA_p[k] = dA_b[i]
+            dB_p[k] = dB_b[i]
+    dA, dB = _concat_pieces(dA_p, dB_p)
+    return dx, dA, dB
+
+
+@functools.lru_cache(maxsize=64)
+def _make_ragged_xla_fn(layout, equal_segments: bool):
+    """Custom-VJP ragged xla path (static RankLayout).
+
+    Forward — equal segments dispatch to one batched einsum pair per
+    rank bucket (comm-free reshape + static gather of the bucket's
+    segments); anything else falls back to the per-bucket one-hot
+    combine.  Backward — hand-written bucket-dense wgrads mirroring the
+    masked path's structure at true-rank widths; scalings are alpha/r
+    constants, stop-gradiented via a float0 cotangent."""
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, scalings):
+        T = x.shape[0]
+        if equal_segments and T % layout.num_jobs == 0:
+            return _ragged_equal_forward(x, A, B, scalings, layout)
+        return _ragged_fallback_forward(x, A, B, ids, scalings, layout)
+
+    def _fwd(x, A, B, ids, scalings):
+        return f(x, A, B, ids, scalings), (x, A, B, ids, scalings)
+
+    def _bwd(res, dy):
+        x, A, B, ids, scalings = res
+        T = x.shape[0]
+        if equal_segments and T % layout.num_jobs == 0:
+            dx, dA, dB = _ragged_equal_bwd(x, A, B, scalings, layout, dy)
+        else:
+            dx, dA, dB = _ragged_fallback_bwd(x, A, B, ids, scalings,
+                                              layout, dy)
+        return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
+                _int_zeros(ids),
+                np.zeros(scalings.shape, jax.dtypes.float0))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=64)
+def _make_ragged_xla_sharded_fn(layout, equal_segments: bool,
+                                axis_name: str, total_tokens: int):
+    """Shard-local ragged xla VJP (DESIGN.md §8 contract, ragged
+    storage): forward and dx run on the local token shard; the wgrads
+    reassemble x and the cotangent at FULL shape in solo order
+    (``gather_solo``) and evaluate the SAME per-bucket wgrad
+    expressions as the solo VJP — replicated AND bit-exact w.r.t. solo
+    execution.  Nano slices reassemble with exact-zero rows for other
+    slices' tokens, which contribute exact zeros to every bucket."""
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, scalings, solo_pos):
+        T = x.shape[0]
+        if equal_segments and T % layout.num_jobs == 0:
+            return _ragged_equal_forward(x, A, B, scalings, layout)
+        return _ragged_fallback_forward(x, A, B, ids, scalings, layout)
+
+    def _fwd(x, A, B, ids, scalings, solo_pos):
+        return (f(x, A, B, ids, scalings, solo_pos),
+                (x, A, B, ids, scalings, solo_pos))
+
+    def _bwd(res, dy):
+        x, A, B, ids, scalings, solo_pos = res
+        T = x.shape[0]
+        # ---- local: dx (per-token, stays on this shard)
+        if equal_segments and T % layout.num_jobs == 0:
+            dx = _ragged_equal_dx(x, A, B, scalings, layout, dy)
+        else:
+            dx = _ragged_fallback_dx(x, A, B, ids, scalings, layout, dy)
+
+        # ---- global: wgrads from the solo-order full-shape tensors
+        xg = gather_solo(x, axis_name, solo_pos, total_tokens)
+        dyg = gather_solo(dy, axis_name, solo_pos, total_tokens)
+        if equal_segments and total_tokens % layout.num_jobs == 0:
+            dA, dB = _ragged_equal_wgrads(xg, A, B, scalings, layout, dyg)
+        else:
+            idg = gather_solo(ids, axis_name, solo_pos, total_tokens)
+            dA, dB = _ragged_fallback_wgrads(xg, A, B, idg, scalings,
+                                             layout, dyg)
+        return (dx.astype(x.dtype), dA.astype(A.dtype), dB.astype(B.dtype),
+                _int_zeros(ids),
+                np.zeros(scalings.shape, jax.dtypes.float0),
+                _int_zeros(solo_pos))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
+# ---------------------------------------------------- ragged (pallas)
+@functools.lru_cache(maxsize=64)
+def _make_ragged_pallas_fn(meta: RaggedMeta, block_t: int):
+    """Custom-VJP ragged pallas path for a static (batch layout, rank
+    layout).  Backward = one fused dgrad launch (dx) + two packed-mm
+    launches (xa, dxa) + two ragged-wgrad launches (dA, dB) — every
+    grid step is an active (token tile, rank tile) pair, so the whole
+    backward does true-rank work.  Scalings stop-gradiented (float0)."""
+    interpret = _INTERPRET
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, scalings):
+        y = rg.ragged_lora_fwd(x, A, B, meta, block_t=block_t,
+                               interpret=interpret)
+        return (y * scalings[ids][:, None]).astype(x.dtype)
+
+    def _fwd(x, A, B, ids, scalings):
+        return f(x, A, B, ids, scalings), (x, A, B, ids, scalings)
+
+    def _bwd(res, dy):
+        x, A, B, ids, scalings = res
+        dy_s = (dy.astype(jnp.float32)
+                * scalings[ids][:, None]).astype(dy.dtype)
+        dx = rg.ragged_lora_dgrad(dy_s, A, B, meta, block_t=block_t,
+                                  interpret=interpret)
+        xa = rg.ragged_xa(x, A, meta, block_t=block_t,
+                          interpret=interpret)
+        dxa = rg.ragged_dxa(dy_s, B, meta, block_t=block_t,
+                            interpret=interpret).astype(x.dtype)
+        dA = rg.ragged_wgrad(dxa, x, meta, block_t=block_t,
+                             interpret=interpret)          # (R, d_in)
+        dB = rg.ragged_wgrad(xa, dy_s, meta, block_t=block_t,
+                             interpret=interpret)          # (R, d_out)
+        return (dx.astype(x.dtype), dA.T.astype(A.dtype),
+                dB.astype(B.dtype), _int_zeros(ids),
+                np.zeros(scalings.shape, jax.dtypes.float0))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=64)
+def _make_ragged_pallas_sharded_fn(meta_local: RaggedMeta,
+                                   meta_solo: RaggedMeta, block_t: int,
+                                   axis_name: str, total_tokens: int):
+    """Shard-local ragged pallas VJP: forward + dx are local ragged
+    launches over this shard's (token tile, rank tile) pairs; wgrads
+    reassemble the token operands at full shape in solo order and
+    re-run the SAME ragged launches under the static SOLO metadata.
+    The solo metadata stays valid for nano slices too: reassembled
+    buffers carry exact-zero rows for other slices' tokens, and a zero
+    row contributes exact zeros to its segment's accumulator whatever
+    segment the static map assigns it — so no dense fallback is needed
+    anywhere (the masked pallas path needed one)."""
+    interpret = _INTERPRET
+
+    @jax.custom_vjp
+    def f(x, A, B, ids, scalings, solo_pos):
+        y = rg.ragged_lora_fwd(x, A, B, meta_local, block_t=block_t,
+                               interpret=interpret)
+        return (y * scalings[ids][:, None]).astype(x.dtype)
+
+    def _fwd(x, A, B, ids, scalings, solo_pos):
+        return (f(x, A, B, ids, scalings, solo_pos),
+                (x, A, B, ids, scalings, solo_pos))
+
+    def _bwd(res, dy):
+        x, A, B, ids, scalings, solo_pos = res
+        dy_s = (dy.astype(jnp.float32)
+                * scalings[ids][:, None]).astype(dy.dtype)
+
+        # ---- local: dx (one fused ragged dgrad launch)
+        dx = rg.ragged_lora_dgrad(dy_s, A, B, meta_local, block_t=block_t,
+                                  interpret=interpret)
+
+        # ---- global: wgrads from the solo-order full-shape tensors
+        xg = gather_solo(x, axis_name, solo_pos, total_tokens)
+        dyg_s = gather_solo(dy_s, axis_name, solo_pos, total_tokens)
+        xag = rg.ragged_xa(xg, A, meta_solo, block_t=block_t,
+                           interpret=interpret)
+        gdxa = rg.ragged_dxa(dyg_s, B, meta_solo, block_t=block_t,
+                             interpret=interpret).astype(x.dtype)
+        dA = rg.ragged_wgrad(gdxa, xg, meta_solo, block_t=block_t,
+                             interpret=interpret)
+        dB = rg.ragged_wgrad(xag, dyg_s, meta_solo, block_t=block_t,
+                             interpret=interpret)
+        return (dx.astype(x.dtype), dA.T.astype(A.dtype),
+                dB.astype(B.dtype), _int_zeros(ids),
+                np.zeros(scalings.shape, jax.dtypes.float0),
+                _int_zeros(solo_pos))
+
+    f.defvjp(_fwd, _bwd)
+    return f
+
+
+def _tile_jobs_static(rows: Sequence[int], seq_len: int, block_t: int,
+                      order: Optional[Sequence[int]] = None
+                      ) -> Optional[Tuple[int, ...]]:
+    """Static token-tile -> job map of a job-proportional batch (rows
+    per job, segments in *order*).  None when any segment is not whole
+    token tiles — the caller then falls back to the masked path."""
+    order = list(order) if order is not None else list(range(len(rows)))
+    out = []
+    for j in order:
+        toks = rows[j] * seq_len
+        if toks % block_t:
+            return None
+        out.extend([j] * (toks // block_t))
+    return tuple(out)
+
+
+def fused_lora_ragged(x: jax.Array, A: jax.Array, B: jax.Array,
+                      ids: jax.Array, scalings: jax.Array, layout,
+                      *, impl: str = "xla", block_t: int = 128,
+                      equal_segments: bool = False,
+                      slice_rows: Optional[Tuple[int, ...]] = None,
+                      seq_len: int = 1,
+                      nano_order: Optional[Tuple[int, ...]] = None,
+                      solo_rows: Tuple[int, ...] = (),
+                      axis_name=None, solo_pos=None,
+                      total_tokens: int = 0,
+                      ranks: Optional[jax.Array] = None) -> jax.Array:
+    """Fused heterogeneous multi-LoRA over PACKED RAGGED adapters.
+
+    x (T, d_in), A (d_in, R), B (R, d_out) with R = Σ_k r_pad_k
+    (``layout``: core/lora.RankLayout).  ``slice_rows`` is the static
+    per-job row count of this batch when it is job-proportional (the
+    full fused batch, or a job-aware nano slice) — required for the
+    static-tile pallas metadata; ``nano_order`` the segment order
+    inside a nano slice.  ``solo_rows`` is the full (local) batch's
+    per-job rows — the solo wgrad geometry of the sharded path.  The
+    sharded arguments mirror ``fused_lora``.
+    """
+    K = layout.num_jobs
+    if impl in ("ref", "loop"):
+        from repro.core.lora import unpack_dense
+        Af, Bf = unpack_dense(A, B, layout)
+        rk = ranks if ranks is not None \
+            else jnp.asarray(layout.ranks, jnp.int32)
+        fn = (ref_impl.fused_lora_loop if impl == "loop"
+              else ref_impl.fused_lora_ref)
+        return fn(x, Af.astype(x.dtype), Bf.astype(x.dtype), ids, rk,
+                  scalings)
+    if impl == "xla":
+        if axis_name is not None:
+            assert solo_pos is not None and total_tokens > 0
+            return _make_ragged_xla_sharded_fn(
+                layout, bool(equal_segments), axis_name,
+                int(total_tokens))(x, A, B, ids, scalings, solo_pos)
+        return _make_ragged_xla_fn(layout, bool(equal_segments))(
+            x, A, B, ids, scalings)
+    if impl == "pallas":
+        T = x.shape[0]
+        tile_jobs = None
+        if slice_rows is not None and T % block_t == 0:
+            is_slice = tuple(slice_rows) != tuple(solo_rows)
+            tile_jobs = _tile_jobs_static(
+                slice_rows, seq_len, block_t,
+                order=nano_order if is_slice else None)
+        if tile_jobs is None:
+            # no static tile map (e.g. the unsharded contiguous nano
+            # split): densify and take the masked pallas path — the
+            # traced tile_map handles any tile-aligned layout
+            assert axis_name is None, \
+                "sharded ragged pallas needs a job-proportional batch"
+            from repro.core.lora import unpack_dense
+            Af, Bf = unpack_dense(A, B, layout)
+            rk = ranks if ranks is not None \
+                else jnp.asarray(layout.ranks, jnp.int32)
+            return _fused_lora_pallas(x, Af.astype(x.dtype),
+                                      Bf.astype(x.dtype), ids, rk,
+                                      scalings, block_t)
+        meta = RaggedMeta.build(tile_jobs, layout)
+        if axis_name is not None:
+            assert solo_pos is not None and total_tokens > 0
+            solo_tiles = _tile_jobs_static(solo_rows, seq_len, block_t)
+            assert solo_tiles is not None, (solo_rows, seq_len, block_t)
+            meta_solo = RaggedMeta.build(solo_tiles, layout)
+            return _make_ragged_pallas_sharded_fn(
+                meta, meta_solo, int(block_t), axis_name,
+                int(total_tokens))(x, A, B, ids, scalings, solo_pos)
+        return _make_ragged_pallas_fn(meta, int(block_t))(
+            x, A, B, ids, scalings)
+    raise ValueError(f"unknown fused_lora_ragged impl {impl!r}")
 
 
 # ------------------------------------------------------------- dispatch

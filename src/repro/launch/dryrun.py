@@ -78,7 +78,8 @@ def build(arch: str, shape_name: str, multi_pod: bool,
     params = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
     adapters = jax.eval_shape(
         lambda: M.init_adapters(jax.random.PRNGKey(1), cfg,
-                                jnp.asarray(ssm.ranks), r_pad=ssm.r_pad))
+                                jnp.asarray(ssm.ranks),
+                                layout=ssm.layout))
     p_sh = rules.param_shardings(mesh, params)
     a_sh = rules.replicated(mesh, adapters)
 

@@ -13,8 +13,10 @@ models across the 40 dry-run combos.
 
 Frozen backbone params and trainable multi-LoRA adapter params are kept
 in *separate* trees (the memory story of the paper: no optimizer state
-for the backbone).  Adapter leaves are stacked ``(n_cycles, K, d, r_pad)``
-so the same scan slices them per layer.
+for the backbone).  Adapter leaves are packed ragged ``(n_cycles, d, R)``
+/ ``(n_cycles, R, d)`` with per-adapter padded rank segments
+(core/lora.RankLayout) so the same scan slices them per layer and no
+job pays the group-max rank in storage.
 
 Modality frontends (audio conv codec, ViT) are stubs per the assignment:
 ``input_specs`` feeds precomputed frame/patch embeddings.
@@ -27,12 +29,14 @@ from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import (FULL_ATTN, LOCAL_ATTN, RGLRU, SSD,
                                 InputShape, ModelConfig)
-from repro.core.lora import MultiLoRA, init_adapter_pair, pad_rank
+from repro.core.lora import (MultiLoRA, RankLayout, init_adapter_pair,
+                             pad_rank)
 from repro.models.attention import KVCache, attn_block, attn_init
 from repro.models.layers import (cross_entropy, dense_init, dtype_of,
                                  embed_init, rms_norm, rms_norm_init,
@@ -163,7 +167,7 @@ def init_model(key, cfg: ModelConfig) -> dict:
 
 
 def _block_adapter_init(key, cfg: ModelConfig, spec: LayerSpec,
-                        K: int, r_pad: int, ranks) -> dict:
+                        layout: RankLayout) -> dict:
     dims = {
         "q": (cfg.d_model, cfg.q_dim),
         "k": (cfg.d_model, cfg.kv_dim),
@@ -189,18 +193,24 @@ def _block_adapter_init(key, cfg: ModelConfig, spec: LayerSpec,
         # crc32, not hash(): salted str hashing would make adapter init
         # irreproducible across interpreter runs with the same seed
         kt = jax.random.fold_in(key, zlib.crc32(t.encode()) % 2**31)
-        out[t] = init_adapter_pair(kt, K, d_in, d_out, r_pad, ranks)
+        out[t] = init_adapter_pair(kt, layout, d_in, d_out)
     return out
 
 
 def init_adapters(key, cfg: ModelConfig, ranks: jax.Array,
-                  r_pad: Optional[int] = None) -> dict:
+                  r_pad: Optional[int] = None,
+                  layout: Optional[RankLayout] = None) -> dict:
     """Trainable adapter tree mirroring the segment structure.
 
-    ranks: (K,) int32 per-job LoRA ranks; leaves are (n_cycles, K, d, r_pad).
+    ranks: (K,) int32 per-job LoRA ranks.  Leaves are PACKED ragged —
+    (n_cycles, d, R)/(n_cycles, R, d) with R = Σ_k r_pad_k — per the
+    ``layout`` (default: per-adapter ``pad_rank``; ``r_pad`` forces a
+    uniform padded width, the legacy max-rank rule).
     """
-    K = int(ranks.shape[0])
-    r_pad = r_pad or pad_rank(int(jax.device_get(ranks).max()))
+    if layout is None:
+        rk = tuple(int(r) for r in np.asarray(jax.device_get(ranks)))
+        layout = (RankLayout.uniform(rk, r_pad) if r_pad
+                  else RankLayout(rk))
     segs = []
     for i, seg in enumerate(segment_plan(cfg)):
         ki = jax.random.fold_in(key, i)
@@ -210,11 +220,11 @@ def init_adapters(key, cfg: ModelConfig, ranks: jax.Array,
             if seg.scanned:
                 keys = jax.random.split(kj, seg.repeats)
                 seg_tree[str(j)] = jax.vmap(
-                    lambda k: _block_adapter_init(k, cfg, spec, K, r_pad, ranks)
+                    lambda k: _block_adapter_init(k, cfg, spec, layout)
                 )(keys)
             else:
-                seg_tree[str(j)] = _block_adapter_init(
-                    kj, cfg, spec, K, r_pad, ranks)
+                seg_tree[str(j)] = _block_adapter_init(kj, cfg, spec,
+                                                       layout)
         segs.append(seg_tree)
     return {"segments": segs}
 
@@ -222,14 +232,14 @@ def init_adapters(key, cfg: ModelConfig, ranks: jax.Array,
 def adapter_param_count(cfg: ModelConfig, ranks: Sequence[int]) -> int:
     """Exact trainable-parameter count (un-padded ranks)."""
     total = 0
-    dummy = jnp.array(list(ranks), jnp.int32)
+    layout = RankLayout(tuple(int(r) for r in ranks))
     for seg in segment_plan(cfg):
         for spec in seg.specs:
             tree = _block_adapter_init(jax.random.PRNGKey(0), cfg, spec,
-                                       len(ranks), pad_rank(max(ranks)), dummy)
+                                       layout)
             for t, ab in tree.items():
-                d_in = ab["A"].shape[1]
-                d_out = ab["B"].shape[2]
+                d_in = ab["A"].shape[0]
+                d_out = ab["B"].shape[1]
                 total += seg.repeats * sum(r * (d_in + d_out) for r in ranks)
     return total
 

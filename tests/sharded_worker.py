@@ -178,6 +178,50 @@ def nano_regranulation_sharded():
         (r3.aimd._legal, rows_loc)
 
 
+def ragged_mixed_rank_parity():
+    """Strongly mixed ranks (4 vs 64): the ragged sharded VJPs keep the
+    solo trajectory in BOTH grad_sync modes, and the mesh runtime
+    stores the ragged packed layout (8+64 lanes, not 2x64)."""
+    jobs = [LoRAJobSpec("rag-a", rank=4, batch_size=4, seq_len=32),
+            LoRAJobSpec("rag-b", rank=64, batch_size=4, seq_len=32)]
+    mesh = jax.make_mesh((2,), ("data",))
+    solo, sh = run_pair(jobs, mesh, steps=2)
+    assert sh.ssm.layout.r_pads == (8, 64)
+    for leaf in jax.tree.leaves(sh.adapters):
+        assert 72 in leaf.shape[-2:], leaf.shape
+    compare(solo, sh)
+    solo2, sh2 = run_pair(jobs, mesh, grad_sync="psum", steps=2)
+    losses_close(solo2.report.per_job_losses, sh2.report.per_job_losses)
+    state_close(solo2.adapters, sh2.adapters)
+
+
+def ragged_nano_rank_desc_order():
+    """The rank-bucketed nano pipeline ordering (large-rank segments
+    lead each slice) is a pure permutation: same losses and state as
+    job order at the suite tolerance; and the ragged pallas path
+    re-granulates losslessly on the sharded jobwise split."""
+    cfg = cfg_f32()
+    jobs = [LoRAJobSpec("o-a", rank=4, batch_size=4, seq_len=32),
+            LoRAJobSpec("o-b", rank=64, batch_size=4, seq_len=32)]
+    mesh = jax.make_mesh((2,), ("data",))
+    kw = dict(lr=1e-2, impl="xla", block_t=BT, remat=False,
+              chunk_size=2, mesh=mesh, nano_batches=2)
+    r1 = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(7),
+                                 nano_order="job", **kw)
+    r1.run(2)
+    r2 = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(7),
+                                 nano_order="rank_desc", **kw)
+    r2.run(2)
+    losses_close(r1.report.per_job_losses, r2.report.per_job_losses)
+    state_close(r1.adapters, r2.adapters)
+    # ragged pallas: static per-slice tile metadata on the jobwise split
+    kw_p = dict(kw, impl="pallas")
+    p2 = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(7),
+                                 nano_order="rank_desc", **kw_p)
+    p2.run(2)
+    losses_close(r1.report.per_job_losses, p2.report.per_job_losses)
+
+
 def migration_across_meshes():
     """Elastic fuse/unfuse between a single-device runtime and a 4-way
     sharded group keeps the trajectory lossless and the per-job Adam
@@ -380,6 +424,7 @@ if __name__ == "__main__":
     for fn in (parity_k4_hetero_ranks, parity_k1_nondivisible_rows,
                parity_unequal_segments, parity_psum_mode,
                parity_pallas_gather, nano_regranulation_sharded,
+               ragged_mixed_rank_parity, ragged_nano_rank_desc_order,
                migration_across_meshes, gather_solo_bitexact,
                local_mesh_clamps, execution_backend_sharded,
                controller_concurrent_parity,

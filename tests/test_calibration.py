@@ -159,3 +159,50 @@ def test_calibration_error_non_increasing_property():
         assert errs[-1] < errs[0] or errs[0] <= 1e-6
 
     prop()
+
+
+# -------------------------------------------------- rank pricing (§3.3/§10)
+def test_ragged_rank_pricing_property():
+    """The ragged-kernel pricing terms (DESIGN.md §10): for ANY rank
+    composition, (a) ragged never prices a group above the masked
+    max-rank rule, (b) the two agree when every rank pads to the same
+    width, (c) ragged cost is monotone in any member's rank, and (d)
+    the masked penalty grows with rank spread — the over-penalization
+    that used to bias the scheduler against heterogeneous fusions."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    def jobs_of(ranks):
+        return [LoRAJobSpec(f"r{i}-{r}", rank=r, batch_size=2,
+                            seq_len=512) for i, r in enumerate(ranks)]
+
+    def total(ranks, ragged):
+        return tp.group_step_cost(CFG, jobs_of(ranks), CHIPS,
+                                  ragged_kernels=ragged).total
+
+    @settings(max_examples=40, deadline=None)
+    @given(ranks=st.lists(st.integers(1, 64), min_size=1, max_size=8),
+           bump=st.integers(1, 32))
+    def prop(ranks, bump):
+        ragged = total(ranks, True)
+        masked = total(ranks, False)
+        assert ragged <= masked + 1e-12                       # (a)
+        pads = {tp._padded_rank(r) for r in ranks}
+        if len(pads) == 1:
+            assert ragged == pytest.approx(masked, rel=1e-12)  # (b)
+        bumped = list(ranks)
+        bumped[0] = min(64, bumped[0] + bump)
+        assert total(bumped, True) >= ragged - 1e-12           # (c)
+
+    prop()
+
+    # (d) deterministic spread case: the bench layout — masked prices
+    # {4,...,4,64} as if every member were rank-64
+    mixed = jobs_of([4] * 7 + [64])
+    homog = jobs_of([64] * 8)
+    assert tp.group_step_cost(CFG, mixed, CHIPS,
+                              ragged_kernels=False).total == pytest.approx(
+        tp.group_step_cost(CFG, homog, CHIPS,
+                           ragged_kernels=True).total, rel=1e-9)
+    assert tp.group_step_cost(CFG, mixed, CHIPS).total < \
+        tp.group_step_cost(CFG, homog, CHIPS).total

@@ -62,7 +62,7 @@ def test_slice_insert_roundtrip(tiny_cfg, two_jobs):
     flat = slice_job(adapters, 0, rank=4)
     # poison slot 0, re-insert, compare
     poisoned = jax.tree.map(lambda x: x * 0 - 1.0, adapters)
-    restored = insert_job(poisoned, 0, 4, flat)
+    restored = insert_job(poisoned, 0, 4, flat, ssm.layout.r_pads[0])
     want = slice_job(adapters, 0, 4)
     got = slice_job(restored, 0, 4)
     for k in want:
@@ -76,27 +76,30 @@ def test_save_restore_file_roundtrip(tmp_path, tiny_cfg, two_jobs):
     path = str(tmp_path / "job-a.npz")
     save_job(path, "job-a", 0, 4, adapters, opt_state=opt, step=7)
 
-    # restore into index 1 of a FRESH stack (re-fuse at different slot)
+    # restore into slot 1 of a FRESH stack (re-fuse at different offset)
     _, fresh = ssm.init(jax.random.PRNGKey(9))
     fresh_opt = adamw.init(fresh)
-    fresh2, opt2, step = restore_job(path, 1, fresh, fresh_opt)
+    off1, cap1 = ssm.layout.slice_of(1)
+    fresh2, opt2, step = restore_job(path, 1, off1, fresh, fresh_opt, cap1)
     assert step == 7
     want = slice_job(adapters, 0, 4)
-    got = slice_job(fresh2, 1, 4)
+    got = slice_job(fresh2, off1, 4)
     for k in want:
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
                                    atol=1e-6)
 
 
 def test_merge_extract_adapter_pair():
+    from repro.core.lora import RankLayout
     key = jax.random.PRNGKey(0)
     p1 = {"A": jax.random.normal(key, (16, 4)),
           "B": jax.random.normal(key, (4, 8))}
     p2 = {"A": jax.random.normal(key, (16, 8)),
           "B": jax.random.normal(key, (8, 8))}
-    fused = merge_adapter_pair([p1, p2])
-    assert fused["A"].shape == (2, 16, 8)
-    back = extract_adapter(fused, 0, 4)
+    lay = RankLayout((4, 8))
+    fused = merge_adapter_pair([p1, p2], lay)
+    assert fused["A"].shape == (16, 16)          # packed 8 + 8 lanes
+    back = extract_adapter(fused, lay, 0, 4)
     np.testing.assert_allclose(np.asarray(back["A"]), np.asarray(p1["A"]))
     np.testing.assert_allclose(np.asarray(back["B"]), np.asarray(p1["B"]))
 

@@ -20,11 +20,19 @@ from repro.optim.schedule import constant
 BT = 8
 
 
-def _slice_adapter_tree(adapters, k):
-    """Job k's (1, d, r)-stacked view of a fused (K, ...) adapter tree."""
-    def f(leaf):
-        return leaf[..., k:k + 1, :, :]
-    return jax.tree.map(f, adapters)
+def _slice_adapter_tree(adapters, layout, k):
+    """Job k's packed segment view of a ragged fused adapter tree —
+    shaped exactly like a solo (K=1) packed tree when the job's padded
+    width matches its solo padding (the per-adapter rule guarantees
+    it)."""
+    off, rp = layout.slice_of(k)
+
+    def f(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name.endswith("A"):
+            return leaf[..., :, off:off + rp]
+        return leaf[..., off:off + rp, :]
+    return jax.tree_util.tree_map_with_path(f, adapters)
 
 
 def _run_steps(cfg, jobs, params, adapters, batches, nano=1):
@@ -76,13 +84,14 @@ def test_fused_equals_isolated_grads(setup):
     near-zero coordinates ~1e-6 differently than the 1-device leg —
     the tight solo bound stays in force on 1 device."""
     cfg, jobs, params, adapters, batches = setup
+    layout = SharedSuperModel(cfg, jobs, impl="ref", block_t=BT).layout
     atol = 1e-6 if len(jax.devices()) == 1 else 5e-6
     fused_g = _grads(cfg, jobs, params, adapters, batches[0])
     for k, job in enumerate(jobs):
-        solo_ad = _slice_adapter_tree(adapters, k)
+        solo_ad = _slice_adapter_tree(adapters, layout, k)
         solo_b = _job_batch(batches[0], batches[0]["adapter_ids"], k)
         solo_g = _grads(cfg, [job], params, solo_ad, solo_b)
-        want = _slice_adapter_tree(fused_g, k)
+        want = _slice_adapter_tree(fused_g, layout, k)
         jax.tree.map(
             lambda a, b: np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), rtol=2e-4, atol=atol),
@@ -91,10 +100,11 @@ def test_fused_equals_isolated_grads(setup):
 
 def test_fused_equals_isolated(setup):
     cfg, jobs, params, adapters, batches = setup
+    layout = SharedSuperModel(cfg, jobs, impl="ref", block_t=BT).layout
     fused_ad, fused_losses = _run_steps(cfg, jobs, params, adapters, batches)
 
     for k, job in enumerate(jobs):
-        solo_ad = _slice_adapter_tree(adapters, k)
+        solo_ad = _slice_adapter_tree(adapters, layout, k)
         solo_batches = [_job_batch(b, b["adapter_ids"], k) for b in batches]
         got_ad, got_losses = _run_steps(cfg, [job], params, solo_ad,
                                         solo_batches)
@@ -105,7 +115,7 @@ def test_fused_equals_isolated(setup):
         # so float-order (1e-12) grad differences can flip near-zero
         # coordinates by up to 2*lr — bound by that, and require the bulk
         # of coordinates to agree tightly.
-        want = _slice_adapter_tree(fused_ad, k)
+        want = _slice_adapter_tree(fused_ad, layout, k)
         for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got_ad)):
             w, g = np.asarray(w), np.asarray(g)
             np.testing.assert_allclose(w, g, atol=2.5e-2, rtol=0)
@@ -133,6 +143,7 @@ def test_adapter_isolation(setup):
     """Gradient isolation: job A's adapter update must not depend on job
     B's data (change B's batch -> A's update unchanged)."""
     cfg, jobs, params, adapters, batches = setup
+    layout = SharedSuperModel(cfg, jobs, impl="ref", block_t=BT).layout
     ad_ref, _ = _run_steps(cfg, jobs, params, adapters, batches[:1])
 
     b2 = dict(batches[0])
@@ -143,8 +154,8 @@ def test_adapter_isolation(setup):
     b2["labels"] = jnp.asarray(toks)
     ad_alt, _ = _run_steps(cfg, jobs, params, adapters, [b2])
 
-    want = _slice_adapter_tree(ad_ref, 0)
-    got = _slice_adapter_tree(ad_alt, 0)
+    want = _slice_adapter_tree(ad_ref, layout, 0)
+    got = _slice_adapter_tree(ad_alt, layout, 0)
     jax.tree.map(
         lambda a, b: np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7),
@@ -271,6 +282,70 @@ def test_controller_repartition_is_lossless(tiny_cfg, two_jobs):
                                    atol=2.5e-2, rtol=0)
         assert np.mean(np.abs(np.asarray(have.adapter[kk])
                               - np.asarray(want.adapter[kk])) < 1e-5) > 0.97
+
+
+def test_mixed_rank_fusion_is_lossless_without_max_rank_padding(tiny_cfg):
+    """The ragged-layout contract (§3.3 + DESIGN.md §10): a rank-4 job
+    fusing next to a rank-64 job (and later unfusing into a small-max
+    group) must (a) reproduce its solo trajectory and (b) never be
+    re-padded to the group max — storage, optimizer moments and the
+    migrated slices all stay at per-adapter padded widths."""
+    import dataclasses as dc
+    from repro.core.lora import pad_rank
+    from repro.elastic import GroupRuntime, JobTrainState
+    from repro.models import model as M
+
+    cfg = tiny_cfg
+    small = LoRAJobSpec("small", rank=4, batch_size=2, seq_len=32)
+    wide = LoRAJobSpec("wide", rank=64, batch_size=1, seq_len=32)
+    k = 3
+    key = jax.random.PRNGKey(11)
+    params = M.init_model(jax.random.fold_in(key, 0), cfg)
+    k_s, k_w = jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+    kw = dict(lr=1e-2, impl="ref", block_t=BT, remat=False)
+
+    def fresh(spec, kk):
+        return JobTrainState.fresh(spec, cfg, kk,
+                                   r_pad=pad_rank(spec.rank, BT))
+
+    # reference: small trains solo throughout
+    rt_ref = GroupRuntime.from_states(cfg, params, [fresh(small, k_s)], **kw)
+    ref_losses = [l[0] for l in rt_ref.run(3 * k).per_job_losses]
+
+    # elastic: solo k -> fused with the rank-64 job k -> solo again k
+    ra = GroupRuntime.from_states(cfg, params, [fresh(small, k_s)], **kw)
+    ra.run(k)
+    rb = GroupRuntime.from_states(cfg, params, [fresh(wide, k_w)], **kw)
+    rb.run(k)
+    merged = GroupRuntime.from_states(
+        cfg, params, [ra.export("small"), rb.export("wide")], **kw)
+
+    # (b) ragged storage: the fused stack is Σ pad_rank(r_k) wide — the
+    # small member keeps its 8-lane segment next to the 64-lane one
+    # (the masked max-rank layout would be 2*64), and the optimizer
+    # moments have exactly the same ragged shapes
+    lay = merged.ssm.layout
+    assert lay.r_pads == (8, 64) and lay.total == 72
+    for leaf in jax.tree.leaves(merged.adapters):
+        assert 72 in leaf.shape[-2:], leaf.shape
+    for leaf in jax.tree.leaves(merged.opt_state.mu):
+        assert 72 in leaf.shape[-2:], leaf.shape
+    merged.run(k)
+
+    # migrated slices stay un-padded (copy-only migration: the portable
+    # state never inflates to any group's max rank)
+    st = merged.export("small")
+    for kk, v in st.adapter.items():
+        r_axis = v.shape[-1] if kk.endswith("A") else v.shape[-2]
+        assert r_axis == 4, (kk, v.shape)
+    solo_again = GroupRuntime.from_states(cfg, params, [st], **kw)
+    solo_again.run(k)
+
+    # (a) trajectory preserved through the mixed-rank fuse/unfuse
+    got = ([l[0] for l in ra.report.per_job_losses]
+           + [l[0] for l in merged.report.per_job_losses]
+           + [l[0] for l in solo_again.report.per_job_losses])
+    np.testing.assert_allclose(got, ref_losses, rtol=1e-5, atol=1e-6)
 
 
 def test_impls_agree_on_train_step(setup):

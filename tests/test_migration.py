@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint.checkpoint import (insert_job, restore_job, save_job,
                                          slice_job)
-from repro.core.lora import extract_adapter, merge_adapter_pair, pad_rank
+from repro.core.lora import (RankLayout, extract_adapter,
+                             merge_adapter_pair, pad_rank)
 from repro.core.ssm import SharedSuperModel
 from repro.elastic.migrate import (JobTrainState, fuse_states, unfuse_state,
                                    diff_grouping)
@@ -26,7 +27,9 @@ def _tree_allclose(a, b, **kw):
 
 # ------------------------------------------------- merge/extract (pairs)
 def test_merge_extract_heterogeneous_rpad():
-    """Pairs coming from stacks with DIFFERENT padding fuse exactly."""
+    """Pairs coming from stacks with DIFFERENT padding fuse exactly —
+    each into its OWN padded segment of the packed ragged layout, never
+    re-padded to the group max."""
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
     # job 1: rank 4, previously padded to 8; job 2: rank 12, padded to 16
@@ -34,29 +37,36 @@ def test_merge_extract_heterogeneous_rpad():
           "B": jax.random.normal(k1, (4, 24))}
     p2 = {"A": jax.random.normal(k2, (16, 12)),
           "B": jax.random.normal(k2, (12, 24))}
-    p1_padded = {k: v[0] for k, v in
-                 merge_adapter_pair([p1], r_pad=8).items()}
+    lay1 = RankLayout((4,))
+    p1_padded = merge_adapter_pair([p1], lay1)
     assert p1_padded["A"].shape == (16, 8)
 
-    fused = merge_adapter_pair([p1_padded, p2])
-    assert fused["A"].shape == (2, 16, 16)      # pad_rank(12) -> 16
-    np.testing.assert_allclose(np.asarray(extract_adapter(fused, 0, 4)["A"]),
-                               np.asarray(p1["A"]))
-    np.testing.assert_allclose(np.asarray(extract_adapter(fused, 0, 4)["B"]),
-                               np.asarray(p1["B"]))
-    np.testing.assert_allclose(np.asarray(extract_adapter(fused, 1, 12)["B"]),
-                               np.asarray(p2["B"]))
-    # padding lanes of the narrow job are zero in the wide stack
-    assert np.all(np.asarray(fused["A"][0, :, 4:]) == 0)
-    assert np.all(np.asarray(fused["B"][0, 4:, :]) == 0)
+    lay = RankLayout((4, 12))                    # pads (8, 16), R = 24
+    assert lay.r_pads == (8, 16) and lay.total == 24
+    fused = merge_adapter_pair([p1_padded, p2], lay)
+    # ragged: 8 + 16 packed lanes, NOT 2 x 16 max-rank
+    assert fused["A"].shape == (16, 24)
+    np.testing.assert_allclose(
+        np.asarray(extract_adapter(fused, lay, 0, 4)["A"]),
+        np.asarray(p1["A"]))
+    np.testing.assert_allclose(
+        np.asarray(extract_adapter(fused, lay, 0, 4)["B"]),
+        np.asarray(p1["B"]))
+    np.testing.assert_allclose(
+        np.asarray(extract_adapter(fused, lay, 1, 12)["B"]),
+        np.asarray(p2["B"]))
+    # padding lanes of the narrow job are zero in its own segment
+    assert np.all(np.asarray(fused["A"][:, 4:8]) == 0)
+    assert np.all(np.asarray(fused["B"][4:8, :]) == 0)
 
 
 def test_merge_adapter_pair_explicit_rpad_shrinks_zero_lanes():
     p = {"A": jnp.pad(jnp.ones((16, 4)), ((0, 0), (0, 12))),   # r_pad 16
          "B": jnp.pad(jnp.ones((4, 8)), ((0, 12), (0, 0)))}
-    fused = merge_adapter_pair([p], r_pad=8)                   # narrower dst
-    assert fused["A"].shape == (1, 16, 8)
-    np.testing.assert_allclose(np.asarray(fused["A"][0, :, :4]), 1.0)
+    fused = merge_adapter_pair([p], RankLayout((4,)))   # narrower dst (8)
+    assert fused["A"].shape == (16, 8)
+    np.testing.assert_allclose(np.asarray(fused["A"][:, :4]), 1.0)
+    assert np.all(np.asarray(fused["A"][:, 4:]) == 0)
 
 
 # --------------------------------------------- slice/insert (full trees)
@@ -68,8 +78,9 @@ def fused_setup(tiny_cfg, two_jobs):
 
 
 def test_slice_insert_roundtrip_across_rpad(fused_setup, tiny_cfg):
-    """A job slides from an r_pad=8 stack into an r_pad=16 stack and back
-    without losing a single value (moments included)."""
+    """A job slides from its solo 8-lane segment into a mixed group
+    with a 16-lane member and back without losing a single value
+    (moments included) — and without ever widening to the group max."""
     cfg, jobs, ssm, adapters = fused_setup
     opt = adamw.init(adapters, per_job=len(jobs))
     # fake some training: moments become nonzero inside the rank slices
@@ -78,23 +89,28 @@ def test_slice_insert_roundtrip_across_rpad(fused_setup, tiny_cfg):
     opt = AdamWState(jnp.asarray([5, 9], jnp.int32), mu, nu)
 
     job = jobs[0]
-    st = unfuse_state(adapters, opt, 0, job, steps_done=5)
+    st = unfuse_state(adapters, opt, 0, job, layout=ssm.layout,
+                      steps_done=5)
     assert st.opt_step == 5
 
-    # destination: a 3-wide stack with a rank-16 member -> r_pad 16
+    # destination: a 3-wide group with a rank-16 member — the ragged
+    # layout keeps this job's segment at 8 lanes next to the 16-lane one
     import dataclasses
     wide = dataclasses.replace(job, job_id="wide", rank=16)
     partner = dataclasses.replace(job, job_id="partner", rank=2)
     st_w = JobTrainState.fresh(wide, cfg, jax.random.PRNGKey(7), r_pad=16)
     st_p = JobTrainState.fresh(partner, cfg, jax.random.PRNGKey(8), r_pad=8)
-    fused2, opt2 = fuse_states(cfg, [st_w, st, st_p], r_pad=16)
+    lay2 = RankLayout((16, job.rank, 2))
+    assert lay2.r_pads == (16, 8, 8)
+    fused2, opt2 = fuse_states(cfg, [st_w, st, st_p], lay2)
     assert np.asarray(opt2.step).tolist() == [0, 5, 0]
 
-    back = unfuse_state(fused2, opt2, 1, job, steps_done=5)
+    back = unfuse_state(fused2, opt2, 1, job, layout=lay2, steps_done=5)
     _tree_allclose(back.adapter, st.adapter)
     _tree_allclose(back.mu, st.mu)
     _tree_allclose(back.nu, st.nu)
-    re_fused, re_opt = fuse_states(cfg, [back], r_pad=8)
+    lay_solo = RankLayout((job.rank,))
+    re_fused, re_opt = fuse_states(cfg, [back], lay_solo)
     _tree_allclose(slice_job(re_fused, 0, job.rank), st.adapter)
 
 
@@ -104,8 +120,9 @@ def test_insert_job_rejects_overwide_rank(fused_setup):
     wide = {k: np.pad(np.asarray(v),
                       [(0, 0)] * (v.ndim - 1) + [(0, 64)]) if k.endswith("A")
             else v for k, v in sl.items()}
+    off, r_cap = ssm.layout.slice_of(0)
     with pytest.raises(AssertionError):
-        insert_job(adapters, 0, 64, wide)
+        insert_job(adapters, off, 64, wide, r_cap)
 
 
 def test_save_restore_sets_per_job_adam_step(tmp_path, fused_setup):
@@ -113,11 +130,13 @@ def test_save_restore_sets_per_job_adam_step(tmp_path, fused_setup):
     opt = adamw.init(adapters, per_job=len(jobs))
     opt = AdamWState(jnp.asarray([11, 4], jnp.int32), opt.mu, opt.nu)
     path = str(tmp_path / "a.npz")
-    save_job(path, jobs[0].job_id, 0, jobs[0].rank, adapters,
+    off0, _ = ssm.layout.slice_of(0)
+    save_job(path, jobs[0].job_id, off0, jobs[0].rank, adapters,
              opt_state=opt, step=11)
 
     fresh_opt = adamw.init(adapters, per_job=len(jobs))
-    _, opt2, step = restore_job(path, 1, adapters, fresh_opt)
+    off1, cap1 = ssm.layout.slice_of(1)
+    _, opt2, step = restore_job(path, 1, off1, adapters, fresh_opt, cap1)
     assert step == 11
     assert np.asarray(opt2.step).tolist() == [0, 11]
 

@@ -28,6 +28,8 @@ SCENARIOS = [
     "parity_psum_mode",
     "parity_pallas_gather",
     "nano_regranulation_sharded",
+    "ragged_mixed_rank_parity",
+    "ragged_nano_rank_desc_order",
     "migration_across_meshes",
     "gather_solo_bitexact",
     "local_mesh_clamps",
