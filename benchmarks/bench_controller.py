@@ -15,6 +15,12 @@ Two headline numbers, written to ``BENCH_controller.json``:
     execution-backed simulator run (StepRecord.predicted vs
     .predicted_cal) — closing the §4.1 loop must make the oracle
     STRICTLY better on the machine it observes.
+  * ``regroup_stall_x``: per-transition stall (seconds the affected
+    groups are NOT training) for the same live merge executed
+    stop-the-world (fence first, then rebuild + compile inside the
+    pause window) vs overlapped (destination assembled and
+    warm-compiled ahead of the fence; only the state handoff is paid) —
+    the §11 zero-stall control plane headline.
 
 Run as a script to force a virtual device count (like bench_step_loop's
 ``--mesh``): ``python -m benchmarks.bench_controller --devices 8``.
@@ -111,6 +117,68 @@ def _bench_concurrency(steps: int, reps: int) -> dict:
             "partitioned": ctl_conc.partition}
 
 
+def _wait(pred, timeout: float = 600.0) -> None:
+    t0 = time.perf_counter()
+    while not pred():
+        if time.perf_counter() - t0 > timeout:
+            raise TimeoutError("bench wait timed out")
+        time.sleep(0.01)
+
+
+def _bench_regroup(reps: int) -> dict:
+    """Per-transition regroup stall under load (DESIGN.md §11).
+
+    Both modes perform the SAME live merge — two 2-job groups fused
+    into one — while the source chunk pumps keep stepping.
+    Stop-the-world fences first and pays dissolve + rebuild + compile
+    inside the pause window; overlapped assembles the destination from
+    stale snapshots and warm-compiles it BEFORE the fence, so the
+    window only contains the replay-exact state handoff."""
+    evs = {"stop_the_world": [], "overlapped": []}
+    for rep in range(reps):
+        for mode, overlap in (("stop_the_world", False),
+                              ("overlapped", True)):
+            ctl = _build_controller("threads", seed=rep)
+            g0, g1 = list(ctl.group_devices())
+            merged = g0 + g1
+            ctl.begin(10_000)                 # pump far past bench end
+            _wait(lambda: min(ctl.steps_done(j) for j in merged)
+                  >= 2 * CHUNK)               # warm steady-state
+            if overlap:
+                ctl.prewarm_async([merged], chips=[2])
+            ctl.apply_grouping([merged], chips=[2], overlap=overlap)
+            ev = ctl.regroup_log[-1]
+            assert ev.mode == mode, (ev.mode, mode)
+            fence = ev.fence_steps[merged[0]]
+            # run past the handoff so resume cost is real, then stop
+            _wait(lambda: ctl.steps_done(merged[0]) >= fence + CHUNK)
+            ctl.drain()
+            evs[mode].append(ev)
+
+    def mean(mode, field):
+        xs = [getattr(e, field) for e in evs[mode]]
+        return sum(xs) / len(xs)
+
+    fields = ("pause_s", "migrate_s", "compile_s", "resume_s",
+              "assemble_s", "stall_s", "stall_group_s")
+    breakdown = {}
+    for m in evs:
+        breakdown[m] = {f: mean(m, f) for f in fields}
+        breakdown[m]["events"] = len(evs[m])
+    stw = mean("stop_the_world", "stall_s")
+    ov = mean("overlapped", "stall_s")
+    x = stw / max(ov, 1e-9)
+    print(f"  regroup stall: stop-the-world {stw:7.3f}s   "
+          f"overlapped {ov:7.3f}s   x{x:.1f}  ({reps} rep(s), "
+          f"compile inside window: "
+          f"{breakdown['stop_the_world']['compile_s']:.3f}s vs "
+          f"{breakdown['overlapped']['compile_s']:.3f}s)")
+    return {"regroup_stall_stw_s": stw,
+            "regroup_stall_overlap_s": ov,
+            "regroup_stall_x": x,
+            "regroup_breakdown": breakdown}
+
+
 def _bench_calibration(quick: bool) -> dict:
     """Execution-backed simulator run: oracle error before vs after the
     online fit, on the SAME StepRecord stream."""
@@ -154,6 +222,7 @@ def run(quick: bool = False) -> dict:
                       "steps_timed": steps, "reps": reps,
                       "model": "tinyllama-1.1b-reduced", "quick": quick}}
     out.update(_bench_concurrency(steps, reps))
+    out.update(_bench_regroup(1 if quick else 2))
     out.update(_bench_calibration(quick))
     OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
     print(f"  wrote {OUT_PATH}")

@@ -87,10 +87,14 @@ def controller_execute(steps: int = 8):
     print(f"  pool: {len(ctl.devices)} devices, "
           f"partitioning {'ON' if ctl.partition else 'OFF (1-device host)'}"
           f", concurrency={ctl.concurrency}")
+    # budgets long enough that a regroup's one-time stall pays back:
+    # the scheduler prices transitions (DESIGN.md §11) and refuses to
+    # churn jobs whose residual cannot amortize the rebuild
     for i, (rank, batch) in enumerate([(4, 2), (8, 1), (16, 2), (2, 1)]):
         ctl.submit(LoRAJobSpec(f"job-{i}", rank=rank, batch_size=batch,
                                seq_len=64, base_model="tinyllama-1.1b",
-                               steps_budget=4 * steps, max_slowdown=2.0))
+                               steps_budget=1000 * steps,
+                               max_slowdown=2.0))
     ctl.reschedule()
     for gkey, dev in ctl.group_devices().items():
         print(f"  group {list(gkey)} -> devices {list(dev) or '[shared]'}")
@@ -102,15 +106,18 @@ def controller_execute(steps: int = 8):
               f"({d['observations']} obs)")
 
     # a late arrival: reschedule repartitions the pool, live state
-    # migrates losslessly to the new submeshes
+    # migrates losslessly to the new submeshes — the proposal is gated
+    # on the calibrated transition cost vs the jobs' residual benefit
     ctl.submit(LoRAJobSpec("late", rank=8, batch_size=2, seq_len=64,
                            base_model="tinyllama-1.1b",
-                           steps_budget=4 * steps, max_slowdown=2.0))
+                           steps_budget=1000 * steps, max_slowdown=2.0))
     before = ctl.current_grouping()
     ctl.reschedule(pressure=True)            # arrivals queue -> pressure
+    sched = ctl.scheduler("tinyllama-1.1b")
     print(f"  arrival 'late': regrouped {before} -> "
           f"{ctl.current_grouping()} "
-          f"({ctl.regroup_events} live migrations)")
+          f"({ctl.regroup_events} live migrations; priced at "
+          f"{sched.transition_cost():.1f}s per rebuilt chip)")
     ctl.run(steps)
     for jid in sorted(ctl.active_job_ids) + sorted(ctl.finished):
         print(f"  {jid}: {ctl.steps_done(jid)} steps"

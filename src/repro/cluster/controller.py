@@ -1,5 +1,5 @@
 """ClusterController — concurrent multi-group execution on partitioned
-submeshes (DESIGN.md §9).
+submeshes with a zero-stall control plane (DESIGN.md §9, §11).
 
 The executing half of the repo ran one group at a time on a single
 engine; the paper's cluster layer (§3.4, §4.1) runs MANY heterogeneous
@@ -10,28 +10,37 @@ closes that gap:
     submeshes (``launch/mesh.device_shares`` maps the scheduler's chip
     assignments onto real devices, ``partition_mesh`` carves the
     meshes) and runs one ``ElasticEngine`` per submesh;
-  * ``run`` drives every group's chunked step loop concurrently —
-    per-group worker threads by default (XLA:CPU's inline execution
-    gives almost no cross-device overlap from a single dispatching
-    thread; real accelerators can use the single-threaded round-robin
-    ``dispatch_chunk``/``collect_chunk`` mode), so disjoint submeshes
-    compute at the same time;
+  * execution is event-driven: ``begin`` starts one chunk-pump worker
+    per group (cluster/control.GroupWorker — fence-able at chunk
+    boundaries, exceptions surfaced, joins bounded), the control thread
+    owns arrivals / regroup planning / handoff fences, and ``finish``
+    collects; ``run`` is begin+finish.  roundrobin and sequential
+    single-thread modes remain for accelerators and measurement;
+  * regroups overlap with training: the destination group is
+    double-buffered (``prewarm``/``_prepare`` assembles + AOT-warms it
+    from snapshots while the sources keep stepping), and the handoff
+    fences the sources at a chunk boundary, refreshing the prepared
+    runtime with their authoritative exports — replay-exact, so
+    in-flight migration stays bit-lossless.  Every transition logs a
+    ``RegroupEvent`` breakdown (pause/migrate/compile/resume);
   * arrivals and completions trigger ``reschedule`` → pool repartition
-    → cross-mesh migration: members leave their old submesh as portable
-    ``JobTrainState``s (mesh-agnostic — the PR 1/3 lossless path) and
-    re-fuse on the new one; groups whose member set AND device slice
-    are unchanged keep their runtime and compiled step cache.
+    → cross-mesh migration, with transition-cost gating: live groups
+    are passed to the scheduler, which refuses regroups whose measured
+    stall cost exceeds the members' residual-time benefit.
 
 An ``OnlineCalibrator`` (core/throughput) can be attached: every
-measured step feeds it, and the ``AdapterScheduler``s used by
-``reschedule`` price merges with the calibrated constants — the
-oracle → scheduler → execution feedback loop of the paper's online
-design.
+measured step AND every measured regroup stall feeds it, and the
+``AdapterScheduler``s used by ``reschedule`` price merges and
+transitions with the calibrated constants — the oracle → scheduler →
+execution feedback loop of the paper's online design.  The tables
+persist via ``calibration_path`` (warm-start across controller runs).
 """
 from __future__ import annotations
 
+import os
+import threading
+import time
 import zlib
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -41,7 +50,9 @@ from repro.configs.base import ModelConfig
 from repro.core import throughput as tp
 from repro.core.jobs import JobRuntimeState, LoRAJobSpec
 from repro.core.lora import pad_rank
-from repro.core.scheduler import AdapterScheduler, SchedulerConfig
+from repro.core.scheduler import AdapterScheduler, Group, SchedulerConfig
+from repro.cluster.control import (GroupWorker, PreparedGroup, RegroupEvent,
+                                   WorkerFailure, join_workers)
 from repro.elastic.engine import ElasticEngine
 from repro.elastic.migrate import JobTrainState
 from repro.elastic.runtime import GroupRuntime, TrainReport
@@ -108,7 +119,10 @@ class ClusterController:
                  fixed_mesh=None, partition: Optional[bool] = None,
                  sched: Optional[SchedulerConfig] = None,
                  calibrator: Optional[tp.OnlineCalibrator] = None,
+                 calibration_path: Optional[str] = None,
                  concurrency: Optional[str] = None,
+                 transition_aware: bool = True,
+                 join_timeout: Optional[float] = 900.0,
                  impl: str = "xla", block_t: int = 8, lr: float = 1e-3,
                  lr_fn=None, remat: bool = False, nano_batches: int = 1,
                  adaptive_nano: bool = False, aimd_max_n: int = 16,
@@ -128,12 +142,20 @@ class ClusterController:
             if partition is None else bool(partition)
         assert not (self.partition and fixed_mesh is not None)
         self.sched_cfg = sched or SchedulerConfig()
+        # calibration warm-start: a persisted table (OnlineCalibrator
+        # .save) restores this machine's fits before the first step
+        self.calibration_path = calibration_path
+        if calibrator is None and calibration_path is not None \
+                and os.path.exists(calibration_path):
+            calibrator = tp.OnlineCalibrator.load(calibration_path)
         self.calibrator = calibrator
         # threads by default when submeshes are disjoint (the only case
         # with device parallelism to win); sequential otherwise
         self.concurrency = concurrency or \
             ("threads" if self.partition else "sequential")
         assert self.concurrency in ("threads", "roundrobin", "sequential")
+        self.transition_aware = transition_aware
+        self.join_timeout = join_timeout
         self.data_axis = data_axis
         self.block_t = block_t
         self.seed = seed
@@ -148,6 +170,7 @@ class ClusterController:
             data_axis=data_axis, tp_mode=tp_mode,
             checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, seed=seed)
+        self._chunk_size = chunk_size
         self._cfgs: Dict[str, ModelConfig] = {}
         self._backbones: Dict[str, object] = {}
         self._schedulers: Dict[str, AdapterScheduler] = {}
@@ -160,6 +183,15 @@ class ClusterController:
         self._had_runtime: set = set()
         self._regroups: Dict[str, int] = {}
         self.repartitions = 0
+        # ---------------- event-driven control plane (DESIGN.md §11)
+        self._workers: Dict[GroupKey, GroupWorker] = {}
+        self._run_target = 0              # per-job step target of begin()
+        self._run_base: Dict[str, int] = {}   # steps_done at begin()
+        self._run_chunk: Optional[int] = None
+        self._run_log: Optional[Callable[[str], None]] = None
+        self._prepared: List[PreparedGroup] = []
+        self._prewarm_thread: Optional[threading.Thread] = None
+        self.regroup_log: List[RegroupEvent] = []
 
     # ------------------------------------------------------------ registry
     def _cfg(self, base_model: str) -> ModelConfig:
@@ -274,6 +306,19 @@ class ClusterController:
     def current_grouping(self) -> List[GroupKey]:
         return list(self._slots) + [(jid,) for jid in self._parked]
 
+    def _new_engine(self, base: str, mesh) -> ElasticEngine:
+        kw = dict(self._engine_kwargs)
+        kw["mesh"] = mesh
+        kw["grad_sync"] = effective_grad_sync(self._impl, mesh,
+                                              self._grad_sync)
+        return ElasticEngine(self._cfg(base),
+                             params=self._backbone(base), **kw)
+
+    def _count_regroup(self, gkey: GroupKey, base: str):
+        if any(jid in self._had_runtime for jid in gkey):
+            self._regroups[base] = self._regroups.get(base, 0) + 1
+            self._had_runtime.difference_update(gkey)
+
     def _build_slot(self, gkey: GroupKey,
                     device_ids: Optional[Tuple[int, ...]],
                     chips: int) -> GroupRuntime:
@@ -287,12 +332,7 @@ class ClusterController:
         assert all(s.spec.base_model == base for s in states), \
             "groups fuse jobs of one base model"
         mesh = self._submesh(device_ids)
-        kw = dict(self._engine_kwargs)
-        kw["mesh"] = mesh
-        kw["grad_sync"] = effective_grad_sync(self._impl, mesh,
-                                              self._grad_sync)
-        engine = ElasticEngine(self._cfg(base),
-                               params=self._backbone(base), **kw)
+        engine = self._new_engine(base, mesh)
         for st in states:
             engine.admit(st)
         try:
@@ -304,9 +344,7 @@ class ClusterController:
                 if jid in engine.job_ids:
                     self._parked[jid] = engine.remove_job(jid)
             raise
-        if any(jid in self._had_runtime for jid in gkey):
-            self._regroups[base] = self._regroups.get(base, 0) + 1
-            self._had_runtime.difference_update(gkey)
+        self._count_regroup(gkey, base)
         self._slots[gkey] = GroupSlot(base_model=base, engine=engine,
                                       mesh=mesh, device_ids=device_ids,
                                       chips=chips)
@@ -332,23 +370,10 @@ class ClusterController:
         want = chips if chips is not None else len(gkey)
         return self._build_slot(gkey, None, want)
 
-    def apply_grouping(self, groups: Sequence[Sequence[str]],
-                       chips: Optional[Sequence[int]] = None
-                       ) -> Dict[str, list]:
-        """Install a full grouping decision: repartition the pool into
-        per-group submeshes honoring the scheduler's chip assignments
-        and migrate whoever moved.  Groups keeping both their member set
-        and their device slice keep their runtime (compiled steps
-        included)."""
-        groups = [tuple(g) for g in groups]
-        chips = list(chips) if chips is not None \
-            else [len(g) for g in groups]
-        assert len(chips) == len(groups)
-        covered = {j for g in groups for j in g}
-        assert len(covered) == sum(len(g) for g in groups), \
-            "grouping assigns a job twice"
-        # deterministic pool layout: sorted by (base model, members) so
-        # stable compositions keep stable device slices across calls
+    def _plan(self, groups: Sequence[GroupKey], chips: Sequence[int]
+              ) -> Dict[GroupKey, Tuple[Tuple[int, ...], int]]:
+        """Deterministic pool layout: sorted by (base model, members) so
+        stable compositions keep stable device slices across calls."""
         order = sorted(range(len(groups)),
                        key=lambda i: (self._specs[groups[i][0]].base_model,
                                       groups[i]))
@@ -361,6 +386,132 @@ class ClusterController:
             n = sizes[pos] if sizes else 0
             plan[groups[i]] = (tuple(range(cur, cur + n)), chips[i])
             cur += n
+        return plan
+
+    # -------------------------------------------- double-buffered prepare
+    def _snapshot_state(self, job_id: str) -> JobTrainState:
+        """Consistent non-destructive snapshot of a job, fencing its
+        group's pump (if live) so the export sees no in-flight chunk.
+        The brief fence is the only synchronous touch on the source —
+        the expensive assembly work downstream runs while it steps."""
+        gkey = self._home(job_id)
+        w = self._workers.get(gkey) if gkey is not None else None
+        if w is not None and w.alive:
+            w.fence(self.join_timeout)
+            try:
+                return self.job_state(job_id)
+            finally:
+                w.resume()
+        return self.job_state(job_id)
+
+    def _prepare(self, gkey: GroupKey, device_ids: Tuple[int, ...],
+                 chips: int) -> PreparedGroup:
+        """Assemble the double-buffered destination for *gkey*: snapshot
+        members, fuse on the destination submesh, AOT-warm the compiled
+        step.  The sources keep stepping throughout; the stale snapshot
+        is only shape/compile substrate — ``refresh_member`` swaps in
+        the authoritative states at handoff."""
+        t0 = time.perf_counter()
+        states = [self._snapshot_state(jid) for jid in gkey]
+        base = states[0].spec.base_model
+        mesh = self._submesh(device_ids)
+        engine = self._new_engine(base, mesh)
+        for st in states:
+            engine.admit(st)
+        rt = engine.ensure_group(gkey)
+        compile_s = rt.warm([min(self._chunk_size,
+                                 max(1, self._run_target))
+                             if self._run_target else self._chunk_size])
+        return PreparedGroup(
+            gkey=gkey, base_model=base, engine=engine, runtime=rt,
+            device_ids=tuple(device_ids), chips=chips, mesh=mesh,
+            snapshot_steps={s.spec.job_id: s.steps_done for s in states},
+            assemble_s=time.perf_counter() - t0, compile_s=compile_s)
+
+    def _take_prepared(self, gkey: GroupKey,
+                       device_ids: Tuple[int, ...]
+                       ) -> Optional[PreparedGroup]:
+        for i, p in enumerate(self._prepared):
+            if p.matches(gkey, device_ids):
+                return self._prepared.pop(i)
+        return None
+
+    def prewarm(self, groups: Sequence[Sequence[str]],
+                chips: Optional[Sequence[int]] = None) -> int:
+        """Assemble + AOT-warm every group of a grouping decision that
+        would need a (re)build, ahead of ``apply_grouping`` — the
+        compile-cache half of the zero-stall transition.  Returns the
+        number of groups prepared.  Safe to call while pumps run."""
+        groups = [tuple(g) for g in groups]
+        chips = list(chips) if chips is not None \
+            else [len(g) for g in groups]
+        plan = self._plan(groups, chips)
+        n = 0
+        for g in groups:
+            dev, c = plan[g]
+            live = next((k for k in self._slots
+                         if frozenset(k) == frozenset(g)), None)
+            if live is not None and self._slots[live].device_ids == dev:
+                continue                      # kept verbatim: no build
+            if any(p.matches(g, dev) for p in self._prepared):
+                continue
+            self._prepared.append(self._prepare(g, dev, c))
+            n += 1
+        return n
+
+    def prewarm_async(self, groups: Sequence[Sequence[str]],
+                      chips: Optional[Sequence[int]] = None
+                      ) -> threading.Thread:
+        """``prewarm`` on a background thread — ahead-of-time
+        compilation of the predicted next grouping while every pump
+        keeps training.  ``apply_grouping`` joins it before consuming."""
+        groups = [tuple(g) for g in groups]
+        t = threading.Thread(target=self.prewarm, args=(groups, chips),
+                             daemon=True, name="prewarm")
+        self._prewarm_thread = t
+        t.start()
+        return t
+
+    def prewarm_predicted(self, pressure: bool = False,
+                          node_of: Optional[Callable[[str], int]] = None
+                          ) -> threading.Thread:
+        """Predict the next grouping (Algorithm 1, transition-gated) and
+        warm it in the background."""
+        groups, weights = self.predict_grouping(pressure=pressure,
+                                                node_of=node_of)
+        return self.prewarm_async(groups, weights)
+
+    # --------------------------------------------------------- transitions
+    def apply_grouping(self, groups: Sequence[Sequence[str]],
+                       chips: Optional[Sequence[int]] = None,
+                       overlap: Optional[bool] = None
+                       ) -> Dict[str, list]:
+        """Install a full grouping decision: repartition the pool into
+        per-group submeshes honoring the scheduler's chip assignments
+        and migrate whoever moved.  Groups keeping both their member set
+        and their device slice keep their runtime (compiled steps
+        included).
+
+        With pumps active (``begin``), the transition is OVERLAPPED by
+        default: destinations are assembled + AOT-warmed (or consumed
+        from ``prewarm``) while the sources keep stepping; only the
+        fence → export → refresh → restart window stalls training.
+        ``overlap=False`` forces the stop-the-world order (fence first,
+        then build + compile inside the stall window) — the recorded
+        baseline the bench compares against.  Every transition appends
+        a ``RegroupEvent`` and feeds the calibrator's regroup-cost
+        term."""
+        groups = [tuple(g) for g in groups]
+        chips = list(chips) if chips is not None \
+            else [len(g) for g in groups]
+        assert len(chips) == len(groups)
+        covered = {j for g in groups for j in g}
+        assert len(covered) == sum(len(g) for g in groups), \
+            "grouping assigns a job twice"
+        if self._prewarm_thread is not None \
+                and self._prewarm_thread.is_alive():
+            self._prewarm_thread.join(self.join_timeout)
+        plan = self._plan(groups, chips)
 
         keep, build = [], []
         planned_sets = {frozenset(g): g for g in groups}
@@ -370,23 +521,105 @@ class ClusterController:
                     self._slots[gkey].device_ids == plan[tgt][0]:
                 keep.append(gkey)
                 self._slots[gkey].chips = plan[tgt][1]
-            else:
-                self._dissolve(gkey)
         kept_sets = {frozenset(g) for g in keep}
+        dissolve = [g for g in list(self._slots) if g not in keep]
         for g in groups:
             if frozenset(g) not in kept_sets:
                 build.append(g)
-                self._build_slot(g, *plan[g])
+        if not build and not dissolve:
+            return {"keep": keep, "build": build}
+
+        running = any(w.alive for w in self._workers.values())
+        overlap = running if overlap is None else bool(overlap)
+        ev = RegroupEvent(
+            mode=("overlapped" if overlap else "stop_the_world")
+            if running else "offline",
+            groups_built=len(build), groups_dissolved=len(dissolve),
+            jobs_moved=sum(len(g) for g in build))
+
+        # ---- assembly (overlapped: sources keep stepping through this)
+        prepared: Dict[GroupKey, PreparedGroup] = {}
+        if running and overlap:
+            t0 = time.perf_counter()
+            for g in build:
+                p = self._take_prepared(g, plan[g][0])
+                if p is None:
+                    p = self._prepare(g, *plan[g])
+                prepared[g] = p
+            ev.assemble_s = time.perf_counter() - t0
+
+        # ---- fence + dissolve (the stall window opens)
+        t_pause = time.perf_counter()
+        affected = [(g, self._workers[g]) for g in dissolve
+                    if g in self._workers]
+        for g, w in affected:
+            w.fence(self.join_timeout)
+        for g, w in affected:
+            w.stop()
+            w.join(self.join_timeout)
+            self._workers.pop(g, None)
+        for g in dissolve:
+            for jid in g:
+                ev.fence_steps[jid] = self.steps_done(jid)
+            self._dissolve(g)
+        ev.pause_s = time.perf_counter() - t_pause
+
+        # ---- migrate/install (+ compile when not overlapped).  A
+        # prepared destination is consumed in EVERY mode — it is a
+        # compile/assembly cache keyed on (members, device slice), valid
+        # regardless of how the stall window is ordered.
+        t_mig = time.perf_counter()
+        for g in build:
+            p = prepared.get(g) or self._take_prepared(g, plan[g][0])
+            if p is not None:
+                for jid in g:
+                    p.runtime.refresh_member(self._claim(jid))
+                self._count_regroup(g, p.base_model)
+                self._slots[g] = GroupSlot(
+                    base_model=p.base_model, engine=p.engine,
+                    mesh=p.mesh, device_ids=p.device_ids, chips=p.chips)
+            else:
+                rt = self._build_slot(g, *plan[g])
+                if running:      # stop-the-world: compile in the window
+                    ev.compile_s += rt.warm(
+                        [min(self._chunk_size,
+                             max(1, self._run_target))
+                         if self._run_target else self._chunk_size])
+        ev.migrate_s = time.perf_counter() - t_mig - ev.compile_s
+
+        # ---- resume (restart pumps for the rebuilt groups)
+        t_res = time.perf_counter()
+        if running:
+            for g in build:
+                self._spawn_worker(g)
+        ev.resume_s = time.perf_counter() - t_res
         if build:
             self.repartitions += 1
+        self.regroup_log.append(ev)
+        if running and self.calibrator is not None and build:
+            # calibrate the transition-cost term with the measured
+            # per-group stall, keyed like the step-time buckets: by the
+            # EXECUTABLE config's name (reduced variants price as
+            # themselves, not as their full-size parent)
+            per_group = ev.stall_s
+            for g in build:
+                base = self._slots[g].base_model if g in self._slots \
+                    else self._specs[g[0]].base_model
+                self.calibrator.observe_regroup(self._cfg(base).name,
+                                                per_group)
         return {"keep": keep, "build": build}
 
-    def reschedule(self, pressure: bool = False,
-                   node_of: Optional[Callable[[str], int]] = None
-                   ) -> List[GroupKey]:
-        """Arrival/completion hook: re-run Algorithm 1 per base model
-        over the active jobs (calibrated oracle when attached) and
-        repartition the pool to the new grouping."""
+    def predict_grouping(self, pressure: bool = False,
+                         node_of: Optional[Callable[[str], int]] = None
+                         ) -> Tuple[List[GroupKey], List[int]]:
+        """Run Algorithm 1 per base model over the active jobs without
+        applying the result (the planning half of ``reschedule`` — also
+        what ``prewarm_predicted`` warms ahead of time).
+
+        When ``transition_aware``, the live groups are handed to the
+        scheduler so it prices each proposed rebuild against the
+        calibrated regroup cost and keeps the status quo when the
+        payback horizon exceeds the members' residual time."""
         by_model: Dict[str, List[str]] = {}
         for jid in self.active_job_ids:
             by_model.setdefault(self._specs[jid].base_model, []).append(jid)
@@ -409,26 +642,111 @@ class ClusterController:
                     s.current_step_time = self._slots[gkey].runtime(
                         gkey).report.measured_step_time()
                 jrs.append(s)
+            current = None
+            if self.transition_aware:
+                jrs_by_id = {s.spec.job_id: s for s in jrs}
+                current = [
+                    Group([jrs_by_id[j] for j in gkey], slot.chips)
+                    for gkey, slot in self._slots.items()
+                    if slot.base_model == base
+                    and all(j in jrs_by_id for j in gkey)]
             for g in sched.schedule(jrs, node_of=node_of,
-                                    pressure=pressure):
+                                    pressure=pressure,
+                                    current_groups=current):
                 groups.append(g.job_ids)
                 weights.append(g.chips)
+        return groups, weights
+
+    def reschedule(self, pressure: bool = False,
+                   node_of: Optional[Callable[[str], int]] = None
+                   ) -> List[GroupKey]:
+        """Arrival/completion hook: re-run Algorithm 1 per base model
+        over the active jobs (calibrated oracle when attached) and
+        repartition the pool to the new grouping."""
+        groups, weights = self.predict_grouping(pressure=pressure,
+                                                node_of=node_of)
         self.apply_grouping(groups, chips=weights)
         return groups
 
     # ----------------------------------------------------------- execution
+    def _spawn_worker(self, gkey: GroupKey):
+        """Start a chunk pump for *gkey* with the remaining per-job
+        budget of the active run (a group rebuilt mid-run resumes at
+        the largest member deficit, so nobody under-trains)."""
+        slot = self._slots[gkey]
+        rt = slot.runtime(gkey)
+        for jid in gkey:
+            self._run_base.setdefault(jid, self.steps_done(jid))
+        remaining = max(
+            max(0, self._run_target
+                - (self.steps_done(jid) - self._run_base[jid]))
+            for jid in gkey)
+        w = GroupWorker(gkey, rt, remaining, self._run_chunk,
+                        self._run_log)
+        self._workers[gkey] = w
+        w.start()      # remaining==0 exits at once; join stays legal
+
+    def begin(self, steps: int, chunk_size: Optional[int] = None,
+              log: Optional[Callable[[str], None]] = None):
+        """Start the event-driven run: one chunk pump per live group.
+        The control thread is then free to plan/prewarm/apply regroups
+        while every group trains; ``finish`` joins and reports."""
+        assert not self._workers, "a run is already active"
+        for jid in list(self._parked):        # stragglers train solo
+            self.ensure_group((jid,))
+        self._run_target = int(steps)
+        self._run_chunk = chunk_size
+        self._run_log = log
+        self._run_base = {jid: self.steps_done(jid)
+                          for jid in self.active_job_ids}
+        for gkey in list(self._slots):
+            self._spawn_worker(gkey)
+
+    def finish(self, timeout: Optional[float] = None
+               ) -> Dict[GroupKey, TrainReport]:
+        """Join every pump (bounded — ``join_timeout`` default), surface
+        worker failures, feed the calibrator, retire finished jobs."""
+        try:
+            join_workers(self._workers,
+                         self.join_timeout if timeout is None else timeout)
+        finally:
+            live = {g: w for g, w in self._workers.items()
+                    if g in self._slots}
+            self._workers = {}
+            self._run_target = 0
+            self._run_base = {}
+        reports = {g: self._slots[g].runtime(g).report for g in live}
+        self._feed_calibrator(reports)
+        self.retire_finished()
+        return reports
+
+    def drain(self, timeout: Optional[float] = None
+              ) -> Dict[GroupKey, TrainReport]:
+        """End the active run at each pump's next chunk boundary WITHOUT
+        waiting for the step targets — the early exit for benches and
+        arrival-driven rescheduling loops.  Joins bounded, surfaces
+        worker failures, feeds the calibrator, retires finished jobs."""
+        t = self.join_timeout if timeout is None else timeout
+        for w in self._workers.values():
+            if w.alive:
+                w.fence(t)
+        for w in self._workers.values():
+            w.stop()
+        return self.finish(timeout=t)
+
     def run(self, steps: int, chunk_size: Optional[int] = None,
             log: Optional[Callable[[str], None]] = None
             ) -> Dict[GroupKey, TrainReport]:
         """Advance every live group by *steps* — concurrently.
 
-        threads (default under partitioning): one worker per group
-        drives its chunked ``run`` loop; disjoint submeshes execute in
-        parallel.  roundrobin: a single thread keeps one pending chunk
-        per group via ``dispatch_chunk``/``collect_chunk`` (pure JAX
-        async dispatch — the right mode on accelerators where dispatch
-        is cheap and truly asynchronous).  sequential: groups run one
-        after another (the measurement-instrument mode)."""
+        threads (default under partitioning): ``begin`` + ``finish`` —
+        one fence-able chunk pump per group; disjoint submeshes execute
+        in parallel and regroups can overlap the run.  roundrobin: a
+        single thread keeps one pending chunk per group via
+        ``dispatch_chunk``/``collect_chunk`` (pure JAX async dispatch —
+        the right mode on accelerators where dispatch is cheap and
+        truly asynchronous).  sequential: groups run one after another
+        (the measurement-instrument mode)."""
         for jid in list(self._parked):        # stragglers train solo
             self.ensure_group((jid,))
         rts = {gkey: slot.runtime(gkey)
@@ -436,34 +754,39 @@ class ClusterController:
         if not rts or steps <= 0:
             return {}
         if self.concurrency == "threads" and len(rts) > 1:
-            with ThreadPoolExecutor(max_workers=len(rts)) as ex:
-                futs = {g: ex.submit(rt.run, steps, log, chunk_size)
-                        for g, rt in rts.items()}
-                reports = {g: f.result() for g, f in futs.items()}
-        elif self.concurrency == "roundrobin" and len(rts) > 1:
+            self.begin(steps, chunk_size, log)
+            return self.finish()
+        if self.concurrency == "roundrobin" and len(rts) > 1:
             reports = self._run_roundrobin(rts, steps, chunk_size, log)
         else:
             reports = {g: rt.run(steps, log=log, chunk_size=chunk_size)
                        for g, rt in rts.items()}
-        if self.calibrator is not None:
-            # close the loop: every run feeds measured step times back,
-            # so the NEXT reschedule prices with this machine's
-            # effective constants (min-of-window discards compile
-            # outliers after a rebuild).  Bucket by the device count
-            # the group ACTUALLY ran on, not the scheduler's abstract
-            # assignment — a group assigned 8 chips but carved a
-            # 4-device submesh measures 4-device physics, and mixing
-            # widths in one bucket would make the fit oscillate;
-            # unmeasured widths borrow the nearest same-K bucket.
-            for gkey, rt in rts.items():
-                slot = self._slots.get(gkey)
-                measured = rt.report.measured_step_time()
-                if slot is not None and measured > 0:
-                    self.calibrator.observe(
-                        self._cfg(slot.base_model), rt.specs,
-                        max(len(slot.device_ids), 1), measured)
+        self._feed_calibrator(reports)
         self.retire_finished()
         return reports
+
+    def _feed_calibrator(self, reports: Dict[GroupKey, TrainReport]):
+        if self.calibrator is None:
+            return
+        # close the loop: every run feeds measured step times back,
+        # so the NEXT reschedule prices with this machine's
+        # effective constants (min-of-window discards compile
+        # outliers after a rebuild).  Bucket by the device count
+        # the group ACTUALLY ran on, not the scheduler's abstract
+        # assignment — a group assigned 8 chips but carved a
+        # 4-device submesh measures 4-device physics, and mixing
+        # widths in one bucket would make the fit oscillate;
+        # unmeasured widths borrow the nearest same-K bucket.
+        for gkey in reports:
+            slot = self._slots.get(gkey)
+            if slot is None:
+                continue
+            rt = slot.runtime(gkey)
+            measured = rt.report.measured_step_time()
+            if measured > 0:
+                self.calibrator.observe(
+                    self._cfg(slot.base_model), rt.specs,
+                    max(len(slot.device_ids), 1), measured)
 
     def _run_roundrobin(self, rts: Dict[GroupKey, GroupRuntime],
                         steps: int, chunk_size: Optional[int], log
@@ -522,6 +845,35 @@ class ClusterController:
     @property
     def regroup_events(self) -> int:
         return sum(self._regroups.values())
+
+    def regroup_stats(self) -> Dict[str, Dict[str, float]]:
+        """Mean lifecycle breakdown per transition mode — the
+        instrumentation surface the bench emits."""
+        out: Dict[str, Dict[str, float]] = {}
+        by_mode: Dict[str, List[RegroupEvent]] = {}
+        for ev in self.regroup_log:
+            by_mode.setdefault(ev.mode, []).append(ev)
+        for mode, evs in by_mode.items():
+            n = len(evs)
+            out[mode] = {
+                "events": n,
+                "pause_s": sum(e.pause_s for e in evs) / n,
+                "migrate_s": sum(e.migrate_s for e in evs) / n,
+                "compile_s": sum(e.compile_s for e in evs) / n,
+                "resume_s": sum(e.resume_s for e in evs) / n,
+                "assemble_s": sum(e.assemble_s for e in evs) / n,
+                "stall_s": sum(e.stall_s for e in evs) / n,
+                "stall_group_s": sum(e.stall_group_s for e in evs) / n,
+            }
+        return out
+
+    def save_calibration(self, path: Optional[str] = None):
+        """Persist the attached calibrator's tables (warm-start for the
+        next controller run)."""
+        path = path or self.calibration_path
+        assert self.calibrator is not None and path, \
+            "no calibrator/path to save"
+        self.calibrator.save(path)
 
     def model_view(self, base_model: str) -> ModelView:
         return ModelView(self, base_model)

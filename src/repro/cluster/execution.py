@@ -27,6 +27,7 @@ Layer map: DESIGN.md §6 (execution-backed mode), §9 (controller).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -101,6 +102,7 @@ class ExecutionBackend:
                  aimd_max_n: int = 16, nano_order: str = "job",
                  devices: Optional[Sequence] = None,
                  calibrator: Optional[tp.OnlineCalibrator] = None,
+                 calibration_path: Optional[str] = None,
                  hw: tp.HardwareSpec = tp.V5E,
                  seed: int = 0):
         assert steps_per_measure >= 2, \
@@ -120,6 +122,12 @@ class ExecutionBackend:
                                    remat=remat, seed=seed, mesh=mesh,
                                    data_axis=data_axis,
                                    grad_sync=grad_sync, tp_mode=tp_mode)
+        # warm-start: a table persisted by a previous backend run
+        # restores this machine's fits before the first measurement
+        if calibrator is None and calibration_path is not None \
+                and os.path.exists(calibration_path):
+            calibrator = tp.OnlineCalibrator.load(calibration_path)
+        self.calibration_path = calibration_path
         self.calibrator = calibrator if calibrator is not None \
             else tp.OnlineCalibrator(hw)
         # controller modes: an explicit device pool partitions into
@@ -130,6 +138,7 @@ class ExecutionBackend:
             self._cfg_of, devices=devices, fixed_mesh=mesh,
             partition=devices is not None and mesh is None,
             calibrator=self.calibrator,
+            calibration_path=calibration_path,
             concurrency="sequential", impl=impl, block_t=block_t, lr=lr,
             remat=remat, chunk_size=1, data_axis=data_axis,
             grad_sync=grad_sync, tp_mode=tp_mode,
@@ -146,6 +155,11 @@ class ExecutionBackend:
     def regroup_events(self) -> int:
         """Live-state migrations executed across all groups."""
         return self.controller.regroup_events
+
+    def save_calibration(self, path: Optional[str] = None):
+        """Persist the fitted tables (step-time buckets + regroup-cost
+        terms) so the next backend run on this machine warm-starts."""
+        self.calibrator.save(path or self.calibration_path)
 
     def engine(self, base_model: str) -> Optional[ModelView]:
         """Per-model aggregate view (job ids, finished, step counts)."""

@@ -102,10 +102,19 @@ GroupPolicy = Callable[[List[JobRuntimeState], ClusterConfig, bool],
 
 def tlora_policy(cfg_of: Callable[[str], ModelConfig],
                  kernel_fused: bool = True,
-                 calibrator=None) -> GroupPolicy:
+                 calibrator=None,
+                 transition_aware: bool = False) -> GroupPolicy:
     """The paper's Adapter Scheduler (Algorithm 1) as a policy.  With a
     *calibrator* the grouping decisions price against the online-fitted
-    effective constants instead of the static HardwareSpec."""
+    effective constants instead of the static HardwareSpec.
+
+    With ``transition_aware`` the policy is stateful: it remembers its
+    last grouping per base model and hands the still-intact groups back
+    to the scheduler as the status quo, so a regroup whose calibrated
+    stall cost exceeds the members' residual-time benefit is not
+    proposed (DESIGN.md §11) — until the benefit horizon grows."""
+    last: Dict[str, List[Tuple[str, ...]]] = {}
+
     def policy(jobs: List[JobRuntimeState], cc: ClusterConfig,
                pressure: bool = False) -> List[Group]:
         groups: List[Group] = []
@@ -120,8 +129,21 @@ def tlora_policy(cfg_of: Callable[[str], ModelConfig],
                                 ragged_kernels=cc.ragged_kernels),
                 calibrator=calibrator)
             node_of = _node_assigner(js, cc)
-            groups.extend(sched.schedule(js, node_of=node_of,
-                                         pressure=pressure))
+            current = None
+            if transition_aware and model in last:
+                by_id = {j.spec.job_id: j for j in js}
+                # only groups whose members ALL survive are a viable
+                # status quo — a departed member forces a rebuild anyway
+                current = [Group([by_id[j] for j in g],
+                                 sum(max(by_id[j].spec.gpus, 1)
+                                     for j in g))
+                           for g in last[model]
+                           if all(j in by_id for j in g)]
+            out = sched.schedule(js, node_of=node_of, pressure=pressure,
+                                 current_groups=current)
+            if transition_aware:
+                last[model] = [tuple(g.job_ids) for g in out]
+            groups.extend(out)
         return groups
     return policy
 

@@ -102,6 +102,103 @@ class AdapterScheduler:
         return Group(a.jobs + b.jobs, a.chips + b.chips,
                      spans_nodes=a.spans_nodes or b.spans_nodes or spans)
 
+    def _group_time(self, g: Group) -> float:
+        return tp.group_step_cost(self.cfg, g.specs, g.chips,
+                                  hw=self.hw_for(g.chips, len(g.jobs)),
+                                  spans_nodes=g.spans_nodes,
+                                  kernel_fused=self.sched.kernel_fused,
+                                  ragged_kernels=self.sched.ragged_kernels
+                                  ).total
+
+    # ------------------------------------------------- transition pricing
+    def transition_cost(self) -> float:
+        """One-time cost (s) of rebuilding a live group: pause + migrate
+        + compile + resume.  Measured stalls via the calibrator when the
+        control plane has observed any; ``hw.regroup_overhead``
+        otherwise."""
+        if self.calibrator is not None:
+            return self.calibrator.regroup_cost(self.cfg.name)
+        return self.sched.hw.regroup_overhead
+
+    def filter_transitions(self, proposed: List[Group],
+                           current: Sequence[Group]) -> List[Group]:
+        """Reject regroups whose payback horizon exceeds the affected
+        jobs' residual time.
+
+        *current* is the set of LIVE groups (training state that a
+        rebuild would interrupt).  Proposed groups are clustered into
+        connected components with the current groups they touch; a
+        component whose projected residual-time saving does not cover
+        its transition cost keeps the status quo (surviving current
+        groups + singletons for members those don't cover).  Components
+        of entirely new jobs, and proposed groups identical to a live
+        group (runtime + compiled step reused), are free.
+        """
+        if not current or not proposed:
+            return list(proposed)
+        cur_sets = {frozenset(g.job_ids) for g in current}
+        home = {jid: i for i, g in enumerate(proposed) for jid in g.job_ids}
+        parent = list(range(len(proposed)))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        for cg in current:
+            idxs = sorted({home[jid] for jid in cg.job_ids if jid in home})
+            for a, b in zip(idxs, idxs[1:]):
+                parent[find(a)] = find(b)
+        comps: Dict[int, List[Group]] = {}
+        for i, g in enumerate(proposed):
+            comps.setdefault(find(i), []).append(g)
+        cur_by_root: Dict[int, List[Group]] = {}
+        for cg in current:
+            idxs = {home[jid] for jid in cg.job_ids if jid in home}
+            if idxs:
+                cur_by_root.setdefault(find(next(iter(idxs))), []).append(cg)
+
+        def horizon(gs: Sequence[Group]) -> float:
+            # chip-seconds to drain the residual work: each group holds
+            # its chips until the slowest member's budget runs out.
+            # This is the quantity elastic sharing improves — a merge
+            # that frees chips at equal step time shows its saving here,
+            # while job-wall-seconds would hide it.
+            return sum(max((max(j.spec.steps_budget - j.steps_done, 0)
+                            for j in g.jobs), default=0)
+                       * self._group_time(g) * max(g.chips, 1)
+                       for g in gs)
+
+        out: List[Group] = []
+        cost1 = self.transition_cost()
+        for root, news in comps.items():
+            olds = cur_by_root.get(root, [])
+            rebuilt = [g for g in news
+                       if frozenset(g.job_ids) not in cur_sets]
+            if not olds or not rebuilt:
+                out.extend(news)
+                continue
+            # status quo: current groups whose members all survive, plus
+            # singletons for everyone else in the component
+            jobs_by_id = {j.spec.job_id: j for g in news for j in g.jobs}
+            quo, placed = [], set()
+            for cg in olds:
+                if all(jid in jobs_by_id for jid in cg.job_ids):
+                    quo.append(Group([jobs_by_id[jid]
+                                      for jid in cg.job_ids],
+                                     cg.chips, cg.spans_nodes))
+                    placed.update(cg.job_ids)
+            for g in news:
+                quo.extend(Group([j], max(j.spec.gpus, 1)) for j in g.jobs
+                           if j.spec.job_id not in placed)
+            benefit = horizon(quo) - horizon(news)
+            # cost in chip-seconds as well: every rebuilt group's chips
+            # sit idle for one measured stall window
+            cost = cost1 * sum(max(g.chips, 1) for g in rebuilt)
+            out.extend(news if benefit > cost else quo)
+        return out
+
     def _feasible(self, g: Group) -> bool:
         if len(g.jobs) > self.sched.max_group:
             return False
@@ -183,11 +280,18 @@ class AdapterScheduler:
     # ---------------------------------------------------------- schedule
     def schedule(self, jobs: Sequence[JobRuntimeState],
                  node_of: Optional[Callable[[str], int]] = None,
-                 pressure: bool = False) -> List[Group]:
+                 pressure: bool = False,
+                 current_groups: Optional[Sequence[Group]] = None
+                 ) -> List[Group]:
         """One scheduling round: runnable jobs -> final groups.
 
         pressure: jobs are queueing — shrink group allocations to free
-        chips (elastic contribution)."""
+        chips (elastic contribution).
+
+        current_groups: the LIVE groups this round would transition away
+        from — when given, proposals are gated on transition payback
+        (``filter_transitions``), so a regroup whose one-time cost
+        exceeds its residual-time benefit is never emitted."""
         singles = [Group([j], max(j.spec.gpus, 1)) for j in jobs]
         node_of = node_of or (lambda job_id: 0)
 
@@ -204,6 +308,8 @@ class AdapterScheduler:
         if pressure:
             finals = [self.shrink(g) if len(g.jobs) > 1 else g
                       for g in finals]
+        if current_groups:
+            finals = self.filter_transitions(finals, current_groups)
         return finals
 
     def _pack(self, queue: List[Group], spans: bool,

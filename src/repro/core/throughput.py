@@ -48,6 +48,12 @@ class HardwareSpec:
     step_overhead: float = 0.025        # per-step framework cost (s):
     # host dispatch, optimizer, data feed — amortized across a fused group
     hbm_capacity: float = 16e9          # bytes / chip (feasibility)
+    # one-time cost of a group transition (pause + migrate + compile +
+    # resume), before online calibration: dominated by the XLA recompile
+    # of the rebuilt group's fused step.  The scheduler prices regroups
+    # against it (payback-horizon gating) until measured stalls replace
+    # it via OnlineCalibrator.observe_regroup.
+    regroup_overhead: float = 30.0
 
 
 V5E = HardwareSpec()
@@ -412,6 +418,12 @@ class OnlineCalibrator:
         self.min_obs = max(1, int(min_obs))
         self._buckets: Dict[Tuple[str, int, int], _CalBucket] = {}
         self._hw_cache: Dict[Tuple[str, int, int], HardwareSpec] = {}
+        # measured regroup stalls (pause+migrate+compile+resume), EWMA
+        # per base model — the transition-cost term the scheduler prices
+        # payback horizons with.  One bucket per model (not per K): the
+        # stall is dominated by the rebuilt group's compile, which
+        # varies far more across models than across compositions.
+        self._regroup: Dict[str, Tuple[float, int]] = {}
 
     # ------------------------------------------------------------- intake
     def machine_time(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
@@ -525,6 +537,63 @@ class OnlineCalibrator:
         while uncalibrated)."""
         hw = self.hw_for(cfg.name, chips, len(jobs))
         return group_step_cost(cfg, jobs, chips, hw=hw, **kw).total
+
+    # ------------------------------------------------- transition pricing
+    def observe_regroup(self, model: str, stall_s: float):
+        """Fold one measured regroup stall (pause-to-resume seconds for
+        one rebuilt group) into the model's transition-cost estimate."""
+        assert stall_s >= 0, stall_s
+        mean, n = self._regroup.get(model, (0.0, 0))
+        r = self.decay
+        mean = stall_s if n == 0 else r * mean + (1 - r) * stall_s
+        self._regroup[model] = (mean, n + 1)
+
+    def regroup_cost(self, model: str) -> float:
+        """Calibrated one-time cost of rebuilding a group for *model*
+        (``hw.regroup_overhead`` until a stall has been measured)."""
+        mean, n = self._regroup.get(model, (0.0, 0))
+        return mean if n > 0 else self.hw.regroup_overhead
+
+    # -------------------------------------------------------- persistence
+    def save(self, path: str):
+        """Persist the calibration tables (JSON) — step-time buckets,
+        regroup stalls, and the base constants they regress against —
+        so a fresh controller warm-starts with this machine's fits."""
+        import json
+        import os
+        payload = {
+            "decay": self.decay,
+            "min_obs": self.min_obs,
+            "hw": dataclasses.asdict(self.hw),
+            "buckets": [
+                {"model": m, "chips": c, "k": k, "sw": b.sw, "sx": b.sx,
+                 "sy": b.sy, "sxx": b.sxx, "sxy": b.sxy, "n": b.n}
+                for (m, c, k), b in self._buckets.items()],
+            "regroup": {m: {"mean": mean, "n": n}
+                        for m, (mean, n) in self._regroup.items()},
+        }
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "OnlineCalibrator":
+        """Rehydrate a calibrator saved with :meth:`save`.  The fits are
+        bit-identical to the saved instance's (the accumulators round-
+        trip as floats), and the restored base ``HardwareSpec`` keeps
+        the fit's frame of reference intact."""
+        import json
+        with open(path) as f:
+            d = json.load(f)
+        cal = cls(HardwareSpec(**d["hw"]), decay=d["decay"],
+                  min_obs=d["min_obs"])
+        for b in d["buckets"]:
+            cal._buckets[(b["model"], int(b["chips"]), int(b["k"]))] = \
+                _CalBucket(sw=b["sw"], sx=b["sx"], sy=b["sy"],
+                           sxx=b["sxx"], sxy=b["sxy"], n=int(b["n"]))
+        for m, r in d.get("regroup", {}).items():
+            cal._regroup[m] = (float(r["mean"]), int(r["n"]))
+        return cal
 
     @property
     def calibrated(self) -> bool:

@@ -120,6 +120,10 @@ class ElasticEngine:
 
     def _dissolve(self, gkey: GroupKey):
         rt = self._runtimes.pop(gkey)
+        # a fence can land with the next chunk's batch prefetched; drop
+        # it (rewinding the streams) so the exports don't carry stream
+        # positions past data the group never trained on
+        rt.discard_staged()
         for st in rt.export_all():
             self._parked[st.spec.job_id] = st
 

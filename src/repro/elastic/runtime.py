@@ -206,9 +206,12 @@ class GroupRuntime:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = int(checkpoint_every)
         self._chunks_collected = 0
-        # prefetch buffer for the staged-next-chunk overlap
+        # prefetch buffer for the staged-next-chunk overlap; the rewind
+        # marks let discard_staged un-consume a prefetched batch when a
+        # handoff fence lands before it is dispatched
         self._staged: Optional[dict] = None
         self._staged_len = 0
+        self._staged_rewind: List[str] = []
         self.report = TrainReport(
             samples_per_step=sum(s.batch_size for s in self.specs))
 
@@ -352,6 +355,9 @@ class GroupRuntime:
             from repro.checkpoint.checkpoint import stream_state
             streams = [stream_state(s) for s in self.batcher.streams]
         if prefetch > 0:                     # overlaps with device compute
+            from repro.checkpoint.checkpoint import stream_state
+            self._staged_rewind = [stream_state(s)
+                                   for s in self.batcher.streams]
             self._staged = self._stage(prefetch)
             self._staged_len = prefetch
         return PendingChunk(metrics=metrics, length=L, t0=t0,
@@ -433,6 +439,87 @@ class GroupRuntime:
             done += L
             L = nxt if nxt > 0 else L
         return self.report
+
+    def discard_staged(self):
+        """Drop a prefetched-but-undispatched batch, rewinding the data
+        streams to their pre-stage positions.
+
+        A handoff fence lands between chunks, where the prefetch for the
+        never-to-run next chunk has already advanced the live streams.
+        Exporting with that advance in place would skip data the job
+        never trained on — rewinding first keeps the lossless contract's
+        data half exact across a dissolve."""
+        if self._staged is None:
+            return
+        from repro.checkpoint.checkpoint import restore_stream_state
+        for s, mark in zip(self.batcher.streams, self._staged_rewind):
+            restore_stream_state(s, mark)
+        self._staged = None
+        self._staged_len = 0
+
+    def warm(self, lengths: Optional[Sequence[int]] = None) -> float:
+        """AOT-compile the chunked step(s) this runtime will dispatch,
+        off the training-critical path (DESIGN.md §11).
+
+        Stages a probe batch purely for its shapes/shardings, then
+        rewinds the streams — warming must not consume data, or the
+        first real chunk would fork the trajectory.  Returns the wall
+        seconds spent compiling (the regroup lifecycle's compile_s)."""
+        from repro.checkpoint.checkpoint import (restore_stream_state,
+                                                 stream_state)
+        lengths = [self.chunk_size] if lengths is None else list(lengths)
+        t0 = time.perf_counter()
+        for L in lengths:
+            L = max(1, int(L))
+            if (self.n, L) in self._step_cache:
+                continue
+            marks = [stream_state(s) for s in self.batcher.streams]
+            staged = self._stage(L)
+            for s, mark in zip(self.batcher.streams, marks):
+                restore_stream_state(s, mark)
+            self._get_step(self.n, L, (self.params, self.adapters,
+                                       self.opt_state, staged))
+        return time.perf_counter() - t0
+
+    def refresh_member(self, state: JobTrainState):
+        """Replay-exact handoff of an overlapped migration: overwrite
+        one member's packed slices (adapter + Adam moments + per-job
+        Adam step), stream and step accounting with a FRESHER export of
+        the same job.
+
+        The double-buffered destination is assembled from a stale
+        snapshot — good enough for layout/shapes/compile, which depend
+        only on specs — while the source keeps stepping; once the source
+        fences, its authoritative export lands here by pure copy
+        (insert_job into the job's own padded segment), making the
+        handoff bit-identical to a stop-the-world rebuild at the fence
+        boundary.  Only legal before this runtime's first step and
+        before any staging (a staged batch would hold the stale stream's
+        data)."""
+        assert self.report.steps == 0, \
+            "refresh_member after stepping would discard trained state"
+        assert self._staged is None, \
+            "refresh_member after staging would train on stale data"
+        from repro.checkpoint.checkpoint import insert_job
+        idx = self.index_of(state.spec.job_id)
+        off, r_cap = self.ssm.layout.slice_of(idx)
+        r = state.spec.rank
+        adapters = insert_job(self.adapters, off, r, state.adapter, r_cap)
+        mu = insert_job(self.opt_state.mu, off, r, state.mu, r_cap)
+        nu = insert_job(self.opt_state.nu, off, r, state.nu, r_cap)
+        step = self.opt_state.step.at[idx].set(int(state.opt_step))
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            repl = NamedSharding(self.mesh, PartitionSpec())
+            adapters = jax.device_put(adapters, repl)
+            mu = jax.device_put(mu, repl)
+            nu = jax.device_put(nu, repl)
+            step = jax.device_put(step, repl)
+        self.adapters = adapters
+        self.opt_state = adamw.AdamWState(step, mu, nu)
+        self.steps_done[state.spec.job_id] = state.steps_done
+        if state.stream is not None:
+            self.batcher.streams[idx] = copy.deepcopy(state.stream)
 
     # -------------------------------------------------------- checkpoints
     def save_checkpoints(self, directory: Optional[str] = None, *,

@@ -397,6 +397,76 @@ def controller_repartition_migration():
     assert len(ctl2.group_devices()[(jx.job_id,)]) == 1
 
 
+def controller_overlapped_migration():
+    """Zero-stall regroup under load (DESIGN.md §11): two groups pump on
+    disjoint 2-device submeshes while the 4-device merged destination is
+    assembled + AOT-warmed in the background; the handoff fences the
+    sources at a chunk boundary and the stall window contains NO
+    compile.  Replay-exactness: the result matches a stop-the-world
+    reference rebuilt at the very same fence steps (state_close — the
+    submesh shapes change across the merge, DESIGN.md §8)."""
+    import time
+
+    ctl, cfg = _controller("threads", seed=3, pool=jax.devices()[:4])
+    groups = _two_group_jobs(cfg)
+    for js in groups:
+        for j in js:
+            ctl.submit(j)
+    gkeys = [tuple(j.job_id for j in js) for js in groups]
+    merged = gkeys[0] + gkeys[1]
+    ctl.apply_grouping(gkeys, chips=[2, 2])
+    devs = ctl.group_devices()
+    assert not (set(devs[gkeys[0]]) & set(devs[gkeys[1]])), devs
+
+    ctl.begin(100_000)            # effectively: pump until drained below
+    t0 = time.monotonic()
+    while min(ctl.steps_done(j) for j in merged) < 4:
+        assert time.monotonic() - t0 < 300
+        time.sleep(0.05)
+    assert ctl.prewarm([merged], chips=[4]) == 1   # sources keep stepping
+    ctl.apply_grouping([merged], chips=[4])
+    ev = ctl.regroup_log[-1]
+    assert ev.mode == "overlapped", ev.mode
+    assert ev.compile_s == 0.0                     # warmed off-window
+    assert ev.assemble_s > 0.0 and ev.stall_s > 0.0
+    assert ev.groups_dissolved == 2 and ev.groups_built == 1
+    assert sorted(ev.fence_steps) == sorted(merged)
+    assert all(s >= 4 for s in ev.fence_steps.values()), ev.fence_steps
+    assert len(ctl.group_devices()[merged]) == 4
+
+    # let the merged pump train past the handoff, then drain the run
+    w = ctl._workers[merged]
+    while ctl.steps_done(merged[0]) - ev.fence_steps[merged[0]] < 4:
+        assert time.monotonic() - t0 < 300 and w.exception is None, \
+            w.exception
+        time.sleep(0.05)
+    assert w.fence(120) and (w.stop() or w.join(120))
+    assert w.exception is None, w.exception
+    ctl._workers, ctl._run_target, ctl._run_base = {}, 0, {}
+    fence = ev.fence_steps
+    extra = {j: ctl.steps_done(j) - fence[j] for j in merged}
+    assert len(set(extra.values())) == 1, extra    # members step together
+    r = next(iter(extra.values()))
+
+    # stop-the-world reference cut at the SAME fence boundary
+    ref, _ = _controller("sequential", seed=3, pool=jax.devices()[:4])
+    for js in groups:
+        for j in js:
+            ref.submit(j)
+    ref.apply_grouping(gkeys, chips=[2, 2])
+    for gk in gkeys:
+        ref._slots[gk].runtime(gk).run(fence[gk[0]])
+    ref.apply_grouping([merged], chips=[4])
+    ref._slots[merged].runtime(merged).run(r)
+    for j in merged:
+        a, b = ctl.job_state(j), ref.job_state(j)
+        assert a.opt_step == b.opt_step, (j, a.opt_step, b.opt_step)
+        assert a.steps_done == b.steps_done
+        state_close(a.adapter, b.adapter)
+        state_close(a.mu, b.mu)
+        state_close(a.nu, b.nu)
+
+
 def execution_backend_sharded():
     """ExecutionBackend measures on a real mesh without falling over."""
     from repro.cluster.execution import ExecutionBackend
@@ -428,7 +498,8 @@ if __name__ == "__main__":
                migration_across_meshes, gather_solo_bitexact,
                local_mesh_clamps, execution_backend_sharded,
                controller_concurrent_parity,
-               controller_repartition_migration):
+               controller_repartition_migration,
+               controller_overlapped_migration):
         scenario(fn)
     for r in RESULTS:
         print("SCENARIO " + json.dumps(r))

@@ -206,3 +206,45 @@ def test_ragged_rank_pricing_property():
                            ragged_kernels=True).total, rel=1e-9)
     assert tp.group_step_cost(CFG, mixed, CHIPS).total < \
         tp.group_step_cost(CFG, homog, CHIPS).total
+
+
+# ------------------------------------------------------- persistence (§11)
+def test_save_load_roundtrip(tmp_path):
+    """The persisted table warm-starts an identical oracle: step-time
+    fits, regroup-cost terms and decay/min_obs all survive the JSON
+    round trip, and the restored calibrator keeps learning."""
+    alpha, beta = 1.7, 0.013
+    cal = tp.OnlineCalibrator(decay=0.9, min_obs=2)
+    for b in (2, 8, 1, 4):
+        cal.observe(CFG, group(b), CHIPS, synth(cal, group(b), alpha, beta))
+    cal.observe_regroup(CFG.name, 12.5)
+    cal.observe_regroup(CFG.name, 14.5)
+    path = str(tmp_path / "cal.json")
+    cal.save(path)
+
+    back = tp.OnlineCalibrator.load(path)
+    assert back.decay == cal.decay and back.min_obs == cal.min_obs
+    assert back.calibrated
+    for jobs in EVAL:
+        assert back.predict(CFG, jobs, CHIPS) == pytest.approx(
+            cal.predict(CFG, jobs, CHIPS), rel=1e-12)
+    assert back.regroup_cost(CFG.name) == pytest.approx(
+        cal.regroup_cost(CFG.name), rel=1e-12)
+    # unseen model still falls back to the static default
+    assert back.regroup_cost("never-seen") == back.hw.regroup_overhead
+    # the restored instance keeps fitting (mutable, not a frozen view)
+    back.observe(CFG, group(3), CHIPS, synth(back, group(3), alpha, beta))
+    a, c = back.fit(CFG.name, CHIPS, 2)
+    assert a == pytest.approx(alpha, rel=1e-6)
+
+
+def test_regroup_cost_ewma():
+    """Regroup stalls feed an EWMA per base model — first observation
+    seeds it, later ones blend, other models stay at the default."""
+    cal = tp.OnlineCalibrator(decay=0.5)
+    assert cal.regroup_cost(CFG.name) == cal.hw.regroup_overhead
+    cal.observe_regroup(CFG.name, 10.0)
+    assert cal.regroup_cost(CFG.name) == pytest.approx(10.0)
+    cal.observe_regroup(CFG.name, 20.0)
+    assert cal.regroup_cost(CFG.name) == pytest.approx(15.0)
+    assert cal.regroup_cost("other-model") == cal.hw.regroup_overhead

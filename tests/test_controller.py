@@ -227,3 +227,131 @@ def test_executable_models_registry_driven():
     assert len(executable_models(max_params=1e12)) > len(got)
     be = ExecutionBackend(block_t=BT)
     assert be.models == got
+
+
+# ------------------------------------- event-driven control plane (§11)
+def test_worker_failure_surfaces_instead_of_hanging(ctl):
+    """Shutdown contract: a group worker dying mid-chunk must surface
+    its exception from finish() within the join bound — the old
+    unbounded result() wait turned any worker death into a hang."""
+    import time
+    from repro.cluster.control import WorkerFailure
+
+    ctl.submit(_spec("a", rank=4, bs=2))
+    ctl.submit(_spec("b", rank=8))
+    ctl.apply_grouping([("a",), ("b",)])
+    rt_b = ctl._slots[("b",)].runtime(("b",))
+
+    calls = {"n": 0}
+    orig = rt_b.dispatch_chunk
+
+    def boom(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise RuntimeError("chunk pump died")
+        return orig(*args, **kwargs)
+
+    rt_b.dispatch_chunk = boom
+    t0 = time.monotonic()
+    ctl.begin(500)
+    with pytest.raises(WorkerFailure, match="chunk pump died"):
+        ctl.finish(timeout=120)
+    assert time.monotonic() - t0 < 120
+    # the healthy sibling was stopped, not abandoned
+    assert not any(w.alive for w in ctl._workers.values())
+
+
+def test_stuck_worker_join_is_bounded(ctl):
+    """A wedged pump (never reaches a chunk boundary) trips the shared
+    deadline: finish(timeout=...) raises naming the stuck group instead
+    of blocking forever."""
+    import time
+    from repro.cluster.control import WorkerFailure
+
+    ctl.submit(_spec("a", rank=4, bs=2))
+    ctl.apply_grouping([("a",)])
+    rt = ctl._slots[("a",)].runtime(("a",))
+    rt.dispatch_chunk = lambda *a, **k: time.sleep(3600)
+
+    t0 = time.monotonic()
+    ctl.begin(10)
+    with pytest.raises(WorkerFailure, match="timed out"):
+        ctl.finish(timeout=2)
+    assert time.monotonic() - t0 < 30
+
+
+def test_overlapped_regroup_under_live_pumps(tiny_cfg):
+    """The zero-stall path end to end on one device: two solo pumps keep
+    stepping while the merged destination is assembled and AOT-warmed;
+    the handoff fences them at a chunk boundary and the RegroupEvent
+    shows NO compile inside the stall window.  Budget accounting: a job
+    migrated mid-run still reaches the run target."""
+    import time as _time
+
+    ctl = ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                            lr=1e-2, remat=False, chunk_size=2, seed=3,
+                            partition=False)
+    ctl.submit(_spec("a", rank=4, bs=2))
+    ctl.submit(_spec("b", rank=8))
+    ctl.apply_grouping([("a",), ("b",)])
+
+    # slow the source pumps so the prepare provably overlaps stepping
+    for g in (("a",), ("b",)):
+        rt = ctl._slots[g].runtime(g)
+        orig = rt.dispatch_chunk
+
+        def slow(*args, _orig=orig, **kwargs):
+            _time.sleep(0.05)
+            return _orig(*args, **kwargs)
+        rt.dispatch_chunk = slow
+
+    target = 300
+    ctl.begin(target)
+    assert ctl.prewarm([("a", "b")]) == 1     # sources keep stepping
+    before = {j: ctl.steps_done(j) for j in ("a", "b")}
+    ctl.apply_grouping([("a", "b")])
+    ev = ctl.regroup_log[-1]
+    assert ev.mode == "overlapped"
+    assert ev.compile_s == 0.0                # warm happened off-window
+    assert ev.assemble_s > 0.0
+    assert ev.groups_dissolved == 2 and ev.groups_built == 1
+    assert set(ev.fence_steps) == {"a", "b"}
+    # the fence landed mid-run, not at 0 and not past the target
+    assert all(0 < s < target for s in ev.fence_steps.values())
+    assert all(ev.fence_steps[j] >= before[j] for j in before)
+    ctl.finish()
+    assert ctl.steps_done("a") >= target and ctl.steps_done("b") >= target
+    stats = ctl.regroup_stats()
+    assert stats["overlapped"]["events"] == 1
+    assert stats["overlapped"]["stall_s"] > 0.0
+
+
+def test_calibration_warm_start_roundtrip(tiny_cfg, tmp_path):
+    """calibration_path persistence: a controller saves its fitted
+    tables; a NEW controller on the same path warm-starts with the
+    measured regroup cost and threads it into its schedulers."""
+    from repro.core import throughput as tp
+
+    path = str(tmp_path / "cal.json")
+    cal = tp.OnlineCalibrator()
+    # regroup costs are keyed by the EXECUTABLE config name (what the
+    # controller's schedulers price with), not the base-model label
+    cal.observe_regroup(tiny_cfg.name, 7.5)
+    ctl = ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                            calibrator=cal, calibration_path=path, seed=3)
+    ctl.save_calibration()
+    assert os.path.exists(path)
+
+    ctl2 = ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                             calibration_path=path, seed=3)
+    assert ctl2.calibrator is not None
+    assert ctl2.calibrator.regroup_cost(tiny_cfg.name) == \
+        pytest.approx(7.5)
+    sched = ctl2.scheduler("tinyllama-1.1b")
+    assert sched.transition_cost() == pytest.approx(7.5)
+    # an explicit calibrator wins over the persisted file
+    cal3 = tp.OnlineCalibrator()
+    ctl3 = ClusterController(lambda m: tiny_cfg, impl="ref", block_t=BT,
+                             calibrator=cal3, calibration_path=path,
+                             seed=3)
+    assert ctl3.calibrator is cal3

@@ -361,3 +361,72 @@ def test_impls_agree_on_train_step(setup):
     for impl in ("pallas", "xla", "loop"):
         np.testing.assert_allclose(outs[impl], outs["ref"],
                                    rtol=1e-4, atol=1e-5)
+
+
+def test_inflight_migration_is_bit_exact(tiny_cfg):
+    """The replay-exact handoff contract (DESIGN.md §11): a mixed-rank
+    pair merged via the double-buffered path — destination assembled and
+    AOT-warmed from a snapshot while the sources keep stepping, then
+    refreshed with their authoritative exports at the fence — must be
+    BIT-identical to the stop-the-world rebuild at the same boundary:
+    adapters, AdamW moments, per-job Adam step vectors, step accounting
+    and the data-stream rng position all match exactly."""
+    from repro.checkpoint.checkpoint import stream_state
+    from repro.cluster.controller import ClusterController
+
+    cfg = tiny_cfg
+    small = LoRAJobSpec("small", rank=4, batch_size=2, seq_len=32)
+    wide = LoRAJobSpec("wide", rank=64, batch_size=1, seq_len=32)
+    k = 3
+    kw = dict(impl="ref", block_t=BT, lr=1e-2, remat=False, seed=7,
+              chunk_size=k, partition=False)
+
+    def build():
+        ctl = ClusterController(lambda m: cfg, **kw)
+        ctl.submit(small)
+        ctl.submit(wide)
+        ctl.apply_grouping([("small",), ("wide",)])
+        return ctl
+
+    gab = ("small", "wide")
+
+    # reference: stop-the-world merge at the step-2k boundary
+    ref = build()
+    ref.run(2 * k)
+    ref.apply_grouping([gab])
+    ref.run(k)
+
+    # overlapped: destination prepared from STALE snapshots at step k;
+    # the sources then advance another k steps before the handoff
+    ctl = build()
+    ctl.run(k)
+    assert ctl.prewarm([gab]) == 1
+    assert ctl._prepared[0].snapshot_steps == {"small": k, "wide": k}
+    ctl.run(k)                       # sources step past the snapshot
+    assert ctl.steps_done("small") == 2 * k
+    ctl.apply_grouping([gab])
+    assert not ctl._prepared         # prepared destination was consumed
+    ev = ctl.regroup_log[-1]
+    assert ev.fence_steps == {"small": 2 * k, "wide": 2 * k}
+    ctl.run(k)
+
+    assert ctl.regroup_events == ref.regroup_events == 1
+    for jid in ("small", "wide"):
+        want, have = ref.job_state(jid), ctl.job_state(jid)
+        assert have.opt_step == want.opt_step == 3 * k
+        assert have.steps_done == want.steps_done == 3 * k
+        # rank raggedness preserved: the rank-4 job's exported slices
+        # stay 4 wide through the prepared-destination path too
+        r_axis = {kk: (v.shape[-1] if kk.endswith("A") else v.shape[-2])
+                  for kk, v in have.adapter.items()}
+        assert set(r_axis.values()) == {small.rank if jid == "small"
+                                        else wide.rank}
+        for kk in want.adapter:
+            assert np.array_equal(np.asarray(have.adapter[kk]),
+                                  np.asarray(want.adapter[kk])), (jid, kk)
+            assert np.array_equal(np.asarray(have.mu[kk]),
+                                  np.asarray(want.mu[kk])), (jid, kk)
+            assert np.array_equal(np.asarray(have.nu[kk]),
+                                  np.asarray(want.nu[kk])), (jid, kk)
+        # stream rng position: bit-equal serialized generator state
+        assert stream_state(have.stream) == stream_state(want.stream), jid

@@ -1,0 +1,76 @@
+"""Property tests for the pool-partition arithmetic
+(``launch/mesh.device_shares``) — the function every controller layout
+decision rests on.  The invariants, for ANY weights and pool size:
+
+  * empty input -> empty output;
+  * pool smaller than the group count -> all zeros (the controller
+    falls back to time-multiplexed meshless execution);
+  * otherwise every group gets at least 1 device, no group exceeds its
+    cap (ceil(weight)), and the total allocated equals
+    min(n_devices, sum of caps) — surplus devices stay free rather
+    than over-sharding, and no device is double-booked.
+
+Runs under hypothesis when available; a seeded random sweep keeps the
+property exercised on environments without it (no new deps)."""
+import math
+import random
+
+import pytest
+
+from repro.launch.mesh import device_shares
+
+
+def check_invariants(weights, n_devices):
+    shares = device_shares(weights, n_devices)
+    assert len(shares) == len(weights)
+    if not weights:
+        assert shares == []
+        return shares
+    if n_devices < len(weights):
+        assert shares == [0] * len(weights)
+        return shares
+    caps = [max(1, math.ceil(max(float(w), 1e-9))) for w in weights]
+    assert all(1 <= s <= c for s, c in zip(shares, caps))
+    # conservation: everything the caps admit is handed out, nothing
+    # more — the remainder of the pool stays free for arrivals
+    assert sum(shares) == min(n_devices, sum(caps))
+    return shares
+
+
+def test_device_shares_edge_cases():
+    assert device_shares([], 8) == []
+    assert device_shares([4, 4, 4], 2) == [0, 0, 0]      # pool too small
+    assert device_shares([1, 1], 8) == [1, 1]            # caps bind
+    # floor: even a zero/negative weight keeps one device once feasible
+    assert device_shares([0.0, 8], 8) == [1, 7]
+    # monotone priority: the heavier group never gets fewer devices
+    s = device_shares([8, 2], 8)
+    assert s[0] >= s[1]
+
+
+def test_device_shares_property_sweep():
+    """Seeded random sweep of the invariants (runs everywhere)."""
+    rng = random.Random(0)
+    for _ in range(500):
+        k = rng.randint(0, 12)
+        weights = [rng.choice([rng.randint(0, 16),
+                               rng.uniform(0.0, 16.0)]) for _ in range(k)]
+        n = rng.randint(0, 64)
+        check_invariants(weights, n)
+
+
+def test_device_shares_property_hypothesis():
+    """Same invariants, adversarially searched when hypothesis exists."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(weights=st.lists(
+        st.one_of(st.integers(0, 64),
+                  st.floats(0.0, 64.0, allow_nan=False)),
+        min_size=0, max_size=16),
+        n=st.integers(0, 128))
+    def prop(weights, n):
+        check_invariants(weights, n)
+
+    prop()

@@ -1,4 +1,6 @@
 """Adapter Scheduler (Algorithm 1) behaviour tests."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -102,3 +104,94 @@ def test_throughput_model_sanity():
     assert cx.t_comm > c8.t_comm                # crossing nodes costs
     cu = tp.group_step_cost(CFG, [j], 4, kernel_fused=False)
     assert cu.total > c4.total                  # unfused overheads
+
+
+# ------------------------------------------------- transition-cost gating
+def _resid_state(jid, steps_done=0, budget=1000):
+    s = state(jid, batch=1, gpus=2)
+    s.spec = dataclasses.replace(s.spec, steps_budget=budget)
+    s.steps_done = steps_done
+    return s
+
+
+def test_transition_not_proposed_when_cost_exceeds_residual_benefit():
+    """A regroup whose calibrated stall cost exceeds the affected jobs'
+    residual-time benefit keeps the status quo (DESIGN.md §11): jobs
+    five steps from their budget are not worth a 30 s rebuild, even
+    though the merged layout is strictly better at steady state."""
+    sched = AdapterScheduler(CFG)
+    done = [_resid_state(f"s{i}", steps_done=199_995, budget=200_000)
+            for i in range(6)]
+    current = [Group([j], 2) for j in done]
+    # ungated, the scheduler wants to fuse these complementary jobs
+    assert any(len(g.jobs) > 1 for g in sched.schedule(done, pressure=True))
+    gated = sched.schedule(done, pressure=True, current_groups=current)
+    assert all(len(g.jobs) == 1 for g in gated)
+    assert sorted(jid for g in gated for jid in g.job_ids) == \
+        sorted(j.spec.job_id for j in done)        # nobody lost
+
+
+def test_transition_proposed_once_benefit_horizon_grows():
+    """Same composition, full residual budgets: the chip-seconds saved
+    dwarf the one-time stall, so the merge goes through."""
+    sched = AdapterScheduler(CFG)
+    fresh = [_resid_state(f"s{i}", steps_done=0, budget=200_000)
+             for i in range(6)]
+    current = [Group([j], 2) for j in fresh]
+    gated = sched.schedule(fresh, pressure=True, current_groups=current)
+    assert any(len(g.jobs) > 1 for g in gated)
+
+
+def test_transition_cost_uses_calibrated_stall():
+    """The cost term follows the control plane's measured stalls: an
+    expensive-to-rebuild model (huge observed stall) blocks a merge the
+    static default would allow."""
+    cal = tp.OnlineCalibrator()
+    sched = AdapterScheduler(CFG, calibrator=cal)
+    assert sched.transition_cost() == sched.sched.hw.regroup_overhead
+    cal.observe_regroup(CFG.name, 1e9)             # pathological machine
+    assert sched.transition_cost() == pytest.approx(1e9)
+    fresh = [_resid_state(f"s{i}", budget=200_000) for i in range(6)]
+    current = [Group([j], 2) for j in fresh]
+    gated = sched.schedule(fresh, pressure=True, current_groups=current)
+    assert all(len(g.jobs) == 1 for g in gated)
+
+
+def test_identical_grouping_is_free():
+    """Proposals matching live groups are never gated — no rebuild, no
+    cost (the runtime and compiled step are reused verbatim)."""
+    sched = AdapterScheduler(CFG)
+    done = [_resid_state(f"s{i}", steps_done=199_995, budget=200_000)
+            for i in range(6)]
+    proposal = sched.schedule(done, pressure=True)
+    again = sched.filter_transitions(proposal, proposal)
+    assert [g.job_ids for g in again] == [g.job_ids for g in proposal]
+
+
+def test_tlora_policy_transition_aware_hysteresis():
+    """The stateful policy remembers its last grouping and refuses to
+    churn jobs whose residual cannot pay for the stall — then proposes
+    the very same merge once the benefit horizon grows."""
+    from repro.cluster.simulator import ClusterConfig, tlora_policy
+
+    cc = ClusterConfig(total_chips=64)
+    policy = tlora_policy(lambda m: CFG, transition_aware=True)
+    done = [_resid_state(f"s{i}", steps_done=199_995, budget=200_000)
+            for i in range(6)]
+    # no queue pressure: the policy runs everyone solo -> its remembered
+    # grouping is six live singleton groups
+    first = policy(done, cc, False)
+    assert all(len(g.jobs) == 1 for g in first)
+    # pressure arrives, but 5 residual steps cannot pay a 30 s rebuild:
+    # the stateful policy keeps the live singletons
+    second = policy(done, cc, True)
+    assert all(len(g.jobs) == 1 for g in second)
+    # same composition with the benefit horizon grown (fresh budgets):
+    # now the merge pays back and IS proposed
+    fresh = [_resid_state(f"s{i}", steps_done=0, budget=200_000)
+             for i in range(6)]
+    third = policy(fresh, cc, True)
+    assert any(len(g.jobs) > 1 for g in third)
+    # the stateless policy would have churned the near-done jobs
+    naive = tlora_policy(lambda m: CFG, transition_aware=False)
+    assert any(len(g.jobs) > 1 for g in naive(done, cc, True))

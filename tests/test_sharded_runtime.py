@@ -36,6 +36,7 @@ SCENARIOS = [
     "execution_backend_sharded",
     "controller_concurrent_parity",
     "controller_repartition_migration",
+    "controller_overlapped_migration",
 ]
 
 
