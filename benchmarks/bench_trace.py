@@ -1,0 +1,198 @@
+"""Trace-driven survival benchmark — the live controller under a real
+arrival process, with and without injected faults (DESIGN.md §12).
+
+Replays a synthetic ACMETrace-style trace (cluster/trace.generate,
+rescaled to bench wall clock) against the EXECUTING ClusterController
+via cluster/harness.TraceRunner, and writes ``BENCH_trace.json`` with
+MEASURED distributions:
+
+  * per-job JCT (avg/p50/p95), cluster throughput, utilization — the
+    paper's §4.1 metrics, measured on real training steps rather than
+    the analytic simulator;
+  * the same run with a deterministic ``FaultPlan`` (worker death
+    mid-chunk, submesh loss; plus a stuck worker and a corrupted
+    checkpoint file in full mode): per-fault detection latency, restore
+    time, and steps lost, plus the survival gates — zero lost jobs,
+    every fault recovered, steps lost bounded by the checkpoint period.
+
+Run as a script to force a virtual device count:
+``python -m benchmarks.bench_trace --quick --inject-faults --devices 8``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _peek_devices_arg(argv):
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+if __name__ == "__main__":
+    _spec = _peek_devices_arg(sys.argv)
+    if _spec:
+        try:
+            _need = int(_spec)
+        except ValueError:
+            _need = 0
+        _flags = os.environ.get("XLA_FLAGS", "")
+        if _need > 1 and \
+                "xla_force_host_platform_device_count" not in _flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{_flags} --xla_force_host_platform_device_count={_need}"
+            ).strip()
+
+import dataclasses
+import json
+import pathlib
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.cluster.controller import ClusterController
+from repro.cluster.faults import FaultPlan, FaultSpec
+from repro.cluster.harness import TraceRunner
+from repro.cluster.trace import TraceConfig, generate, validate_trace
+
+from benchmarks.common import banner
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_trace.json"
+MODEL = "tinyllama-1.1b"
+CHUNK = 2
+CKPT_EVERY = 1           # every collected chunk -> period = CHUNK steps
+
+
+def _trace(n_jobs: int, quick: bool, pool: int):
+    """A bench-sized slice of the synthetic trace: the generator's
+    burst/arrival structure and rank/batch skew survive; budgets and
+    sequence lengths shrink to what a CI leg can train for real."""
+    raw = generate(TraceConfig(months=1, jobs_per_month=4 * n_jobs,
+                               base_models=(MODEL,), seed=7))[:n_jobs]
+    lo, hi = (6, 18) if quick else (12, 40)
+    jobs = [dataclasses.replace(
+        j, seq_len=32, batch_size=min(j.batch_size, 4),
+        gpus=min(j.gpus, max(1, pool // 4)),
+        steps_budget=lo + (j.steps_budget % (hi - lo)))
+        for j in raw]
+    # satellite: infeasible jobs fail here, not deep inside partitioning
+    return validate_trace(jobs, pool_chips=pool, models=(MODEL,))
+
+
+def _fault_plan(jobs, quick: bool) -> FaultPlan:
+    """Deterministic victims: the longest-budget jobs are guaranteed to
+    still be running when their trigger step arrives."""
+    by_budget = sorted(jobs, key=lambda j: -j.steps_budget)
+    specs = [
+        FaultSpec("worker_death", job_id=by_budget[0].job_id,
+                  at_step=2, phase="inflight"),
+        FaultSpec("submesh_loss", job_id=by_budget[1].job_id,
+                  at_step=3, phase="boundary"),
+    ]
+    if not quick:
+        specs.append(FaultSpec("corrupt_checkpoint",
+                               job_id=by_budget[2].job_id, at_step=4,
+                               phase="boundary"))
+        specs.append(FaultSpec("stuck_worker",
+                               job_id=by_budget[3].job_id, at_step=2,
+                               phase="boundary", stuck_s=300.0))
+    return FaultPlan(specs, seed=7)
+
+
+def _controller(plan, quick: bool):
+    cfg = get_config(MODEL).reduced()
+    ckpt = tempfile.mkdtemp(prefix="bench_trace_ckpt_")
+    ctl = ClusterController(
+        lambda m: cfg, impl="xla", block_t=8, lr=1e-2, remat=False,
+        chunk_size=CHUNK, seed=0, checkpoint_dir=ckpt,
+        checkpoint_every=CKPT_EVERY, fault_plan=plan,
+        max_restarts=3, backoff_base_s=0.2,
+        # heartbeat detection: well past a healthy chunk (ms) but short
+        # enough that a wedged pump is caught within the bench window;
+        # a cold pump's compile is excused by the startup grace
+        stuck_after=20.0 if quick else 45.0, startup_grace_s=300.0)
+    ctl.register_cfg(MODEL, cfg)
+    return ctl
+
+
+def _run(jobs, plan, quick: bool) -> dict:
+    ctl = _controller(plan, quick)
+    runner = TraceRunner(ctl, jobs,
+                         arrival_window_s=6.0 if quick else 20.0,
+                         poll_s=0.05,
+                         max_wall_s=900.0 if quick else 2400.0)
+    res = runner.run()
+    s = res.summary()
+    s["jct_per_job_s"] = {j: l.jct_s for j, l in res.logs.items()}
+    return s
+
+
+def run(quick: bool = False, inject_faults: bool = True) -> dict:
+    banner("Trace-driven cluster runtime: survival under fire")
+    pool = len(jax.devices())
+    n_jobs = 8 if quick else 24
+    jobs = _trace(n_jobs, quick, pool)
+    period = CKPT_EVERY * CHUNK
+    out = {"config": {"devices": pool, "jobs": len(jobs),
+                      "chunk_size": CHUNK,
+                      "checkpoint_every": CKPT_EVERY,
+                      "checkpoint_period_steps": period,
+                      "model": f"{MODEL}-reduced", "quick": quick}}
+
+    print(f"  pool {pool} devices, {len(jobs)} jobs, budgets "
+          f"{min(j.steps_budget for j in jobs)}.."
+          f"{max(j.steps_budget for j in jobs)} steps")
+    base = _run(jobs, None, quick)
+    print(f"  no faults : {base['completed']}/{base['jobs']} done in "
+          f"{base['wall_s']:.1f}s  jct p50 {base['p50_jct_s']:.1f}s  "
+          f"util {base['utilization']:.2f}")
+    out["no_faults"] = base
+    assert base["lost_jobs"] == 0 and not base["timed_out"], base
+
+    if inject_faults:
+        plan = _fault_plan(jobs, quick)
+        faulted = _run(jobs, plan, quick)
+        rec = faulted["recovery"]
+        print(f"  faulted   : {faulted['completed']}/{faulted['jobs']} "
+              f"done in {faulted['wall_s']:.1f}s  "
+              f"faults {rec['faults']} recovered {rec['recovered']}  "
+              f"max steps lost {rec['max_steps_lost']}")
+        for f in faulted["failures"]:
+            print(f"    {f['kind']:>18s} {'+'.join(f['gkey'])[:28]:28s} "
+                  f"detect {f['detect_latency_s']*1e3:7.1f}ms  "
+                  f"restore {f['restore_s']:6.2f}s  "
+                  f"lost {max(list(f['steps_lost'].values()) or [0])}")
+        out["faults"] = faulted
+        out["faults_injected"] = len(plan.faults)
+        out["faults_fired"] = len(plan.fired)
+        # the survival contract IS the acceptance criterion — fail the
+        # bench, not just the CI gate, when it breaks
+        assert faulted["lost_jobs"] == 0, faulted
+        assert rec["recovered"] == rec["faults"] == len(plan.fired), \
+            faulted
+        for f in faulted["failures"]:
+            if f["kind"] in ("worker_death", "submesh_loss"):
+                worst = max(list(f["steps_lost"].values()) or [0])
+                assert worst <= period, (f, period)
+
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"  wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--inject-faults", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force a virtual host device count (script "
+                         "mode only; e.g. 8 for the CI leg)")
+    a = ap.parse_args()
+    run(quick=a.quick, inject_faults=a.inject_faults)

@@ -13,6 +13,7 @@ MODULES = [
     "bench_controller",
     "bench_kernels",
     "bench_step_loop",
+    "bench_trace",
     "fig2_naive_batching",
     "fig5_e2e",
     "fig6_utilization",

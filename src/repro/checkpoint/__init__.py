@@ -1,3 +1,5 @@
-from repro.checkpoint.checkpoint import save_job, restore_job, slice_job, insert_job
+from repro.checkpoint.checkpoint import CheckpointCorrupt, save_job, \
+    load_job, restore_job, slice_job, insert_job
 
-__all__ = ["save_job", "restore_job", "slice_job", "insert_job"]
+__all__ = ["CheckpointCorrupt", "save_job", "load_job", "restore_job",
+           "slice_job", "insert_job"]

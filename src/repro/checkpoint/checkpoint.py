@@ -28,6 +28,24 @@ from repro.core.lora import rank_axis_is_last
 from repro.optim.adamw import AdamWState
 
 
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint file is truncated, unreadable, or missing required
+    payload.  Atomic writes (``save_job``) guarantee the *previous* good
+    checkpoint is never destroyed by a crash mid-save, so a corrupt file
+    means this restore attempt fails — not that the job's state is lost;
+    callers fall back (supervisor: restart from the admission-time
+    init) instead of crashing the whole control plane."""
+
+    def __init__(self, path: str, reason: str):
+        super().__init__(f"corrupt checkpoint {path}: {reason}")
+        self.path = path
+        self.reason = reason
+
+
+# keys every job checkpoint must carry to be restorable at all
+_REQUIRED_KEYS = ("__step__", "__rank__", "__job_id__")
+
+
 def _flatten(tree, prefix="") -> Dict[str, Any]:
     out = {}
     if isinstance(tree, dict):
@@ -138,8 +156,20 @@ def save_job(path: str, job_id: str, offset: int, rank: int,
     for k, v in (meta or {}).items():
         payload[f"__meta_{k}__"] = np.asarray(v)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "wb") as f:
-        np.savez(f, **payload)
+    # atomic write: a crash mid-save (power loss, worker death, injected
+    # fault) must never destroy the previous good checkpoint, so the
+    # payload lands in a same-directory temp file and only an os.replace
+    # (atomic on POSIX) publishes it under the real name.
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def load_meta(z: dict) -> dict:
@@ -153,8 +183,25 @@ def load_meta(z: dict) -> dict:
 
 
 def load_job(path: str) -> dict:
-    with np.load(path, allow_pickle=False) as z:
-        return {k: z[k] for k in z.files}
+    """Load a per-job checkpoint, raising typed errors.
+
+    A missing file stays ``FileNotFoundError`` (the caller's "no
+    checkpoint yet" signal); anything else — truncated zip, bad magic,
+    partial member, missing required keys — raises
+    ``CheckpointCorrupt`` so recovery code can fall back deliberately
+    instead of dying on a raw ``BadZipFile``/``ValueError`` deep inside
+    numpy."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            out = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointCorrupt(path, repr(e)) from e
+    missing = [k for k in _REQUIRED_KEYS if k not in out]
+    if missing:
+        raise CheckpointCorrupt(path, f"missing required keys {missing}")
+    return out
 
 
 def restore_job(path: str, idx: int, offset: int, adapters: dict,

@@ -1,6 +1,9 @@
-from repro.cluster import (baselines, controller, execution, metrics,
-                           simulator, trace)
+from repro.cluster import (baselines, controller, execution, faults,
+                           harness, metrics, simulator, trace)
 from repro.cluster.controller import ClusterController
+from repro.cluster.faults import FaultPlan, FaultSpec
+from repro.cluster.harness import TraceRunner
 
-__all__ = ["baselines", "controller", "execution", "metrics", "simulator",
-           "trace", "ClusterController"]
+__all__ = ["baselines", "controller", "execution", "faults", "harness",
+           "metrics", "simulator", "trace", "ClusterController",
+           "FaultPlan", "FaultSpec", "TraceRunner"]

@@ -93,7 +93,21 @@ class PreparedGroup:
 
 
 class WorkerFailure(RuntimeError):
-    """A group worker died (original exception chained) or timed out."""
+    """One or more group workers died (original exceptions chained via
+    ``failures``) and/or sat past the shared join deadline (``stuck``).
+
+    ``failures`` maps every failed group's key to its captured
+    exception; ``stuck`` names every group still pumping when the
+    deadline expired — the full failure picture in ONE raise, so a
+    supervisor can quarantine/recover each domain instead of learning
+    about concurrent failures one crash at a time."""
+
+    def __init__(self, msg: str,
+                 failures: Optional[Dict[GroupKey, BaseException]] = None,
+                 stuck: Optional[List[GroupKey]] = None):
+        super().__init__(msg)
+        self.failures: Dict[GroupKey, BaseException] = dict(failures or {})
+        self.stuck: List[GroupKey] = list(stuck or [])
 
 
 class GroupWorker:
@@ -105,14 +119,19 @@ class GroupWorker:
 
     def __init__(self, gkey: GroupKey, runtime, steps: int,
                  chunk_size: Optional[int] = None,
-                 log: Optional[Callable[[str], None]] = None):
+                 log: Optional[Callable[[str], None]] = None,
+                 fault_hook: Optional[Callable[["GroupWorker", str],
+                                               None]] = None):
         self.gkey = gkey
         self.runtime = runtime
         self.remaining = int(steps)
         self.chunk = max(1, chunk_size or runtime.chunk_size)
         self.log = log
+        self.fault_hook = fault_hook  # fault injection seam (faults.py)
         self.steps_run = 0            # steps completed by THIS worker
         self.exception: Optional[BaseException] = None
+        self.t_failed: Optional[float] = None   # monotonic, at capture
+        self.last_beat = time.monotonic()       # heartbeat: last collect
         self._fence_req = threading.Event()
         self._resume_evt = threading.Event()
         self._stop = False
@@ -123,6 +142,7 @@ class GroupWorker:
             name=f"group-{'+'.join(gkey)[:40]}")
 
     def start(self):
+        self.last_beat = time.monotonic()
         self._thread.start()
 
     # ------------------------------------------------------------- pump
@@ -135,20 +155,29 @@ class GroupWorker:
                     self.fenced.set()
                     self._resume_evt.wait()
                     self.fenced.clear()
+                    self.last_beat = time.monotonic()  # fence ≠ stuck
                     continue
                 if self._stop:
                     break
+                if self.fault_hook is not None:
+                    self.fault_hook(self, "boundary")
                 nxt = self.chunk if self.remaining - L >= self.chunk \
                     else min(1, self.remaining - L)
                 pending = rt.dispatch_chunk(
                     L, prefetch=nxt,
                     count_aimd=L > 1 or self.chunk == 1)
+                if self.fault_hook is not None:
+                    # mid-chunk seam: the chunk is in flight, its collect
+                    # has not run — a kill here loses the in-flight steps
+                    self.fault_hook(self, "inflight")
                 rt.collect_chunk(pending, log=self.log)
                 self.remaining -= L
                 self.steps_run += L
+                self.last_beat = time.monotonic()
                 L = nxt if nxt > 0 else L
         except BaseException as e:          # surfaced by finish()
             self.exception = e
+            self.t_failed = time.monotonic()
         finally:
             self.done.set()
             self.fenced.set()     # a fence waiter must never hang on us
@@ -188,11 +217,16 @@ def join_workers(workers: Dict[GroupKey, "GroupWorker"],
     hanging (the controller-shutdown contract).
 
     Waits for every pump with one shared deadline.  A worker exception
-    stops the remaining pumps at their next boundary, then re-raises
-    chained under ``WorkerFailure``; a worker still alive past the
-    deadline raises ``WorkerFailure`` naming the stuck groups."""
+    stops the remaining pumps at their next boundary, but joining keeps
+    COLLECTING until every pump is done or the deadline expires — so
+    concurrent failures are never masked by the first raise.  The single
+    ``WorkerFailure`` raised at the end carries the complete picture:
+    ``failures`` (every dead group's exception, first one chained as
+    ``__cause__``) and ``stuck`` (every group still alive past the
+    deadline)."""
     deadline = None if timeout is None else time.monotonic() + timeout
     pending = dict(workers)
+    failures: Dict[GroupKey, BaseException] = {}
     while pending:
         for gkey, w in list(pending.items()):
             left = None if deadline is None \
@@ -200,15 +234,28 @@ def join_workers(workers: Dict[GroupKey, "GroupWorker"],
             if w.done.wait(min(left, 0.1) if left is not None else 0.1):
                 pending.pop(gkey)
                 if w.exception is not None:
+                    failures[gkey] = w.exception
+                    # contain the blast: park the healthy pumps at their
+                    # next boundary, then keep collecting their results
                     for other in workers.values():
                         other.stop()
-                    raise WorkerFailure(
-                        f"group {gkey} worker failed: {w.exception!r}"
-                    ) from w.exception
         if deadline is not None and time.monotonic() >= deadline \
                 and pending:
             for other in workers.values():
                 other.stop()
-            raise WorkerFailure(
-                f"worker join timed out after {timeout}s; stuck groups: "
-                f"{sorted(pending)}")
+            break
+    stuck = sorted(pending)
+    if not failures and not stuck:
+        return
+    parts = []
+    if failures:
+        parts.append("group worker(s) failed: " + "; ".join(
+            f"{g}: {e!r}" for g, e in sorted(failures.items())))
+    if stuck:
+        parts.append(f"worker join timed out after {timeout}s; "
+                     f"stuck groups: {stuck}")
+    err = WorkerFailure("  |  ".join(parts), failures=failures,
+                        stuck=stuck)
+    if failures:
+        raise err from next(iter(failures.values()))
+    raise err

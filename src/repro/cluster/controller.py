@@ -51,8 +51,10 @@ from repro.core import throughput as tp
 from repro.core.jobs import JobRuntimeState, LoRAJobSpec
 from repro.core.lora import pad_rank
 from repro.core.scheduler import AdapterScheduler, Group, SchedulerConfig
+from repro.checkpoint.checkpoint import CheckpointCorrupt
 from repro.cluster.control import (GroupWorker, PreparedGroup, RegroupEvent,
                                    WorkerFailure, join_workers)
+from repro.cluster.faults import FailureRecord, FaultPlan
 from repro.elastic.engine import ElasticEngine
 from repro.elastic.migrate import JobTrainState
 from repro.elastic.runtime import GroupRuntime, TrainReport
@@ -130,7 +132,12 @@ class ClusterController:
                  chunk_size: int = 4, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 0, seed: int = 0):
+                 checkpoint_every: int = 0, seed: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_restarts: int = 3, backoff_base_s: float = 0.5,
+                 backoff_max_s: float = 30.0,
+                 stuck_after: Optional[float] = 300.0,
+                 startup_grace_s: float = 120.0):
         self.cfg_of = cfg_of
         self.devices = list(devices if devices is not None
                             else jax.devices())
@@ -189,9 +196,30 @@ class ClusterController:
         self._run_base: Dict[str, int] = {}   # steps_done at begin()
         self._run_chunk: Optional[int] = None
         self._run_log: Optional[Callable[[str], None]] = None
+        self._run_active = False          # a begin() run is in progress
+        self._run_budget = False          # pumps run to each job's budget
         self._prepared: List[PreparedGroup] = []
         self._prewarm_thread: Optional[threading.Thread] = None
         self.regroup_log: List[RegroupEvent] = []
+        # ---------------- supervised fault recovery (DESIGN.md §12)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.fault_plan = fault_plan
+        if fault_plan is not None and checkpoint_dir is not None:
+            fault_plan.checkpoint_dir = checkpoint_dir
+        self.max_restarts = max_restarts
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.stuck_after = stuck_after
+        self.startup_grace_s = startup_grace_s
+        self.quarantined: set = set()         # pool ids removed from duty
+        self.poisoned: Dict[str, JobTrainState] = {}
+        self.failure_log: List[FailureRecord] = []
+        self._restarts: Dict[str, int] = {}
+        self._backoff_until: Dict[str, float] = {}
+        # stuck pumps we abandoned: their devices stay quarantined until
+        # the zombie thread actually exits (it may still touch buffers)
+        self._zombies: List[Tuple[GroupWorker, Tuple[int, ...]]] = []
 
     # ------------------------------------------------------------ registry
     def _cfg(self, base_model: str) -> ModelConfig:
@@ -286,6 +314,12 @@ class ClusterController:
     def _used_device_ids(self) -> set:
         return {i for s in self._slots.values() for i in s.device_ids}
 
+    def available_device_ids(self) -> List[int]:
+        """Pool indices fit for duty: everything not quarantined by the
+        supervisor (lost submeshes, stuck pumps still holding buffers)."""
+        return [i for i in range(len(self.devices))
+                if i not in self.quarantined]
+
     def _submesh(self, device_ids: Tuple[int, ...]):
         if not device_ids:
             return self.fixed_mesh          # None in meshless mode
@@ -299,7 +333,7 @@ class ClusterController:
         if not self.partition:
             return ()
         used = self._used_device_ids()
-        free = [i for i in range(len(self.devices)) if i not in used]
+        free = [i for i in self.available_device_ids() if i not in used]
         return tuple(free[:max(1, want)]) if free else ()
 
     # ------------------------------------------------------------ grouping
@@ -373,18 +407,22 @@ class ClusterController:
     def _plan(self, groups: Sequence[GroupKey], chips: Sequence[int]
               ) -> Dict[GroupKey, Tuple[Tuple[int, ...], int]]:
         """Deterministic pool layout: sorted by (base model, members) so
-        stable compositions keep stable device slices across calls."""
+        stable compositions keep stable device slices across calls.
+        Slices are carved from the AVAILABLE pool only — quarantined
+        devices (lost submeshes, zombie-held) are skipped, so the same
+        grouping lands on healthy hardware after a failure."""
         order = sorted(range(len(groups)),
                        key=lambda i: (self._specs[groups[i][0]].base_model,
                                       groups[i]))
+        avail = self.available_device_ids()
         sizes = device_shares([chips[i] for i in order],
-                              len(self.devices)) if self.partition \
+                              len(avail)) if self.partition \
             else [0] * len(groups)
         plan: Dict[GroupKey, Tuple[Tuple[int, ...], int]] = {}
         cur = 0
         for pos, i in enumerate(order):
             n = sizes[pos] if sizes else 0
-            plan[groups[i]] = (tuple(range(cur, cur + n)), chips[i])
+            plan[groups[i]] = (tuple(avail[cur:cur + n]), chips[i])
             cur += n
         return plan
 
@@ -587,9 +625,12 @@ class ClusterController:
                          if self._run_target else self._chunk_size])
         ev.migrate_s = time.perf_counter() - t_mig - ev.compile_s
 
-        # ---- resume (restart pumps for the rebuilt groups)
+        # ---- resume (restart pumps for the rebuilt groups).  Spawn on
+        # _run_active, not `running`: during an active trace run every
+        # pump may be momentarily done (all groups reaped, an arrival
+        # just landed), yet new groups must still start pumping.
         t_res = time.perf_counter()
-        if running:
+        if self._run_active:
             for g in build:
                 self._spawn_worker(g)
         ev.resume_s = time.perf_counter() - t_res
@@ -620,11 +661,17 @@ class ClusterController:
         scheduler so it prices each proposed rebuild against the
         calibrated regroup cost and keeps the status quo when the
         payback horizon exceeds the members' residual time."""
+        now = time.monotonic()
         by_model: Dict[str, List[str]] = {}
         for jid in self.active_job_ids:
+            if self._backoff_until.get(jid, 0.0) > now:
+                continue        # restored job still in its retry backoff
             by_model.setdefault(self._specs[jid].base_model, []).append(jid)
         groups: List[GroupKey] = []
         weights: List[int] = []
+        # residual capacity excludes quarantined devices: the scheduler
+        # must not hand out chips the pool no longer has
+        pool = len(self.available_device_ids()) if self.partition else None
         for base, ids in sorted(by_model.items()):
             sched = self.scheduler(base)
             jrs = []
@@ -652,7 +699,8 @@ class ClusterController:
                     and all(j in jrs_by_id for j in gkey)]
             for g in sched.schedule(jrs, node_of=node_of,
                                     pressure=pressure,
-                                    current_groups=current):
+                                    current_groups=current,
+                                    pool_chips=pool):
                 groups.append(g.job_ids)
                 weights.append(g.chips)
         return groups, weights
@@ -672,33 +720,62 @@ class ClusterController:
     def _spawn_worker(self, gkey: GroupKey):
         """Start a chunk pump for *gkey* with the remaining per-job
         budget of the active run (a group rebuilt mid-run resumes at
-        the largest member deficit, so nobody under-trains)."""
+        the largest member deficit, so nobody under-trains).  In budget
+        mode the pump self-terminates at the largest member's remaining
+        ``steps_budget`` deficit instead."""
         slot = self._slots[gkey]
         rt = slot.runtime(gkey)
-        for jid in gkey:
-            self._run_base.setdefault(jid, self.steps_done(jid))
-        remaining = max(
-            max(0, self._run_target
-                - (self.steps_done(jid) - self._run_base[jid]))
-            for jid in gkey)
+        if self._run_budget:
+            remaining = max(
+                max(0, self._specs[jid].steps_budget
+                    - self.steps_done(jid))
+                for jid in gkey)
+        else:
+            for jid in gkey:
+                self._run_base.setdefault(jid, self.steps_done(jid))
+            remaining = max(
+                max(0, self._run_target
+                    - (self.steps_done(jid) - self._run_base[jid]))
+                for jid in gkey)
+        if rt.checkpoint_every and rt.checkpoint_dir \
+                and rt.report.steps == 0:
+            # admission-time checkpoint: a fault landing before the
+            # first periodic save must still restore with steps-lost
+            # bounded by the checkpoint period, from step 0 on
+            rt.save_checkpoints()
+        hook = self.fault_plan.worker_hook(gkey) \
+            if self.fault_plan is not None else None
         w = GroupWorker(gkey, rt, remaining, self._run_chunk,
-                        self._run_log)
+                        self._run_log, fault_hook=hook)
         self._workers[gkey] = w
         w.start()      # remaining==0 exits at once; join stays legal
 
-    def begin(self, steps: int, chunk_size: Optional[int] = None,
-              log: Optional[Callable[[str], None]] = None):
+    def begin(self, steps: Optional[int] = None,
+              chunk_size: Optional[int] = None,
+              log: Optional[Callable[[str], None]] = None,
+              until_budget: bool = False):
         """Start the event-driven run: one chunk pump per live group.
         The control thread is then free to plan/prewarm/apply regroups
-        while every group trains; ``finish`` joins and reports."""
+        while every group trains; ``finish`` joins and reports.
+
+        ``until_budget=True`` (no ``steps``) runs each pump to its
+        members' remaining ``steps_budget`` — the trace-harness mode,
+        where completions are reaped (``reap_completed``) and arrivals/
+        failures reshape the pool while the run stays active."""
         assert not self._workers, "a run is already active"
+        assert steps is not None or until_budget, \
+            "begin() needs a step target or until_budget=True"
         for jid in list(self._parked):        # stragglers train solo
+            if self._backoff_until.get(jid, 0.0) > time.monotonic():
+                continue
             self.ensure_group((jid,))
-        self._run_target = int(steps)
+        self._run_budget = bool(until_budget and steps is None)
+        self._run_target = int(steps) if steps is not None else 0
         self._run_chunk = chunk_size
         self._run_log = log
         self._run_base = {jid: self.steps_done(jid)
                           for jid in self.active_job_ids}
+        self._run_active = True
         for gkey in list(self._slots):
             self._spawn_worker(gkey)
 
@@ -715,6 +792,8 @@ class ClusterController:
             self._workers = {}
             self._run_target = 0
             self._run_base = {}
+            self._run_active = False
+            self._run_budget = False
         reports = {g: self._slots[g].runtime(g).report for g in live}
         self._feed_calibrator(reports)
         self.retire_finished()
@@ -733,6 +812,171 @@ class ClusterController:
         for w in self._workers.values():
             w.stop()
         return self.finish(timeout=t)
+
+    # ----------------------------------- supervised recovery (DESIGN §12)
+    def _release_quarantine(self):
+        """Return a stuck pump's devices to duty once its zombie thread
+        has actually exited (until then it may still touch the dead
+        runtime's buffers).  Lost submeshes stay quarantined forever."""
+        still = []
+        for w, ids in self._zombies:
+            if w.alive:
+                still.append((w, ids))
+            else:
+                self.quarantined.difference_update(ids)
+        self._zombies = still
+
+    def poll_failures(self) -> List[Tuple[GroupKey, GroupWorker, str]]:
+        """Detect failed pumps without touching healthy ones: ``dead`` =
+        done with a captured exception; ``stuck`` = alive, not fenced,
+        no heartbeat for ``stuck_after`` seconds (``startup_grace_s``
+        before the first collected chunk — AOT compile legitimately
+        dominates a cold pump's first heartbeat interval)."""
+        out = []
+        now = time.monotonic()
+        for gkey, w in list(self._workers.items()):
+            if w.done.is_set():
+                if w.exception is not None:
+                    out.append((gkey, w, "dead"))
+            elif self.stuck_after is not None and w.alive \
+                    and not w.fenced.is_set():
+                limit = self.stuck_after if w.steps_run > 0 \
+                    else max(self.stuck_after, self.startup_grace_s)
+                if now - w.last_beat > limit:
+                    out.append((gkey, w, "stuck"))
+        return out
+
+    def _restore_state(self, jid: str, spec: LoRAJobSpec,
+                       rec: FailureRecord) -> JobTrainState:
+        """Best available state for a failed job: its latest periodic
+        checkpoint, else (missing/corrupt file) the admission-time init
+        — same crc32 key derivation as ``submit``, so a degraded restart
+        replays the job's original trajectory rather than forking it."""
+        path = os.path.join(self.checkpoint_dir, f"{jid}.npz") \
+            if self.checkpoint_dir else None
+        if path is not None and os.path.exists(path):
+            try:
+                st = JobTrainState.from_checkpoint(
+                    path, spec, self._cfg(spec.base_model),
+                    seed=self.seed)
+                rec.restored_from_checkpoint.append(jid)
+                return st
+            except CheckpointCorrupt:
+                pass           # atomic writes make this rare; fall back
+        key = jax.random.fold_in(
+            self._key, zlib.crc32(jid.encode()) % (2 ** 31))
+        st = JobTrainState.fresh(
+            spec, self._cfg(spec.base_model), key,
+            r_pad=pad_rank(spec.rank, multiple=min(self.block_t, 16)),
+            seed=self.seed)
+        rec.restarted_fresh.append(jid)
+        return st
+
+    def _recover(self, gkey: GroupKey, worker: GroupWorker,
+                 how: str) -> FailureRecord:
+        """Contain one failure to its domain: detach the pump, apply the
+        device policy (free / quarantine), restore every member from its
+        checkpoint with per-job retry accounting, park the survivors
+        behind an exponential backoff, poison chronic failers."""
+        t_detect = time.monotonic()
+        exc = worker.exception
+        kind = getattr(exc, "kind", None) or \
+            ("stuck" if how == "stuck" else "crash")
+        t_fault = getattr(exc, "t_injected", None) or worker.t_failed \
+            or worker.last_beat
+        self._workers.pop(gkey, None)
+        worker.stop()
+        slot = self._slots.pop(gkey, None)
+        steps_before: Dict[str, int] = {}
+        device_ids: Tuple[int, ...] = ()
+        if slot is not None:
+            device_ids = slot.device_ids
+            try:
+                steps_before = dict(
+                    slot.engine.ensure_group(gkey).steps_done)
+            except Exception:
+                steps_before = {}
+        quarantined_now: Tuple[int, ...] = ()
+        if kind == "submesh_loss":
+            self.quarantined.update(device_ids)       # hardware gone
+            quarantined_now = device_ids
+        elif how == "stuck" or kind == "stuck_worker":
+            # the abandoned thread may still touch the dead runtime's
+            # buffers on these devices; hold them until it exits
+            self.quarantined.update(device_ids)
+            quarantined_now = device_ids
+            self._zombies.append((worker, device_ids))
+        rec = FailureRecord(gkey=tuple(gkey), kind=kind,
+                            detect_latency_s=max(0.0, t_detect - t_fault),
+                            quarantined_devices=quarantined_now)
+        for jid in gkey:
+            spec = self._specs[jid]
+            attempts = self._restarts.get(jid, 0) + 1
+            self._restarts[jid] = attempts
+            rec.attempts[jid] = attempts
+            st = self._restore_state(jid, spec, rec)
+            rec.steps_lost[jid] = max(
+                0, steps_before.get(jid, st.steps_done) - st.steps_done)
+            if attempts > self.max_restarts:
+                # poison-job policy: out of the active set for good; the
+                # rest of the cluster keeps going
+                rec.poisoned.append(jid)
+                self.poisoned[jid] = st
+                self._backoff_until.pop(jid, None)
+                continue
+            self._parked[jid] = st
+            backoff = min(self.backoff_max_s,
+                          self.backoff_base_s * (2 ** (attempts - 1)))
+            self._backoff_until[jid] = t_detect + backoff
+        self.failure_log.append(rec)
+        return rec
+
+    def supervise(self, reschedule: bool = True) -> List[FailureRecord]:
+        """One supervisor tick: release healed quarantines, recover
+        every detected failure, re-admit restored jobs whose retry
+        backoff expired, and (optionally) repartition the surviving pool
+        via the overlapped-migration path.  Unaffected pumps are never
+        touched — containment is the whole point."""
+        self._release_quarantine()
+        recs = []
+        for gkey, w, how in self.poll_failures():
+            t0 = time.monotonic()
+            rec = self._recover(gkey, w, how)
+            rec.restore_s = time.monotonic() - t0
+            recs.append(rec)
+        now = time.monotonic()
+        ready = [jid for jid, t in list(self._backoff_until.items())
+                 if t <= now and jid in self._parked]
+        for jid in ready:
+            self._backoff_until.pop(jid, None)
+        if reschedule and (recs or ready):
+            t0 = time.monotonic()
+            self.reschedule()
+            if recs:                       # detection → pumps respawned
+                extra = (time.monotonic() - t0) / len(recs)
+                for rec in recs:
+                    rec.restore_s += extra
+        return recs
+
+    def reap_completed(self) -> List[str]:
+        """Collect pumps that ran out their budget (budget-mode runs):
+        retire members at their step budget, park the rest for the next
+        reschedule.  Pumps still running or failed are left alone (the
+        latter are ``supervise``'s to handle)."""
+        retired = []
+        for gkey, w in list(self._workers.items()):
+            if not w.done.is_set() or w.exception is not None or w.alive:
+                continue
+            self._workers.pop(gkey)
+            if gkey in self._slots:
+                self._dissolve(gkey)       # pump done: boundary export
+            for jid in gkey:
+                if jid in self._parked and self._parked[jid].steps_done \
+                        >= self._specs[jid].steps_budget:
+                    self.finished[jid] = self._parked.pop(jid)
+                    self._had_runtime.discard(jid)
+                    retired.append(jid)
+        return retired
 
     def run(self, steps: int, chunk_size: Optional[int] = None,
             log: Optional[Callable[[str], None]] = None
@@ -819,6 +1063,8 @@ class ClusterController:
             return self._parked[job_id].steps_done
         if job_id in self.finished:
             return self.finished[job_id].steps_done
+        if job_id in self.poisoned:
+            return self.poisoned[job_id].steps_done
         gkey = self._home(job_id)
         assert gkey is not None, f"unknown job {job_id}"
         return self._slots[gkey].runtime(gkey).steps_done[job_id]
@@ -829,6 +1075,8 @@ class ClusterController:
             return self._parked[job_id]
         if job_id in self.finished:
             return self.finished[job_id]
+        if job_id in self.poisoned:
+            return self.poisoned[job_id]
         gkey = self._home(job_id)
         assert gkey is not None, f"unknown job {job_id}"
         return self._slots[gkey].runtime(gkey).export(job_id)

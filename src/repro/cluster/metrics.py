@@ -24,6 +24,37 @@ def _pct(arr: np.ndarray, q: float) -> float:
     return float(np.percentile(arr, q)) if len(arr) else float("inf")
 
 
+def jct_stats(jcts: Sequence[float]) -> Dict[str, float]:
+    """Distribution summary for MEASURED job-completion times (the trace
+    harness's wall-clock JCTs — same shape as ``summarize``'s simulated
+    block, so measured and simulated runs compare side by side)."""
+    arr = np.asarray(list(jcts), float)
+    if arr.size == 0:
+        return {"avg_jct_s": 0.0, "p50_jct_s": 0.0, "p95_jct_s": 0.0,
+                "max_jct_s": 0.0}
+    return {"avg_jct_s": float(arr.mean()),
+            "p50_jct_s": _pct(arr, 50),
+            "p95_jct_s": _pct(arr, 95),
+            "max_jct_s": float(arr.max())}
+
+
+def recovery_stats(failures: Sequence) -> Dict[str, float]:
+    """Aggregate recovery metrics over a run's ``FailureRecord``s."""
+    fails = list(failures)
+    if not fails:
+        return {"faults": 0, "recovered": 0, "max_detect_latency_s": 0.0,
+                "max_restore_s": 0.0, "max_steps_lost": 0,
+                "total_steps_lost": 0}
+    lost = [max(list(f.steps_lost.values()) or [0]) for f in fails]
+    return {"faults": len(fails),
+            "recovered": sum(1 for f in fails if f.recovered),
+            "max_detect_latency_s": max(f.detect_latency_s for f in fails),
+            "max_restore_s": max(f.restore_s for f in fails),
+            "max_steps_lost": int(max(lost)),
+            "total_steps_lost": int(sum(sum(f.steps_lost.values())
+                                        for f in fails))}
+
+
 def compare(results: Dict[str, SimResult],
             baseline: str = "mlora") -> Dict[str, Dict[str, float]]:
     """Relative improvements vs a baseline system (throughput x, JCT x,

@@ -52,7 +52,51 @@ def _model_min_chips(model: str) -> int:
     return min_chips(get_config(model))
 
 
-def generate(cfg: TraceConfig = TraceConfig()) -> List[LoRAJobSpec]:
+class TraceValidationError(ValueError):
+    """A trace is infeasible for the target pool/backend — raised at
+    LOAD time with the offending jobs named, instead of failing deep
+    inside mesh partitioning or backbone init hours into a replay."""
+
+
+def validate_trace(jobs: Sequence[LoRAJobSpec], *,
+                   pool_chips: Optional[int] = None,
+                   executable: bool = False,
+                   models: Optional[Sequence[str]] = None,
+                   max_errors: int = 5) -> List[LoRAJobSpec]:
+    """Fail fast on infeasible jobs.
+
+    ``pool_chips`` rejects any job whose chip demand exceeds the pool;
+    ``executable=True`` rejects base models outside
+    ``cluster.execution.executable_models()`` (the live-controller
+    backend); ``models`` supplies an explicit allowlist instead.  All
+    checks are opt-in because analytic simulations (fig8b/fig9) legally
+    replay models far larger than the executable registry."""
+    allowed = None
+    if models is not None:
+        allowed = set(models)
+    elif executable:
+        from repro.cluster.execution import executable_models
+        allowed = set(executable_models())
+    errs = []
+    for j in jobs:
+        if pool_chips is not None and j.gpus > pool_chips:
+            errs.append(f"{j.job_id}: demands {j.gpus} chips but the "
+                        f"pool has {pool_chips}")
+        if allowed is not None and j.base_model not in allowed:
+            errs.append(f"{j.job_id}: base model {j.base_model!r} not "
+                        f"runnable here (allowed: {sorted(allowed)})")
+        if len(errs) > max_errors:
+            errs.append("...")
+            break
+    if errs:
+        raise TraceValidationError(
+            f"{len(errs)} infeasible trace job(s): " + "; ".join(errs))
+    return list(jobs)
+
+
+def generate(cfg: TraceConfig = TraceConfig(), *,
+             pool_chips: Optional[int] = None,
+             executable: bool = False) -> List[LoRAJobSpec]:
     rng = np.random.default_rng(cfg.seed)
     jobs: List[LoRAJobSpec] = []
     jid = 0
@@ -85,7 +129,8 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[LoRAJobSpec]:
                 ))
                 jid += 1
     jobs.sort(key=lambda j: j.arrival_time)
-    return jobs
+    return validate_trace(jobs, pool_chips=pool_chips,
+                          executable=executable)
 
 
 def scale_arrivals(jobs: Sequence[LoRAJobSpec],
@@ -103,9 +148,13 @@ def month_slice(jobs: Sequence[LoRAJobSpec], month: int) -> List[LoRAJobSpec]:
 
 
 def load_csv(path: str, *, seed: int = 0,
-             max_jobs: Optional[int] = None) -> List[LoRAJobSpec]:
+             max_jobs: Optional[int] = None,
+             pool_chips: Optional[int] = None,
+             executable: bool = False) -> List[LoRAJobSpec]:
     """Load ACMETrace trace_seren.csv (submit_time, duration, gpu_num
-    columns) and sample LoRA attributes per the paper's recipe."""
+    columns) and sample LoRA attributes per the paper's recipe.
+    ``pool_chips``/``executable`` validate feasibility at load time
+    (``validate_trace``)."""
     rng = np.random.default_rng(seed)
     jobs = []
     with open(path) as f:
@@ -122,4 +171,5 @@ def load_csv(path: str, *, seed: int = 0,
                 arrival_time=float(row.get("submit_time", 0.0)),
             ))
     jobs.sort(key=lambda j: j.arrival_time)
-    return jobs
+    return validate_trace(jobs, pool_chips=pool_chips,
+                          executable=executable)

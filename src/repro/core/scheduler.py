@@ -281,7 +281,8 @@ class AdapterScheduler:
     def schedule(self, jobs: Sequence[JobRuntimeState],
                  node_of: Optional[Callable[[str], int]] = None,
                  pressure: bool = False,
-                 current_groups: Optional[Sequence[Group]] = None
+                 current_groups: Optional[Sequence[Group]] = None,
+                 pool_chips: Optional[int] = None
                  ) -> List[Group]:
         """One scheduling round: runnable jobs -> final groups.
 
@@ -291,7 +292,13 @@ class AdapterScheduler:
         current_groups: the LIVE groups this round would transition away
         from — when given, proposals are gated on transition payback
         (``filter_transitions``), so a regroup whose one-time cost
-        exceeds its residual-time benefit is never emitted."""
+        exceeds its residual-time benefit is never emitted.
+
+        pool_chips: residual capacity of the pool that will realize this
+        assignment (the controller passes its AVAILABLE device count —
+        quarantined devices excluded).  Assignments exceeding it are cut
+        down by ``fit_pool`` so the scheduler never hands out chips the
+        pool no longer has."""
         singles = [Group([j], max(j.spec.gpus, 1)) for j in jobs]
         node_of = node_of or (lambda job_id: 0)
 
@@ -308,9 +315,35 @@ class AdapterScheduler:
         if pressure:
             finals = [self.shrink(g) if len(g.jobs) > 1 else g
                       for g in finals]
+        if pool_chips is not None:
+            finals = self.fit_pool(finals, pool_chips)
         if current_groups:
             finals = self.filter_transitions(finals, current_groups)
         return finals
+
+    def fit_pool(self, groups: List[Group], pool_chips: int
+                 ) -> List[Group]:
+        """Cut an assignment down to the pool's residual capacity.
+
+        When the total demand exceeds *pool_chips* (a failure shrank the
+        pool, or demand simply outgrew it), chips are re-assigned by
+        weighted max-min fair share over the demanded widths — the same
+        rule the controller's device allocator applies — with a floor of
+        one abstract chip per group, so every group stays schedulable
+        (an over-subscribed pool time-multiplexes meshless groups rather
+        than dropping them)."""
+        if pool_chips <= 0 or not groups:
+            return groups
+        demand = [max(g.chips, 1) for g in groups]
+        if sum(demand) <= pool_chips:
+            # within capacity: only clamp single groups wider than the
+            # whole pool (a demand no partition could ever satisfy)
+            return [Group(g.jobs, min(g.chips, pool_chips), g.spans_nodes)
+                    if g.chips > pool_chips else g for g in groups]
+        from repro.launch.mesh import device_shares
+        shares = device_shares(demand, pool_chips)
+        return [Group(g.jobs, max(s, 1), g.spans_nodes)
+                for g, s in zip(groups, shares)]
 
     def _pack(self, queue: List[Group], spans: bool,
               pressure: bool = False) -> List[Group]:

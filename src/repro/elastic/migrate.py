@@ -32,7 +32,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.checkpoint import (insert_job, load_job, load_meta,
+from repro.checkpoint.checkpoint import (CheckpointCorrupt, insert_job,
+                                         load_job, load_meta,
                                          restore_stream_state, slice_job)
 from repro.configs.base import ModelConfig
 from repro.core.jobs import LoRAJobSpec
@@ -101,7 +102,11 @@ class JobTrainState:
               if k.startswith("mu/")}
         nu = {k[3:]: jnp.asarray(v) for k, v in z.items()
               if k.startswith("nu/")}
-        assert mu and nu, f"{path} lacks optimizer moments"
+        if not (adapter and mu and nu):
+            # structurally incomplete: a file save_job never produces —
+            # typed so supervised recovery can fall back, not crash
+            raise CheckpointCorrupt(
+                path, "lacks adapter slices or optimizer moments")
         meta = load_meta(z)
         opt_step = int(z["__step__"])
         stream = JobStream(spec, cfg.vocab_size, seed)

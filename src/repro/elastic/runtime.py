@@ -206,6 +206,8 @@ class GroupRuntime:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = int(checkpoint_every)
         self._chunks_collected = 0
+        # steps_done at each member's most recent checkpoint write
+        self.last_checkpoint_step: Dict[str, int] = {}
         # prefetch buffer for the staged-next-chunk overlap; the rewind
         # marks let discard_staged un-consume a prefetched batch when a
         # handoff fence lands before it is dispatched
@@ -549,6 +551,10 @@ class GroupRuntime:
                      step=int(step_vec[idx % step_vec.size]),
                      meta={"steps_done": self.steps_done[spec.job_id],
                            "stream": stream_states[idx]})
+            # bounded-staleness audit trail: the supervisor checks
+            # measured steps-lost per fault against this high-water mark
+            self.last_checkpoint_step[spec.job_id] = \
+                self.steps_done[spec.job_id]
             paths.append(path)
         return paths
 

@@ -467,6 +467,151 @@ def controller_overlapped_migration():
         state_close(a.nu, b.nu)
 
 
+def _ft_setup(fault_kind, phase):
+    """Two 2-job groups on disjoint 2-device submeshes of the 8-device
+    pool, periodic checkpoints every collected chunk, one scripted fault
+    on group B's first member.  Returns (ctl, gkeys, jobs, plan)."""
+    import tempfile
+
+    from repro.cluster.faults import FaultPlan, FaultSpec
+
+    plan = FaultPlan([FaultSpec(fault_kind, job_id="g1j0", at_step=4,
+                                phase=phase)])
+    ctl, cfg = _controller(
+        "threads", seed=3, pool=jax.devices(),
+        checkpoint_dir=tempfile.mkdtemp(prefix="ft_ckpt_"),
+        checkpoint_every=1, fault_plan=plan,
+        max_restarts=3, backoff_base_s=0.02, stuck_after=None)
+    groups = _two_group_jobs(cfg)
+    jobs = [dataclasses.replace(j, steps_budget=12)
+            for js in groups for j in js]
+    for j in jobs:
+        ctl.submit(j)
+    gkeys = [tuple(j.job_id for j in js) for js in groups]
+    ctl.apply_grouping(gkeys, chips=[2, 2])
+    return ctl, gkeys, jobs, plan
+
+
+def _ft_reference(seed=3):
+    """Fault-free sequential reference of the same partition."""
+    ref, cfg = _controller("sequential", seed=seed, pool=jax.devices())
+    groups = _two_group_jobs(cfg)
+    for js in groups:
+        for j in js:
+            ref.submit(dataclasses.replace(j, steps_budget=12))
+    gkeys = [tuple(j.job_id for j in js) for js in groups]
+    ref.apply_grouping(gkeys, chips=[2, 2])
+    for gk in gkeys:                 # drive runtimes directly: keeps the
+        ref._slots[gk].runtime(gk).run(12)   # slots for state readback
+    return ref, gkeys
+
+
+def _ft_wait(cond, ctl, timeout=600):
+    import time
+    t0 = time.monotonic()
+    while not cond():
+        assert time.monotonic() - t0 < timeout, "fault scenario hung"
+        time.sleep(0.05)
+
+
+def controller_fault_recovery():
+    """Failure domains + supervised recovery (DESIGN.md §12): a worker
+    killed MID-CHUNK is contained to its group — the other group's pump
+    is never touched (same worker object, keeps stepping) — and the
+    affected jobs restore from their periodic checkpoint onto a rebuilt
+    submesh, replaying the EXACT batch stream: the post-restore loss
+    trajectory equals the fault-free reference from the checkpoint step
+    on, and steps lost never exceed the checkpoint period."""
+    import time
+
+    ctl, (ga, gb), jobs, plan = _ft_setup("worker_death", "inflight")
+    ref, _ = _ft_reference()
+    ref_losses = {gk: np.asarray(
+        ref._slots[gk].runtime(gk).report.per_job_losses)
+        for gk in (ga, gb)}
+
+    ctl.begin(until_budget=True)
+    w_a = ctl._workers[ga]
+    recs = []
+    _ft_wait(lambda: recs.extend(ctl.supervise(reschedule=False))
+             or recs, ctl)
+    rec = recs[0]
+    assert rec.kind == "worker_death" and rec.gkey == gb, rec
+    assert len(plan.fired) == 1
+    # containment: A's pump is the SAME object, alive or finished clean,
+    # and was never restarted
+    assert ctl._workers[ga] is w_a
+    assert w_a.exception is None
+    # recovery: both members restored from checkpoint, bounded staleness
+    assert sorted(rec.restored_from_checkpoint) == sorted(gb), rec
+    assert not rec.restarted_fresh and not rec.poisoned
+    period = 1 * 2                           # checkpoint_every * chunk
+    assert all(0 <= lost <= period
+               for lost in rec.steps_lost.values()), rec.steps_lost
+    assert not ctl.quarantined                 # devices return to duty
+    ckpt_step = min(ctl._parked[j].steps_done for j in gb)
+    assert ckpt_step >= 4 - period
+
+    # rebuild B on freed devices (A keeps its slice -> kept, not built)
+    time.sleep(0.05)                           # let the retry backoff pass
+    out = ctl.apply_grouping([ga, gb], chips=[2, 2])
+    assert ga in out["keep"] and gb in out["build"], out
+    _ft_wait(lambda: all(w.done.is_set()
+                         for w in ctl._workers.values()), ctl)
+    assert all(w.exception is None for w in ctl._workers.values())
+
+    # replay-exactness: B's post-restore trajectory IS the reference's
+    # from the checkpoint step on (same stream positions replayed)
+    rt_b = ctl._slots[gb].runtime(gb)
+    post = np.asarray(rt_b.report.per_job_losses)
+    losses_close(post, ref_losses[gb][ckpt_step:])
+    # A never faulted and never moved: bit-exact vs the reference
+    rt_a = ctl._slots[ga].runtime(ga)
+    assert np.array_equal(np.asarray(rt_a.report.per_job_losses),
+                          ref_losses[ga])
+    ctl.reap_completed()
+    assert sorted(ctl.finished) == sorted(j.job_id for j in jobs)
+    for j in jobs:
+        assert ctl.steps_done(j.job_id) == 12
+        a, b = ctl.job_state(j.job_id), ref.job_state(j.job_id)
+        assert a.steps_done == b.steps_done
+        state_close(a.adapter, b.adapter)
+
+
+def controller_submesh_loss_containment():
+    """A lost submesh is quarantined permanently: its devices never
+    re-enter the pool, the rebuilt group lands on DISJOINT devices, and
+    every job still completes its budget on the shrunken cluster."""
+    import time
+
+    ctl, (ga, gb), jobs, _ = _ft_setup("submesh_loss", "boundary")
+    lost_devs = set(ctl.group_devices()[gb])
+    ctl.begin(until_budget=True)
+    recs = []
+    _ft_wait(lambda: recs.extend(ctl.supervise(reschedule=False))
+             or recs, ctl)
+    rec = recs[0]
+    assert rec.kind == "submesh_loss" and rec.gkey == gb, rec
+    assert set(rec.quarantined_devices) == lost_devs
+    assert ctl.quarantined == lost_devs
+    avail = set(ctl.available_device_ids())
+    assert not (avail & lost_devs)
+    period = 1 * 2
+    assert all(lost <= period for lost in rec.steps_lost.values()), rec
+
+    time.sleep(0.05)
+    ctl.apply_grouping([ga, gb], chips=[2, 2])
+    new_devs = set(ctl.group_devices()[gb])
+    assert new_devs and not (new_devs & lost_devs), (new_devs, lost_devs)
+    _ft_wait(lambda: all(w.done.is_set()
+                         for w in ctl._workers.values()), ctl)
+    assert all(w.exception is None for w in ctl._workers.values())
+    ctl.reap_completed()
+    assert sorted(ctl.finished) == sorted(j.job_id for j in jobs)
+    assert all(ctl.steps_done(j.job_id) == 12 for j in jobs)
+    assert ctl.quarantined == lost_devs        # forever
+
+
 def execution_backend_sharded():
     """ExecutionBackend measures on a real mesh without falling over."""
     from repro.cluster.execution import ExecutionBackend
@@ -499,7 +644,9 @@ if __name__ == "__main__":
                local_mesh_clamps, execution_backend_sharded,
                controller_concurrent_parity,
                controller_repartition_migration,
-               controller_overlapped_migration):
+               controller_overlapped_migration,
+               controller_fault_recovery,
+               controller_submesh_loss_containment):
         scenario(fn)
     for r in RESULTS:
         print("SCENARIO " + json.dumps(r))

@@ -1,0 +1,372 @@
+"""Fault-tolerance contract (DESIGN.md §12), single-device half.
+
+The multi-device containment/recovery scenarios live in
+tests/sharded_worker.py (controller_fault_recovery,
+controller_submesh_loss_containment); this file covers everything
+provable in-process: atomic checkpoint writes, typed corruption
+errors, multi-failure join semantics, trace validation, pool-aware
+scheduling, the deterministic fault plan, the retry/poison policy, and
+a small end-to-end TraceRunner run on the meshless controller.
+"""
+import dataclasses
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import (CheckpointCorrupt, load_job, save_job)
+from repro.configs import get_config
+from repro.core.jobs import JobRuntimeState, LoRAJobSpec
+from repro.core.scheduler import AdapterScheduler, Group
+from repro.cluster.control import GroupWorker, WorkerFailure, join_workers
+from repro.cluster.controller import ClusterController
+from repro.cluster.faults import FaultPlan, FaultSpec
+from repro.cluster.harness import TraceRunner
+from repro.cluster.metrics import jct_stats, recovery_stats
+from repro.cluster.trace import (TraceConfig, TraceValidationError,
+                                 generate, load_csv, validate_trace)
+from repro.elastic.migrate import JobTrainState
+from repro.elastic.runtime import GroupRuntime
+
+CFG = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                          dtype="float32")
+
+
+def _spec(jid="a", rank=4, batch=2, budget=6):
+    return LoRAJobSpec(jid, rank=rank, batch_size=batch, seq_len=32,
+                       base_model=CFG.name, steps_budget=budget)
+
+
+def _save_one(tmp_path, jid="a", steps=3):
+    """Train a tiny solo group a few steps and checkpoint it."""
+    rt = GroupRuntime.from_specs(
+        CFG, [_spec(jid)], jax.random.PRNGKey(0), impl="xla", block_t=8,
+        lr=1e-2, chunk_size=1, checkpoint_dir=str(tmp_path),
+        checkpoint_every=1)
+    rt.run(steps)
+    rt.save_checkpoints()
+    return os.path.join(str(tmp_path), f"{jid}.npz")
+
+
+# ---------------------------------------------------------------- atomic io
+def test_save_job_crash_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """A crash mid-save must never destroy the previous good file, and
+    must not leave a temp file behind."""
+    path = _save_one(tmp_path)
+    good = open(path, "rb").read()
+
+    real_savez = np.savez
+
+    def dying_savez(f, **kw):
+        real_savez(f, **{k: kw[k] for k in list(kw)[:2]})  # partial write
+        raise OSError("disk died mid-write")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(OSError, match="disk died"):
+        save_job(path, "a", 0, 4, {"w": {"A": np.zeros((4, 4)),
+                                         "B": np.zeros((4, 4))}})
+    monkeypatch.undo()
+    assert open(path, "rb").read() == good     # old checkpoint intact
+    assert not [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    load_job(path)                             # and still loadable
+
+
+def test_load_job_truncated_raises_typed_corrupt(tmp_path):
+    path = _save_one(tmp_path)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 3)
+    with pytest.raises(CheckpointCorrupt) as ei:
+        load_job(path)
+    assert ei.value.path == path and ei.value.reason
+    # the typed error propagates through the high-level restore path too
+    with pytest.raises(CheckpointCorrupt):
+        JobTrainState.from_checkpoint(path, _spec(), CFG)
+
+
+def test_load_job_missing_required_keys(tmp_path):
+    path = str(tmp_path / "bogus.npz")
+    np.savez(path, not_a_checkpoint=np.zeros(3))
+    with pytest.raises(CheckpointCorrupt, match="missing required keys"):
+        load_job(path)
+
+
+def test_load_job_missing_file_stays_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_job(str(tmp_path / "never_saved.npz"))
+
+
+# ------------------------------------------------------------ join semantics
+class _FakeRuntime:
+    chunk_size = 1
+
+    def __init__(self, fail=None, hang_s=0.0):
+        self.fail, self.hang_s = fail, hang_s
+
+    def dispatch_chunk(self, L, prefetch=0, count_aimd=True):
+        if self.hang_s:
+            time.sleep(self.hang_s)            # ignores stop(): wedged
+        if self.fail:
+            raise self.fail
+        return []
+
+    def collect_chunk(self, pending, log=None):
+        pass
+
+
+def test_join_workers_collects_all_failures_and_names_stuck():
+    """One stuck worker must not mask the OTHER workers' exceptions: the
+    single WorkerFailure carries every dead group's exception (first
+    chained as __cause__) and names every stuck group."""
+    e1 = RuntimeError("chunk pump died")
+    e2 = ValueError("second group also died")
+    workers = {
+        ("dead1",): GroupWorker(("dead1",), _FakeRuntime(fail=e1), 4),
+        ("dead2",): GroupWorker(("dead2",), _FakeRuntime(fail=e2), 4),
+        ("wedged",): GroupWorker(("wedged",), _FakeRuntime(hang_s=30.0), 4),
+    }
+    for w in workers.values():
+        w.start()
+    with pytest.raises(WorkerFailure, match="chunk pump died") as ei:
+        join_workers(workers, timeout=2.0)
+    err = ei.value
+    assert set(err.failures) == {("dead1",), ("dead2",)}
+    assert err.failures[("dead2",)] is e2
+    assert err.__cause__ in (e1, e2)
+    assert err.stuck == [("wedged",)]
+    assert "timed out" in str(err) and "wedged" in str(err)
+    assert "second group also died" in str(err)
+
+
+def test_join_workers_clean_set_returns():
+    w = GroupWorker(("ok",), _FakeRuntime(), 2)
+    w.start()
+    join_workers({("ok",): w}, timeout=30.0)
+    assert w.exception is None and w.steps_run == 2
+
+
+# --------------------------------------------------------- trace validation
+def test_validate_trace_rejects_oversized_and_unknown_model():
+    jobs = [_spec("fits", budget=100),
+            dataclasses.replace(_spec("too-wide"), gpus=64),
+            dataclasses.replace(_spec("bad-model"),
+                                base_model="gpt-17-trillion")]
+    with pytest.raises(TraceValidationError) as ei:
+        validate_trace(jobs, pool_chips=8, models=(CFG.name,))
+    msg = str(ei.value)
+    assert "too-wide" in msg and "64 chips" in msg
+    assert "bad-model" in msg and "gpt-17-trillion" in msg
+    assert "fits" not in msg
+    # each check is opt-in: no kwargs -> no validation
+    assert validate_trace(jobs) == jobs
+
+
+def test_generate_validates_at_load_time():
+    cfg = TraceConfig(months=1, jobs_per_month=10, seed=1)
+    with pytest.raises(TraceValidationError):
+        generate(cfg, pool_chips=1)            # gpus>=1 jobs exist w/ >1
+    jobs = generate(cfg, pool_chips=64)
+    assert jobs and all(j.gpus <= 64 for j in jobs)
+    with pytest.raises(TraceValidationError, match="not runnable"):
+        generate(cfg, executable=True)         # 9b models not executable
+
+
+def test_load_csv_validates_at_load_time(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("submit_time,duration,gpu_num\n0,100,4\n5,100,1\n")
+    jobs = load_csv(str(p))
+    assert [j.gpus for j in jobs] == [4, 1]
+    with pytest.raises(TraceValidationError, match="demands 4 chips"):
+        load_csv(str(p), pool_chips=2)
+
+
+# ------------------------------------------------------- pool-aware schedule
+def _jrs(jid, gpus=1):
+    return JobRuntimeState(spec=dataclasses.replace(
+        _spec(jid, budget=1000), gpus=gpus))
+
+
+def test_fit_pool_caps_demand_to_residual_capacity():
+    sched = AdapterScheduler(CFG)
+    groups = [Group([_jrs("a")], 4), Group([_jrs("b")], 4)]
+    # within capacity: untouched
+    assert [g.chips for g in sched.fit_pool(groups, 8)] == [4, 4]
+    # over-subscribed: weighted max-min, floor 1, sums to the pool
+    cut = sched.fit_pool(groups, 5)
+    assert sum(g.chips for g in cut) == 5
+    assert all(g.chips >= 1 for g in cut)
+    # a single group wider than the whole pool is clamped
+    wide = sched.fit_pool([Group([_jrs("w")], 16)], 6)
+    assert wide[0].chips == 6
+    # degenerate pools pass through (meshless mode)
+    assert sched.fit_pool(groups, 0) == groups
+
+
+def test_schedule_respects_pool_chips():
+    sched = AdapterScheduler(CFG)
+    jobs = [_jrs(f"j{i}", gpus=4) for i in range(4)]
+    out = sched.schedule(jobs, pool_chips=6)
+    assert out and sum(g.chips for g in out) <= 6
+    assert sorted(j for g in out for j in g.job_ids) == \
+        sorted(j.spec.job_id for j in jobs)
+
+
+# ------------------------------------------------------------- fault plan
+def test_fault_plan_sample_deterministic():
+    a = FaultPlan.sample(["a", "b", "c"], ["worker_death", "stuck_worker"],
+                         seed=11)
+    b = FaultPlan.sample(["a", "b", "c"], ["worker_death", "stuck_worker"],
+                         seed=11)
+    assert a.faults == b.faults
+    c = FaultPlan.sample(["a", "b", "c"], ["worker_death", "stuck_worker"],
+                         seed=12)
+    assert a.faults != c.faults
+    assert a.pending == a.faults and not a.fired
+
+
+def test_fault_spec_validation():
+    with pytest.raises(AssertionError):
+        FaultSpec("meteor_strike", job_id="a")
+    with pytest.raises(AssertionError):
+        FaultSpec("worker_death", job_id="a", phase="sometime")
+
+
+# ------------------------------------------------- meshless controller e2e
+def _controller(tmp_path, plan=None, stuck_after=None, **kw):
+    ctl = ClusterController(
+        lambda m: CFG, devices=jax.devices()[:1], impl="xla", block_t=8,
+        lr=1e-2, chunk_size=2, seed=0, checkpoint_dir=str(tmp_path),
+        checkpoint_every=1, fault_plan=plan, stuck_after=stuck_after,
+        backoff_base_s=0.01, **kw)
+    ctl.register_cfg(CFG.name, CFG)
+    return ctl
+
+
+def test_recovery_restores_from_checkpoint_and_completes(tmp_path):
+    """Meshless end-to-end: a mid-chunk worker death restores the whole
+    group from its periodic checkpoints (steps lost <= the checkpoint
+    period) and both members still reach their budget."""
+    plan = FaultPlan([FaultSpec("worker_death", job_id="b", at_step=2,
+                                phase="inflight")])
+    ctl = _controller(tmp_path, plan)
+    ctl.submit(_spec("a", budget=8))
+    ctl.submit(_spec("b", rank=8, budget=8))
+    ctl.reschedule()
+    ctl.begin(until_budget=True)
+    # admission-time checkpoints exist before any fault can land
+    assert os.path.exists(tmp_path / "a.npz")
+    assert os.path.exists(tmp_path / "b.npz")
+    t0, recs = time.monotonic(), []
+    while not recs:
+        assert time.monotonic() - t0 < 300
+        recs.extend(ctl.supervise(reschedule=True))
+        time.sleep(0.02)
+    rec = recs[0]
+    assert rec.kind == "worker_death" and rec.recovered
+    # the blast radius is exactly the victim's group (the scheduler may
+    # or may not have fused a+b): every member restored from checkpoint
+    assert "b" in rec.gkey
+    assert sorted(rec.restored_from_checkpoint) == sorted(rec.gkey)
+    assert all(l <= 2 for l in rec.steps_lost.values()), rec.steps_lost
+    assert rec.detect_latency_s >= 0 and rec.restore_s > 0
+    while len(ctl.finished) < 2:
+        assert time.monotonic() - t0 < 300
+        ctl.supervise(reschedule=True)
+        ctl.reap_completed()
+        time.sleep(0.02)
+    ctl.drain()
+    assert ctl.steps_done("a") == 8 and ctl.steps_done("b") == 8
+    assert not ctl.poisoned
+    stats = recovery_stats(ctl.failure_log)
+    assert stats["faults"] == stats["recovered"] == 1
+    assert stats["max_steps_lost"] <= 2
+
+
+def test_poison_policy_parks_chronic_failer_cluster_survives(tmp_path):
+    """A job that keeps killing its worker is retried max_restarts times
+    with exponential backoff, then POISONED — parked for good while the
+    rest of the cluster completes normally."""
+    plan = FaultPlan([FaultSpec("worker_death", job_id="sick", at_step=1)
+                      for _ in range(8)])
+    ctl = _controller(tmp_path, plan, max_restarts=2)
+    ctl.submit(_spec("healthy", budget=6))
+    ctl.submit(_spec("sick", rank=8, budget=50))
+    ctl.reschedule()
+    ctl.begin(until_budget=True)
+    t0 = time.monotonic()
+    while "sick" not in ctl.poisoned or "healthy" not in ctl.finished:
+        assert time.monotonic() - t0 < 300, (dict(ctl.poisoned),
+                                             dict(ctl.finished))
+        ctl.supervise(reschedule=True)
+        ctl.reap_completed()
+        time.sleep(0.02)
+    ctl.drain()
+    assert ctl.steps_done("healthy") == 6
+    assert "sick" not in ctl.active_job_ids
+    sick_recs = [r for r in ctl.failure_log if "sick" in r.gkey]
+    assert max(r.attempts["sick"] for r in sick_recs) == 3  # 1 + 2 retries
+    assert any(r.poisoned == ["sick"] for r in sick_recs)
+    # backoff grew exponentially between attempts
+    assert ctl._restarts["sick"] == 3
+    # job_state still serves the poisoned job's last state
+    assert ctl.job_state("sick") is not None
+
+
+def test_stuck_worker_detected_by_heartbeat(tmp_path):
+    """A wedged pump never raises — it must be caught by the heartbeat
+    (stale last_beat past stuck_after), recovered like a death, and its
+    zombie thread released once it honours stop()."""
+    plan = FaultPlan([FaultSpec("stuck_worker", job_id="w", at_step=2,
+                                stuck_s=120.0)])
+    ctl = _controller(tmp_path, plan, stuck_after=1.5,
+                      startup_grace_s=120.0)
+    ctl.submit(_spec("w", budget=6))
+    ctl.reschedule()
+    ctl.begin(until_budget=True)
+    t0, recs = time.monotonic(), []
+    while not recs:
+        assert time.monotonic() - t0 < 300
+        recs.extend(ctl.supervise(reschedule=True))
+        time.sleep(0.05)
+    rec = recs[0]
+    assert rec.kind in ("stuck_worker", "stuck"), rec
+    assert rec.restored_from_checkpoint == ["w"]
+    assert all(l <= 2 for l in rec.steps_lost.values()), rec.steps_lost
+    while "w" not in ctl.finished:
+        assert time.monotonic() - t0 < 300
+        ctl.supervise(reschedule=True)
+        ctl.reap_completed()
+        time.sleep(0.02)
+    ctl.drain()
+    assert ctl.steps_done("w") == 6 and not ctl.poisoned
+    # the zombie honoured stop(): its (empty, meshless) quarantine is
+    # released and the thread is gone
+    t0 = time.monotonic()
+    while ctl._zombies:
+        assert time.monotonic() - t0 < 60
+        ctl.supervise(reschedule=False)
+        time.sleep(0.05)
+    assert not ctl.quarantined
+
+
+def test_trace_runner_meshless_smoke(tmp_path):
+    jobs = [dataclasses.replace(_spec(f"t{i}", budget=4), arrival_time=i)
+            for i in range(3)]
+    ctl = _controller(tmp_path)
+    res = TraceRunner(ctl, jobs, arrival_window_s=1.0,
+                      max_wall_s=300.0).run()
+    assert sorted(res.completed) == ["t0", "t1", "t2"]
+    assert not res.lost and not res.poisoned and not res.timed_out
+    assert res.total_steps == 12
+    s = res.summary()
+    assert s["lost_jobs"] == 0 and s["completed"] == 3
+    assert s["p50_jct_s"] > 0 and s["utilization"] > 0
+
+
+def test_jct_and_recovery_stats_empty():
+    assert jct_stats([])["p95_jct_s"] == 0.0
+    assert recovery_stats([])["faults"] == 0

@@ -37,6 +37,8 @@ SCENARIOS = [
     "controller_concurrent_parity",
     "controller_repartition_migration",
     "controller_overlapped_migration",
+    "controller_fault_recovery",
+    "controller_submesh_loss_containment",
 ]
 
 
