@@ -1,37 +1,68 @@
-"""Batched multi-adapter serving over one SSM: requests tagged with
-different adapters prefill + decode together through the fused kernel
-(the S-LoRA-style serving counterpart the paper builds on).
+"""Batched multi-adapter serving over one backbone: requests tagged with
+different adapters prefill + decode together through the fused ragged
+kernels (the S-LoRA-style serving counterpart the paper builds on).
+
+Shows the full serving subsystem (DESIGN.md §13): publish adapters into
+an ``AdapterPool``, route adapter-tagged requests through a
+``ServeEngine``, then republish one adapter (a zero-downtime version
+bump) and serve again.
 
     PYTHONPATH=src python examples/serve_adapters.py
 """
+import dataclasses
+
 import numpy as np
+import jax
 
 from repro.configs import get_config
 from repro.core.jobs import LoRAJobSpec
-from repro.train.serve import Request, serve_batch
+from repro.core.ssm import SharedSuperModel
+from repro.serve import AdapterPool, ServeEngine, ServeRequest
 
 
 def main():
-    cfg = get_config("tinyllama-1.1b").reduced()
-    adapters = [
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              dtype="float32")
+    specs = [
         LoRAJobSpec("prod/summarize", rank=16, batch_size=1),
         LoRAJobSpec("prod/translate", rank=8, batch_size=1),
         LoRAJobSpec("canary/rewrite", rank=4, batch_size=1),
     ]
+    ssm = SharedSuperModel(cfg, specs, impl="xla", block_t=8)
+    params, adapters = ssm.init(jax.random.PRNGKey(0))
+
+    pool = AdapterPool(cfg, capacity=4, multiple=ssm.layout.multiple)
+    pool.publish_group(specs, adapters, ssm.layout)
+    engine = ServeEngine(cfg, params, pool, impl="xla", block_t=8)
+
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(6):
         prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 14),
                               dtype=np.int32)
-        reqs.append(Request(prompt=prompt, adapter_id=i % 3,
-                            max_new_tokens=8))
-        print(f"request {i}: adapter={adapters[i % 3].job_id:16s} "
-              f"prompt_len={len(prompt)}")
+        reqs.append(ServeRequest(prompt=prompt,
+                                 adapter=specs[i % 3].job_id,
+                                 max_new_tokens=4 + 2 * (i % 3)))
+        print(f"request {i}: adapter={specs[i % 3].job_id:16s} "
+              f"prompt_len={len(prompt)} max_new={reqs[-1].max_new_tokens}")
 
-    tokens = serve_batch(cfg, adapters, reqs, impl="ref", block_t=8)
+    results = engine.serve(reqs)
     print("\ngenerated token ids (one fused decode stream, 3 adapters):")
-    for i, row in enumerate(tokens):
-        print(f"  req {i} [{adapters[i % 3].job_id:16s}] {row.tolist()}")
+    for i, r in enumerate(results):
+        print(f"  req {i} [{r.adapter:16s}] {r.tokens.tolist()}")
+
+    # live republish: bump one adapter's weights mid-flight — the next
+    # serve picks up the new version, nothing recompiles but the pack
+    nudged = {k: v + 0.01 for k, v in
+              pool._entries["canary/rewrite"].host.items()}
+    v = pool.publish("canary/rewrite", nudged, rank=4)
+    again = engine.serve(reqs)
+    changed = any(
+        not np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(results, again) if a.adapter == "canary/rewrite")
+    print(f"\nrepublished canary/rewrite at version {v}; "
+          f"canary outputs changed: {changed}")
+    print(f"pool stats: {pool.stats}")
 
 
 if __name__ == "__main__":

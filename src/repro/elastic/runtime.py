@@ -99,6 +99,7 @@ class GroupRuntime:
                  grad_sync: str = "gather", tp_mode: str = "dp",
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
+                 publish_pool=None, publish_every: int = 0,
                  seed: int = 0):
         self.cfg = cfg
         self.specs = list(specs)
@@ -208,6 +209,12 @@ class GroupRuntime:
         self._chunks_collected = 0
         # steps_done at each member's most recent checkpoint write
         self.last_checkpoint_step: Dict[str, int] = {}
+        # zero-downtime serving publish (DESIGN.md §13): every N
+        # collected chunks the members' host-resident snapshots flow
+        # into a serve.AdapterPool at the chunk boundary — training
+        # never pauses, the pool versions the swap
+        self.publish_pool = publish_pool
+        self.publish_every = int(publish_every)
         # prefetch buffer for the staged-next-chunk overlap; the rewind
         # marks let discard_staged un-consume a prefetched batch when a
         # handoff fence lands before it is dispatched
@@ -402,6 +409,9 @@ class GroupRuntime:
         if self.checkpoint_every and \
                 self._chunks_collected % self.checkpoint_every == 0:
             self.save_checkpoints(stream_states=pending.stream_states)
+        if self.publish_pool is not None and self.publish_every and \
+                self._chunks_collected % self.publish_every == 0:
+            self.publish_to(self.publish_pool)
         return rep
 
     def run(self, steps: int,
@@ -573,3 +583,20 @@ class GroupRuntime:
 
     def export_all(self) -> List[JobTrainState]:
         return [self.export(jid) for jid in self.job_ids]
+
+    # ----------------------------------------------------------- serving
+    def publish_to(self, pool, job_ids: Optional[Sequence[str]] = None
+                   ) -> Dict[str, int]:
+        """Zero-downtime publish into a serving ``AdapterPool``.
+
+        Exports each member's host-resident ``unfuse_state`` snapshot
+        (non-destructive — ``export`` device_gets a copy, the live
+        fused stack keeps training) and publishes it under the job id.
+        Call between chunks, or let the ``publish_every`` hook fire it
+        at collect time; an in-flight serving batch keeps the stack it
+        was launched with, the next ``acquire`` sees the new version.
+        Returns {job_id: published version}.
+        """
+        return {jid: pool.publish_state(self.export(jid))
+                for jid in (job_ids if job_ids is not None
+                            else self.job_ids)}

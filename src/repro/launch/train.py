@@ -50,8 +50,9 @@ def cmd_serve(args):
                     adapter_id=i % 4, max_new_tokens=args.tokens)
             for i in range(args.requests)]
     out = serve_batch(cfg, jobs, reqs, impl=args.impl, block_t=args.block_t)
-    print(f"generated {out.shape} tokens:")
-    print(out)
+    print(f"generated {len(out)} rows:")
+    for i, row in enumerate(out):
+        print(f"  req {i} [{jobs[i % 4].job_id}] {row.tolist()}")
 
 
 def cmd_simulate(args):

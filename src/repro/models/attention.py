@@ -36,8 +36,11 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       window: Optional[int], chunk: int = 1024) -> jax.Array:
     """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd). Returns (B, Sq, H, hd).
 
-    q_offset: absolute position of q[0] (int or traced scalar).
-    kv_len:   number of valid kv entries (<= Skv), traced ok.
+    q_offset: absolute position of q[0] (int or traced scalar) — or a
+              per-row ``(B,)`` vector (batched decode over right-padded
+              requests whose write heads sit at different positions).
+    kv_len:   number of valid kv entries (<= Skv), traced ok; ``(B,)``
+              per-row in the same batched-decode regime.
     window:   if set, keys with qpos - kpos >= window are masked out.
 
     Static geometry (training/prefill) routes through the flash custom
@@ -104,7 +107,20 @@ def _chunked_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
     if _F32_ATTN:                  # A/B toggle for EXPERIMENTS.md §Perf
         q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
     scale = hd ** -0.5
-    qpos = q_offset + jnp.arange(Sq)
+    # per-row geometry (batched serving decode): (B,) q_offset / kv_len
+    # give every row its own causal frontier.  Masked keys contribute an
+    # exact 0.0 to the online softmax (exp(NEG_BIG - m) underflows), so
+    # a padded fused batch reproduces each row's solo attention.
+    per_row = (getattr(q_offset, "ndim", 0) == 1
+               or getattr(kv_len, "ndim", 0) == 1)
+    if per_row:
+        qpos = (jnp.reshape(jnp.asarray(q_offset), (-1, 1))
+                + jnp.arange(Sq))                       # (B|1, Sq)
+        qpos = jnp.broadcast_to(qpos, (B, Sq))
+        kv_len_b = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(kv_len), (-1, 1)), (B, 1))
+    else:
+        qpos = q_offset + jnp.arange(Sq)
 
     kc = k.reshape(B, n_chunks, chunk, KV, hd).swapaxes(0, 1)
     vc = v.reshape(B, n_chunks, chunk, KV, vd).swapaxes(0, 1)
@@ -115,6 +131,24 @@ def _chunked_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
         kpos = ci * chunk + jnp.arange(chunk)
         s = jnp.einsum("bshd,bchd->bhsc", q, _rep_heads(k_c, G),
                        preferred_element_type=jnp.float32) * scale
+        if per_row:
+            valid = (kpos[None, None, :] < kv_len_b[:, :, None])
+            if causal:
+                valid = valid & (kpos[None, None, :] <= qpos[:, :, None])
+            if window is not None:
+                valid = valid & (kpos[None, None, :]
+                                 > qpos[:, :, None] - window)
+            # s: (B, H, Sq, chunk); valid: (B, Sq, chunk)
+            s = jnp.where(valid[:, None], s, NEG_BIG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhsc,bchd->bshd", p.astype(q.dtype),
+                            _rep_heads(v_c, G),
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+            return (m_new, l, acc), None
         valid = (kpos[None, :] < kv_len)
         if causal:
             valid = valid & (kpos[None, :] <= qpos[:, None])
@@ -256,9 +290,21 @@ class KVCache(NamedTuple):
 
 def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                  pos, ring: bool) -> KVCache:
-    """Insert k/v (B, S, KV, hd) at absolute position *pos*."""
+    """Insert k/v (B, S, KV, hd) at absolute position *pos*.
+
+    ``pos`` may be a per-row ``(B,)`` vector (batched serving decode:
+    each right-padded request writes at its own head) — rows scatter
+    independently; ring buffers only take a shared scalar position.
+    """
     buf = cache.k.shape[1]
     S = k_new.shape[1]
+    if getattr(pos, "ndim", 0) == 1:
+        assert not ring, "per-row cache positions need a full (non-ring) buffer"
+        rows = jnp.arange(cache.k.shape[0])[:, None]
+        cols = pos[:, None] + jnp.arange(S)[None, :]
+        k = cache.k.at[rows, cols].set(k_new.astype(cache.k.dtype))
+        v = cache.v.at[rows, cols].set(v_new.astype(cache.v.dtype))
+        return KVCache(k, v)
     if ring:
         idx = (pos + jnp.arange(S)) % buf
         k = cache.k.at[:, idx].set(k_new.astype(cache.k.dtype))
@@ -274,8 +320,15 @@ def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
 def decode_attention(q: jax.Array, cache: KVCache, pos, *,
                      window: Optional[int], ring: bool,
                      chunk: int = 2048) -> jax.Array:
-    """q: (B, S=1.., H, hd) attending over the cache after update at pos."""
+    """q: (B, S=1.., H, hd) attending over the cache after update at pos.
+
+    ``pos`` scalar, or ``(B,)`` per-row (non-ring only): kv_len and the
+    causal frontier then mask per row, so a fused batch of requests at
+    different depths attends exactly like each would solo.
+    """
     if ring:
+        assert getattr(pos, "ndim", 0) == 0, \
+            "ring decode needs a shared scalar position"
         # ring buffer holds the last `buf` tokens; attention is permutation-
         # invariant over keys so order inside the ring doesn't matter.
         # Supports S=1 (decode) — prefill uses the cache-less path.

@@ -119,11 +119,23 @@ def mla_block(cfg, params: dict, x: jax.Array, *, positions,
     else:
         # ---- absorbed decode (S == 1): score against the latent cache ----
         buf = cache.latent.shape[1]
+        per_row = getattr(cache_pos, "ndim", 0) == 1
         if ring:
+            assert not per_row, "ring decode needs a shared scalar position"
             idx = (cache_pos + jnp.arange(S)) % buf
             lat = cache.latent.at[:, idx].set(latent.astype(cache.latent.dtype))
             rop = cache.rope.at[:, idx].set(k_rope.astype(cache.rope.dtype))
             kv_len = jnp.minimum(cache_pos + S, buf)
+        elif per_row:
+            # batched serving decode: every right-padded request writes
+            # and masks at its own depth (mirrors attention.cache_update)
+            rows = jnp.arange(B)[:, None]
+            cols = cache_pos[:, None] + jnp.arange(S)[None, :]
+            lat = cache.latent.at[rows, cols].set(
+                latent.astype(cache.latent.dtype))
+            rop = cache.rope.at[rows, cols].set(
+                k_rope.astype(cache.rope.dtype))
+            kv_len = cache_pos + S
         else:
             lat = jax.lax.dynamic_update_slice(
                 cache.latent, latent.astype(cache.latent.dtype),
@@ -150,10 +162,16 @@ def mla_block(cfg, params: dict, x: jax.Array, *, positions,
             # invariant over keys, so count-masking suffices.
             valid = jnp.broadcast_to(t_idx[None, :] < kv_len,
                                      (S, lat.shape[1]))
+            s = jnp.where(valid[None, None, :, :], s, -1e30)
+        elif per_row:
+            qpos = cache_pos[:, None] + jnp.arange(S)[None, :]   # (B, S)
+            valid = ((t_idx[None, None, :] < kv_len[:, None, None])
+                     & (t_idx[None, None, :] <= qpos[:, :, None]))
+            s = jnp.where(valid[:, None], s, -1e30)              # (B,H,S,T)
         else:
             qpos = cache_pos + jnp.arange(S)
             valid = (t_idx[None, :] < kv_len) & (t_idx[None, :] <= qpos[:, None])
-        s = jnp.where(valid[None, None, :, :], s, -1e30)
+            s = jnp.where(valid[None, None, :, :], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bhst,btc->bshc", p, lat.astype(jnp.float32))
         out = jnp.einsum("bshc,chv->bshv", ctx, w_v.astype(jnp.float32))

@@ -423,10 +423,21 @@ def forward(cfg: ModelConfig, params: dict, adapters: Optional[dict],
     Returns (logits, aux_loss, new_caches, text_offset).
     logits: (B, S, vocab) — for VLM, S covers patches+text (slice by offset).
     """
+    # per-row cache_pos (B,) — batched serving decode where every
+    # right-padded request sits at its own depth — only reaches the
+    # token frontends (the audio sinusoid stub needs a shared offset)
+    vec_pos = getattr(cache_pos, "ndim", 0) == 1
+    if vec_pos:
+        assert cfg.family not in ("audio",), \
+            "per-row cache positions need token inputs"
     x, text_off = embed_inputs(cfg, params, batch,
-                               pos_offset=cache_pos if cache_pos is not None else 0)
+                               pos_offset=(0 if vec_pos else cache_pos)
+                               if cache_pos is not None else 0)
     B, S, _ = x.shape
-    if cache_pos is not None:
+    if vec_pos:
+        positions = (cache_pos.astype(jnp.int32)[:, None]
+                     + jnp.arange(S, dtype=jnp.int32)[None, :])
+    elif cache_pos is not None:
         positions = cache_pos + jnp.arange(S)[None, :].astype(jnp.int32)
         positions = jnp.broadcast_to(positions, (B, S))
     else:
@@ -514,9 +525,10 @@ def loss_fn(cfg: ModelConfig, params: dict, adapters: dict,
 def decode_step(cfg: ModelConfig, params: dict, adapters: Optional[dict],
                 lora: Optional[MultiLoRA], token: jax.Array, pos,
                 caches: list, *, ring: bool = False):
-    """One decode step. token: (B, 1) int32; pos: scalar position.
+    """One decode step. token: (B, 1..S) int32; pos: scalar position or a
+    per-row ``(B,)`` vector (fused serving: each request at its own depth).
 
-    Returns (logits (B, 1, V), new_caches).
+    Returns (logits (B, S, V), new_caches).
     """
     logits, _, new_caches, _ = forward(
         cfg, params, adapters, lora, {"tokens": token},

@@ -1,0 +1,14 @@
+"""Fused multi-LoRA serving: adapter pool, routing engine, live publish.
+
+Layer map in DESIGN.md §13.  The training side exports portable
+host-resident adapter slices (``GroupRuntime.publish_to`` /
+``unfuse_state``); ``AdapterPool`` owns their device residency (LRU
+spill, H2D prefetch, packed active-set assembly) and ``ServeEngine``
+batches adapter-tagged requests through the same ragged kernel family
+training uses.
+"""
+from repro.serve.engine import ServeEngine, ServeRequest, ServeResult
+from repro.serve.pool import AdapterPool, FusedAdapters
+
+__all__ = ["AdapterPool", "FusedAdapters", "ServeEngine", "ServeRequest",
+           "ServeResult"]

@@ -1,0 +1,240 @@
+"""Serving subsystem: fused-vs-solo exact parity, adapter pool LRU,
+live publish from a training runtime, decode-path bugfix pins.
+
+The load-bearing contract (DESIGN.md §13): a request decoded inside a
+fused multi-adapter batch produces EXACTLY the token ids it would
+produce decoded alone — batch composition, adapter mix, ragged prompt
+depths, and row padding must all be invisible to each request.  Every
+parity assert here is ``array_equal`` on token IDS, not a float
+tolerance: greedy argmax over f32 logits on one backend is
+deterministic, and the per-row position machinery (right padding,
+per-row KV scatter / rope / masking) makes fused and solo bit-identical
+paths, not merely close ones.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.core.ssm import SharedSuperModel
+from repro.models import model as M
+from repro.serve import AdapterPool, ServeEngine, ServeRequest
+
+
+def _engine(cfg, ranks, impl="xla", block_t=8, seed=0, capacity=None):
+    specs = [LoRAJobSpec(f"ad{i}", rank=r, batch_size=1)
+             for i, r in enumerate(ranks)]
+    ssm = SharedSuperModel(cfg, specs, impl=impl, block_t=block_t)
+    params, adapters = ssm.init(jax.random.PRNGKey(seed))
+    pool = AdapterPool(cfg, capacity=capacity or len(specs),
+                       multiple=ssm.layout.multiple)
+    pool.publish_group(specs, adapters, ssm.layout)
+    return specs, ServeEngine(cfg, params, pool, impl=impl,
+                              block_t=block_t), pool
+
+
+def _requests(cfg, specs, n, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        prompt=rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 15)), dtype=np.int32),
+        adapter=specs[i % len(specs)].job_id, max_new_tokens=max_new)
+        for i in range(n)]
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("ranks", [(8,), (16, 8, 4), (16, 8, 4, 2,
+                                                      8, 4, 16, 2)])
+def test_fused_matches_solo_exactly(tiny_cfg, ranks):
+    """K in {1, 3, 8} mixed-rank adapters, ragged prompt lengths: each
+    request's fused tokens == its solo tokens, id-for-id."""
+    specs, engine, _ = _engine(tiny_cfg, ranks)
+    reqs = _requests(tiny_cfg, specs, n=max(4, len(ranks)), max_new=4)
+    fused = engine.serve(reqs)
+    for r, f in zip(reqs, fused):
+        solo = engine.serve([r])[0]
+        assert np.array_equal(f.tokens, solo.tokens), (r.adapter, f, solo)
+
+
+def test_pallas_serve_matches_ref(tiny_cfg):
+    """The decode-shaped ragged Pallas path (interpret mode on CPU)
+    generates the same ids as the ref impl — prefill widths and row
+    counts tile-align so the kernels run legally, and the math agrees."""
+    specs_r, eng_r, _ = _engine(tiny_cfg, (8, 4), impl="ref")
+    specs_p, eng_p, _ = _engine(tiny_cfg, (8, 4), impl="pallas")
+    reqs = _requests(tiny_cfg, specs_r, n=3, max_new=2)
+    out_r = eng_r.serve(reqs)
+    out_p = eng_p.serve(reqs)
+    for a, b in zip(out_r, out_p):
+        assert np.array_equal(a.tokens, b.tokens)
+
+
+def test_generation_matches_cacheless_forward(tiny_cfg):
+    """Ground truth for the position bugfix: engine output == greedy
+    argmax continuation of the CACHE-LESS full forward (no decode
+    caches, no padding, one request at its true absolute positions)."""
+    specs, engine, _ = _engine(tiny_cfg, (16, 4))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, tiny_cfg.vocab_size, size=9, dtype=np.int32)
+    got = engine.serve([ServeRequest(prompt=prompt, adapter="ad1",
+                                     max_new_tokens=5)])[0].tokens
+
+    ssm = SharedSuperModel(tiny_cfg,
+                           [LoRAJobSpec(s.job_id, rank=s.rank, batch_size=1)
+                            for s in specs], impl="xla", block_t=8)
+    params, adapters = ssm.init(jax.random.PRNGKey(0))
+    seq = list(prompt)
+    for _ in range(5):
+        logits, _, _, _ = M.forward(
+            tiny_cfg, params, adapters,
+            ssm.lora_ctx(jnp.ones((1,), jnp.int32)),
+            {"tokens": jnp.asarray([seq], jnp.int32)})
+        seq.append(int(jnp.argmax(logits[0, -1])))
+    assert got.tolist() == seq[len(prompt):]
+
+
+def test_mla_arch_serves_with_parity():
+    """Per-row decode positions also cover the MLA absorbed-latent cache
+    (deepseek): fused == solo on a reduced config."""
+    cfg = dataclasses.replace(get_config("deepseek-v2-lite-16b").reduced(),
+                              dtype="float32")
+    specs, engine, _ = _engine(cfg, (8, 4))
+    reqs = _requests(cfg, specs, n=2, max_new=3)
+    fused = engine.serve(reqs)
+    for r, f in zip(reqs, fused):
+        assert np.array_equal(f.tokens, engine.serve([r])[0].tokens)
+
+
+# --------------------------------------------------------- request shape
+def test_per_request_max_new_and_stop(tiny_cfg):
+    """Each returned row truncates to ITS OWN budget (seed bug: the
+    batch max was returned for everyone), and stop_token cuts the row
+    at (and including) the stop id."""
+    specs, engine, _ = _engine(tiny_cfg, (8, 4))
+    rng = np.random.default_rng(1)
+    mk = lambda n, **kw: ServeRequest(
+        prompt=rng.integers(1, tiny_cfg.vocab_size, size=6, dtype=np.int32),
+        adapter=specs[0].job_id, max_new_tokens=n, **kw)
+    a, b, c = engine.serve([mk(2), mk(7), mk(7)])
+    assert len(a.tokens) == 2 and len(b.tokens) == 7
+    # a's tokens are the same first 2 ids b would have produced had they
+    # shared a prompt — here just pin prefix-consistency on c vs b
+    assert len(c.tokens) == 7
+    stop = int(b.tokens[3])
+    b2 = engine.serve([mk(7, stop_token=stop)])[0]
+    if stop in b2.tokens:
+        cut = np.nonzero(b2.tokens == stop)[0][0]
+        assert len(b2.tokens) == cut + 1
+
+
+def test_engine_rejects_recurrent_mixers():
+    """Right-padded prefill would fold pad tokens into recurrent state;
+    the engine must refuse ssd/rglru configs up front."""
+    for arch in ("mamba2-2.7b", "recurrentgemma-9b"):
+        cfg = get_config(arch).reduced()
+        specs = [LoRAJobSpec("a", rank=4, batch_size=1)]
+        ssm = SharedSuperModel(cfg, specs, impl="ref", block_t=8)
+        params, adapters = ssm.init(jax.random.PRNGKey(0))
+        pool = AdapterPool(cfg, multiple=ssm.layout.multiple)
+        with pytest.raises(ValueError, match="recurrent|ring"):
+            ServeEngine(cfg, params, pool, impl="ref", block_t=8)
+
+
+def test_pad_requests_right_pads(tiny_cfg):
+    """Compat wrapper keeps the (fixed) padding contract: right-padded,
+    tile-aligned, true lens reported."""
+    from repro.train.serve import Request, pad_requests
+    reqs = [Request(prompt=np.arange(1, 6, dtype=np.int32), adapter_id=0),
+            Request(prompt=np.arange(1, 12, dtype=np.int32), adapter_id=1)]
+    out = pad_requests(reqs, pad_to=8)
+    assert out["tokens"].shape[1] % 8 == 0
+    assert out["lens"].tolist() == [5, 11]
+    assert out["tokens"][0, :5].tolist() == list(range(1, 6))
+    assert (out["tokens"][0, 5:] == 0).all()         # RIGHT-padded
+
+
+# ------------------------------------------------------------------ pool
+def test_pool_lru_evict_refetch_round_trip(tiny_cfg):
+    """capacity=2, three adapters: serving the third spills the LRU
+    device copy; re-serving the spilled adapter refetches from the host
+    copy and produces identical tokens."""
+    specs, engine, pool = _engine(tiny_cfg, (8, 4, 16), capacity=2)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, tiny_cfg.vocab_size, size=7, dtype=np.int32)
+               for _ in range(3)]
+    one = lambda i: engine.serve([ServeRequest(
+        prompt=prompts[i], adapter=specs[i].job_id, max_new_tokens=3)])[0]
+
+    first = [one(i) for i in range(3)]
+    assert pool.stats["evictions"] >= 1
+    assert len(pool.resident_names()) <= 2
+    assert not pool.is_resident(specs[0].job_id)     # LRU victim
+    fetches = pool.stats["h2d_fetches"]
+    again = one(0)                                   # forces a refetch
+    assert pool.stats["h2d_fetches"] == fetches + 1
+    assert np.array_equal(again.tokens, first[0].tokens)
+
+
+def test_pool_republish_versions_and_invalidates(tiny_cfg):
+    """Republishing bumps the version, drops the stale pack, and the
+    next serve uses the new weights (zero-downtime swap)."""
+    specs, engine, pool = _engine(tiny_cfg, (8, 4))
+    req = ServeRequest(prompt=np.arange(1, 9, dtype=np.int32),
+                       adapter=specs[0].job_id, max_new_tokens=4)
+    before = engine.serve([req])[0]
+    assert pool.version_of(specs[0].job_id) == 0
+    nudged = {k: v + 0.05 for k, v in
+              pool._entries[specs[0].job_id].host.items()}
+    assert pool.publish(specs[0].job_id, nudged, rank=specs[0].rank) == 1
+    after = engine.serve([req])[0]
+    assert not np.array_equal(before.tokens, after.tokens)
+
+
+# --------------------------------------------------------- live publish
+def test_live_publish_from_group_runtime(tiny_cfg):
+    """Train a group a few steps, publish_to(pool), serve — the
+    published adapter must serve identically to one published from its
+    export() snapshot (the pool round-trips unfuse_state exactly), and
+    the publish_every hook must fire during run()."""
+    from repro.elastic.runtime import GroupRuntime
+    jobs = [LoRAJobSpec("job-a", rank=8, batch_size=1, seq_len=16),
+            LoRAJobSpec("job-b", rank=4, batch_size=1, seq_len=16)]
+    hook_pool = AdapterPool(tiny_cfg, multiple=8)
+    rt = GroupRuntime.from_specs(tiny_cfg, jobs, jax.random.PRNGKey(0),
+                                 lr=1e-2, impl="xla", block_t=8,
+                                 remat=False, chunk_size=2,
+                                 publish_pool=hook_pool, publish_every=1)
+    rt.run(4)                                        # 2 chunks -> 2 fires
+    assert sorted(hook_pool.names) == ["job-a", "job-b"]
+    assert hook_pool.version_of("job-a") == 1        # republished once
+
+    # explicit publish vs snapshot publish: same served tokens
+    pool_live = AdapterPool(tiny_cfg, multiple=8)
+    rt.publish_to(pool_live)
+    pool_snap = AdapterPool(tiny_cfg, multiple=8)
+    for jid in rt.job_ids:
+        pool_snap.publish_state(rt.export(jid))
+
+    prompt = np.arange(1, 10, dtype=np.int32)
+    reqs = [ServeRequest(prompt=prompt, adapter=jid, max_new_tokens=4)
+            for jid in rt.job_ids]
+    out_live = ServeEngine(tiny_cfg, rt.params, pool_live,
+                           impl="xla", block_t=8).serve(reqs)
+    out_snap = ServeEngine(tiny_cfg, rt.params, pool_snap,
+                           impl="xla", block_t=8).serve(reqs)
+    for a, b in zip(out_live, out_snap):
+        assert np.array_equal(a.tokens, b.tokens)
+    # the published slices are the TRAINED weights, not the init: the
+    # pool's host truth must differ from a fresh init's slices
+    ssm = SharedSuperModel(tiny_cfg, jobs, impl="xla", block_t=8)
+    _, adapters0 = ssm.init(jax.random.PRNGKey(0))
+    pool0 = AdapterPool(tiny_cfg, multiple=ssm.layout.multiple)
+    pool0.publish_group(jobs, adapters0, ssm.layout)
+    live = pool_live._entries["job-a"].host
+    init = pool0._entries["job-a"].host
+    assert any(not np.allclose(live[k], init[k]) for k in live)
