@@ -1,0 +1,208 @@
+"""Quantized frozen backbone benchmark (DESIGN.md §14).
+
+Four sections, written to ``BENCH_quant.json`` at the repo root:
+
+  * ``parity``   — the fused dequant-matmul kernel (Pallas-interpret
+    AND the XLA-checkpoint fallback) against the reference expression
+    ``(x @ q) * scale``: exact (bitwise zero diff), because neither
+    path tiles the contraction dimension.  CI gates on this.
+  * ``loss``     — loss-trajectory parity: the SAME fused group (K=2,
+    reduced tinyllama) trained with a bf16 vs an int8 backbone; max
+    relative per-step divergence must stay inside TOL.  CI gates on
+    this — it is the "quantization does not change what jobs learn"
+    contract, measured on real train steps.
+  * ``measured`` — host wall-clock fused-group step times bf16 vs int8
+    (informational: an XLA:CPU host dequants in compiled scalar code,
+    so the HBM-bandwidth win this feature exists for does NOT show in
+    host wall time; no gate).
+  * ``analytic`` — the capacity headlines on TPU-v5e constants, where
+    the feature's economics live: fused-group step time bf16 vs int8
+    at the memory-bound K=8 composition (weight-streaming floor
+    halves), and max feasible K at fixed chips under the explicit
+    per-group memory budget (backbone shard halves).  The acceptance
+    bars: ``int8_speedup_x >= 1.3`` and ``max_k_ratio_x >= 1.5``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import throughput as tp
+from repro.core.jobs import LoRAJobSpec
+from repro.kernels import ops
+from repro.models import quant
+from repro.train.train_loop import train_group
+
+from benchmarks.common import banner
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = ROOT / "BENCH_quant.json"
+
+MODEL = "tinyllama-1.1b"
+TOL = 0.05          # max relative per-step loss divergence bf16 vs int8
+
+# the analytic headline composition: a big dense model whose fused K=8
+# group of tiny-batch jobs sits on the weight-streaming floor — the
+# regime the paper's Fig. 2 shows batching exists for, and where int8
+# halves the floor
+ANALYTIC_MODEL = "recurrentgemma-9b"
+ANALYTIC_CHIPS = 2
+ANALYTIC_K = 8
+ANALYTIC_NANO = 16
+
+
+# ------------------------------------------------------------- parity
+def _parity(seed: int = 0) -> dict:
+    """Max abs diff of both dequant impls vs the reference expression."""
+    rng = np.random.default_rng(seed)
+    T, d_in, d_out = 256, 96, 160
+    x = jnp.asarray(rng.standard_normal((T, d_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)) * 0.2, jnp.float32)
+    qt = quant.quantize_array(w)
+
+    ref = (jnp.dot(x, qt.q.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+           * qt.scale.astype(jnp.float32)[None, :]).astype(x.dtype)
+    out = {}
+    for impl in ("xla", "pallas"):
+        y = ops.dequant_matmul(x, qt.q, qt.scale, impl=impl)
+        out[f"max_abs_diff_{impl}"] = float(jnp.max(jnp.abs(y - ref)))
+    # quantization error itself (sanity context, not a gate)
+    out["dequant_rel_err"] = float(
+        jnp.max(jnp.abs(quant.asarray(qt) - w)) / jnp.max(jnp.abs(w)))
+    return out
+
+
+# --------------------------------------------------------------- loss
+def _jobs(cfg, k: int, steps: int):
+    return [LoRAJobSpec(job_id=f"j{i}", base_model=cfg.name, rank=4,
+                        batch_size=2, seq_len=32, steps_budget=steps)
+            for i in range(k)]
+
+
+def _loss_parity(quick: bool) -> dict:
+    from repro.models import model as M
+    cfg = get_config(MODEL).reduced()
+    steps = 4 if quick else 8
+    jobs = _jobs(cfg, 2, steps)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    kw = dict(steps=steps, lr=1e-2, seed=0, impl="xla", block_t=8,
+              adaptive_nano=False, nano_batches=1, chunk_size=2)
+    losses = {}
+    for tag, mode in (("bf16", None), ("int8", "int8")):
+        res = train_group(cfg, jobs, params=params, quantize=mode, **kw)
+        losses[tag] = [float(l) for l in res["report"].losses]
+    rel = [abs(a - b) / max(abs(a), 1e-9)
+           for a, b in zip(losses["bf16"], losses["int8"])]
+    return {"steps": steps, "bf16": losses["bf16"], "int8": losses["int8"],
+            "max_rel_err": max(rel), "tol": TOL}
+
+
+# ------------------------------------------------------------ measured
+def _measured(quick: bool) -> dict:
+    """Host wall-clock fused-group step time bf16 vs int8 (no gate)."""
+    from repro.models import model as M
+    cfg = get_config(MODEL).reduced()
+    steps = 4 if quick else 8
+    jobs = _jobs(cfg, 4, steps)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    kw = dict(steps=steps, lr=1e-2, seed=0, impl="xla", block_t=8,
+              adaptive_nano=False, nano_batches=1, chunk_size=1)
+    out = {"k": len(jobs), "steps": steps}
+    for tag, mode in (("bf16", None), ("int8", "int8")):
+        t0 = time.perf_counter()
+        res = train_group(cfg, jobs, params=params, quantize=mode, **kw)
+        out[f"step_ms_{tag}"] = 1e3 * res["report"].measured_step_time()
+        out[f"wall_s_{tag}"] = time.perf_counter() - t0
+    return out
+
+
+# ------------------------------------------------------------ analytic
+def _analytic() -> dict:
+    """TPU-v5e roofline headlines: memory-bound K=8 step time and max
+    feasible K, bf16 vs int8."""
+    cfg = get_config(ANALYTIC_MODEL)
+    hw_bf16 = tp.V5E
+    hw_int8 = tp.with_backbone_dtype(tp.V5E, "int8")
+    jobs = [LoRAJobSpec(job_id=f"j{i}", base_model=cfg.name, rank=8,
+                        batch_size=1, seq_len=64, steps_budget=100,
+                        gpus=ANALYTIC_CHIPS) for i in range(ANALYTIC_K)]
+    proto = jobs[0]
+    out = {"model": ANALYTIC_MODEL, "chips": ANALYTIC_CHIPS,
+           "k": ANALYTIC_K, "nano_batches": ANALYTIC_NANO,
+           "job": {"rank": proto.rank, "batch_size": proto.batch_size,
+                   "seq_len": proto.seq_len}}
+    steps = {}
+    for tag, hw in (("bf16", hw_bf16), ("int8", hw_int8)):
+        c = tp.group_step_cost(cfg, jobs, ANALYTIC_CHIPS, hw=hw,
+                               nano_batches=ANALYTIC_NANO)
+        steps[tag] = c
+        out[f"step_s_{tag}"] = c.total
+        out[f"bottleneck_{tag}"] = c.bottleneck
+        out[f"max_k_{tag}"] = tp.max_feasible_k(cfg, proto, ANALYTIC_CHIPS,
+                                                hw=hw)
+        out[f"min_chips_{tag}"] = tp.min_chips(cfg, hw=hw)
+        out[f"mem_gb_per_chip_k8_{tag}"] = tp.group_memory_bytes(
+            cfg, jobs, ANALYTIC_CHIPS, hw=hw) / 1e9
+    out["int8_speedup_x"] = steps["bf16"].total / steps["int8"].total
+    out["max_k_ratio_x"] = out["max_k_int8"] / max(out["max_k_bf16"], 1)
+    return out
+
+
+def run(quick: bool = False) -> dict:
+    banner("Quantized frozen backbone: fused dequant + memory-priced K")
+
+    parity = _parity()
+    print(f"  parity    : xla diff {parity['max_abs_diff_xla']:.1e}  "
+          f"pallas diff {parity['max_abs_diff_pallas']:.1e}  "
+          f"(quant rel err {parity['dequant_rel_err']:.3f})")
+    assert parity["max_abs_diff_xla"] == 0.0, parity
+    assert parity["max_abs_diff_pallas"] == 0.0, parity
+
+    loss = _loss_parity(quick)
+    print(f"  loss      : bf16 {loss['bf16'][-1]:.4f} vs int8 "
+          f"{loss['int8'][-1]:.4f} after {loss['steps']} steps  "
+          f"max rel err {loss['max_rel_err']:.4f} (tol {TOL})")
+    assert loss["max_rel_err"] <= TOL, loss
+
+    measured = _measured(quick)
+    print(f"  measured  : host K={measured['k']} step "
+          f"bf16 {measured['step_ms_bf16']:.1f}ms vs "
+          f"int8 {measured['step_ms_int8']:.1f}ms (informational)")
+
+    analytic = _analytic()
+    print(f"  analytic  : {ANALYTIC_MODEL} K={ANALYTIC_K}@"
+          f"{ANALYTIC_CHIPS} chips  step bf16 "
+          f"{analytic['step_s_bf16']*1e3:.0f}ms"
+          f"({analytic['bottleneck_bf16']}) vs int8 "
+          f"{analytic['step_s_int8']*1e3:.0f}ms"
+          f"({analytic['bottleneck_int8']})  "
+          f"speedup {analytic['int8_speedup_x']:.2f}x")
+    print(f"              max feasible K {analytic['max_k_bf16']} -> "
+          f"{analytic['max_k_int8']} "
+          f"({analytic['max_k_ratio_x']:.2f}x)  min_chips "
+          f"{analytic['min_chips_bf16']} -> {analytic['min_chips_int8']}")
+    assert analytic["int8_speedup_x"] >= 1.3, analytic
+    assert analytic["max_k_ratio_x"] >= 1.5, analytic
+
+    out = {"config": {"model": f"{MODEL}-reduced", "tol": TOL,
+                      "quick": quick},
+           "parity": parity, "loss": loss, "measured": measured,
+           "analytic": analytic}
+    OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"  wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -57,6 +57,7 @@ import jax
 from repro.configs import get_config
 from repro.cluster.controller import ClusterController
 from repro.cluster.faults import FaultPlan, FaultSpec
+from repro.core.scheduler import SchedulerConfig
 from repro.cluster.harness import TraceRunner
 from repro.cluster.trace import TraceConfig, generate, validate_trace
 
@@ -105,11 +106,12 @@ def _fault_plan(jobs, quick: bool) -> FaultPlan:
     return FaultPlan(specs, seed=7)
 
 
-def _controller(plan, quick: bool):
+def _controller(plan, quick: bool, sched=None, concurrency=None):
     cfg = get_config(MODEL).reduced()
     ckpt = tempfile.mkdtemp(prefix="bench_trace_ckpt_")
     ctl = ClusterController(
-        lambda m: cfg, impl="xla", block_t=8, lr=1e-2, remat=False,
+        lambda m: cfg, impl="xla", block_t=8, lr=1e-2,
+        sched=sched, concurrency=concurrency,
         chunk_size=CHUNK, seed=0, checkpoint_dir=ckpt,
         checkpoint_every=CKPT_EVERY, fault_plan=plan,
         max_restarts=3, backoff_base_s=0.2,
@@ -121,8 +123,8 @@ def _controller(plan, quick: bool):
     return ctl
 
 
-def _run(jobs, plan, quick: bool) -> dict:
-    ctl = _controller(plan, quick)
+def _run(jobs, plan, quick: bool, sched=None, concurrency=None) -> dict:
+    ctl = _controller(plan, quick, sched=sched, concurrency=concurrency)
     runner = TraceRunner(ctl, jobs,
                          arrival_window_s=6.0 if quick else 20.0,
                          poll_s=0.05,
@@ -154,6 +156,22 @@ def run(quick: bool = False, inject_faults: bool = True) -> dict:
           f"util {base['utilization']:.2f}")
     out["no_faults"] = base
     assert base["lost_jobs"] == 0 and not base["timed_out"], base
+
+    # cross-system baselines: the SAME trace replayed with grouping
+    # disabled.  "solo" is the mLoRA-style per-adapter regime —
+    # singleton groups on their own concurrent submeshes; "sequential"
+    # is the naive queue — singleton groups run one at a time.  Their
+    # JCT/throughput distributions sit next to the fused run above so
+    # the fused-vs-baseline comparison ships in one artifact.
+    solo_sched = SchedulerConfig(max_group=1)
+    out["baselines"] = {}
+    for mode, conc in (("solo", None), ("sequential", "sequential")):
+        b = _run(jobs, None, quick, sched=solo_sched, concurrency=conc)
+        print(f"  {mode:>10s}: {b['completed']}/{b['jobs']} done in "
+              f"{b['wall_s']:.1f}s  jct p50 {b['p50_jct_s']:.1f}s  "
+              f"util {b['utilization']:.2f}")
+        assert b["lost_jobs"] == 0 and not b["timed_out"], (mode, b)
+        out["baselines"][mode] = b
 
     if inject_faults:
         plan = _fault_plan(jobs, quick)

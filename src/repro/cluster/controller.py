@@ -126,7 +126,8 @@ class ClusterController:
                  transition_aware: bool = True,
                  join_timeout: Optional[float] = 900.0,
                  impl: str = "xla", block_t: int = 8, lr: float = 1e-3,
-                 lr_fn=None, remat: bool = False, nano_batches: int = 1,
+                 lr_fn=None, remat: bool = True,
+                 quantize: Optional[str] = None, nano_batches: int = 1,
                  adaptive_nano: bool = False, aimd_max_n: int = 16,
                  nano_order: str = "job", weight_decay: float = 0.0,
                  chunk_size: int = 4, data_axis: str = "data",
@@ -148,7 +149,13 @@ class ClusterController:
         self.partition = (fixed_mesh is None and len(self.devices) > 1) \
             if partition is None else bool(partition)
         assert not (self.partition and fixed_mesh is not None)
-        self.sched_cfg = sched or SchedulerConfig()
+        # the scheduler must price memory with the SAME remat/quantize
+        # flags the groups will run with (see elastic/runtime.py for
+        # the remat tradeoff; remat=True is the system-wide default)
+        self.remat = remat
+        self.quantize = quantize
+        self.sched_cfg = sched or SchedulerConfig(quantize=quantize,
+                                                  remat=remat)
         # calibration warm-start: a persisted table (OnlineCalibrator
         # .save) restores this machine's fits before the first step
         self.calibration_path = calibration_path
@@ -171,6 +178,7 @@ class ClusterController:
         self._grad_sync = grad_sync
         self._engine_kwargs = dict(
             impl=impl, block_t=block_t, lr=lr, lr_fn=lr_fn, remat=remat,
+            quantize=quantize,
             nano_batches=nano_batches, adaptive_nano=adaptive_nano,
             aimd_max_n=aimd_max_n, nano_order=nano_order,
             weight_decay=weight_decay, chunk_size=chunk_size,
@@ -237,8 +245,14 @@ class ClusterController:
         deterministic from the controller seed (same derivation as a
         solo ``ElasticEngine``), so cross-engine migration is exact."""
         if base_model not in self._backbones:
-            self._backbones[base_model] = M.init_model(
+            params = M.init_model(
                 jax.random.fold_in(self._key, 0), self._cfg(base_model))
+            # quantize ONCE here (quantize_params is deterministic, so
+            # cross-engine migration stays exact); GroupRuntime's own
+            # quantize pass is then an idempotent no-op
+            from repro.models import quant
+            self._backbones[base_model] = quant.quantize_params(
+                params, self.quantize)
         return self._backbones[base_model]
 
     def scheduler(self, base_model: str) -> AdapterScheduler:
@@ -1030,7 +1044,8 @@ class ClusterController:
             if measured > 0:
                 self.calibrator.observe(
                     self._cfg(slot.base_model), rt.specs,
-                    max(len(slot.device_ids), 1), measured)
+                    max(len(slot.device_ids), 1), measured,
+                    backbone_dtype=self.sched_cfg.backbone_dtype)
 
     def _run_roundrobin(self, rts: Dict[GroupKey, GroupRuntime],
                         steps: int, chunk_size: Optional[int], log

@@ -97,7 +97,8 @@ class ExecutionBackend:
     def __init__(self, *, steps_per_measure: int = 2,
                  models: Optional[Sequence[str]] = None,
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
-                 remat: bool = False, mesh=None, data_axis: str = "data",
+                 remat: bool = True, quantize: Optional[str] = None,
+                 mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
                  aimd_max_n: int = 16, nano_order: str = "job",
                  devices: Optional[Sequence] = None,
@@ -119,9 +120,14 @@ class ExecutionBackend:
         # engine construction itself moved into the controller, which
         # receives these same values below
         self._engine_kwargs = dict(impl=impl, block_t=block_t, lr=lr,
-                                   remat=remat, seed=seed, mesh=mesh,
+                                   remat=remat, quantize=quantize,
+                                   seed=seed, mesh=mesh,
                                    data_axis=data_axis,
                                    grad_sync=grad_sync, tp_mode=tp_mode)
+        # the dtype bucket every measurement files under (satellite of
+        # the quantized-backbone work: int8 and bf16 runs of the same
+        # (model, chips, K) must never contaminate each other's fits)
+        self.backbone_dtype = "int8" if quantize == "int8" else "bf16"
         # warm-start: a table persisted by a previous backend run
         # restores this machine's fits before the first measurement
         if calibrator is None and calibration_path is not None \
@@ -140,7 +146,8 @@ class ExecutionBackend:
             calibrator=self.calibrator,
             calibration_path=calibration_path,
             concurrency="sequential", impl=impl, block_t=block_t, lr=lr,
-            remat=remat, chunk_size=1, data_axis=data_axis,
+            remat=remat, quantize=quantize,
+            chunk_size=1, data_axis=data_axis,
             grad_sync=grad_sync, tp_mode=tp_mode,
             aimd_max_n=aimd_max_n, nano_order=nano_order, seed=seed)
         self._cfgs: Dict[str, ModelConfig] = {}
@@ -184,7 +191,9 @@ class ExecutionBackend:
         rt = self.controller.ensure_group(group.job_ids, chips=group.chips)
         # calibrated prediction BEFORE this observation updates the fit —
         # the honest "what would the calibrated oracle have said" number
-        pred_cal = self.calibrator.predict(cfg, group.specs, group.chips) \
+        pred_cal = self.calibrator.predict(
+            cfg, group.specs, group.chips,
+            backbone_dtype=self.backbone_dtype) \
             if self.calibrator.calibrated else -1.0
         # chunk_size=1: the backend is a measurement instrument — per-step
         # wall times are the signal, so keep step-at-a-time granularity
@@ -192,7 +201,8 @@ class ExecutionBackend:
         # outlier lands in the window either way).
         rt.run(self.steps_per_measure, chunk_size=1)
         measured = rt.report.measured_step_time(self.steps_per_measure)
-        self.calibrator.observe(cfg, group.specs, group.chips, measured)
+        self.calibrator.observe(cfg, group.specs, group.chips, measured,
+                                backbone_dtype=self.backbone_dtype)
         self.records.append(StepRecord(
             t=now, base_model=base, job_ids=tuple(group.job_ids),
             chips=group.chips, predicted=predicted, measured=measured,

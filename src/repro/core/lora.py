@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.jobs import LoRAJobSpec
+from repro.models.quant import qdot
 
 
 def pad_rank(r_max: int, multiple: int = 8) -> int:
@@ -312,8 +313,12 @@ class MultiLoRA:
 def proj(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
          lora: Optional[MultiLoRA] = None,
          ab: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
-    """Frozen dense projection + optional fused multi-LoRA delta."""
-    y = x @ w
+    """Frozen dense projection + optional fused multi-LoRA delta.
+
+    ``w`` may be a quantized ``models/quant.QuantTensor`` — ``qdot``
+    fuses the int8 dequant into the base matmul; the LoRA delta path is
+    untouched (adapters stay high precision and take the gradient)."""
+    y = qdot(x, w)
     if b is not None:
         y = y + b.astype(y.dtype)
     if lora is not None and ab is not None:

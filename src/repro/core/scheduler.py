@@ -62,6 +62,27 @@ class SchedulerConfig:
     #                               which over-penalizes mixed-rank merges)
     min_gain: float = 1.02        # merge must beat sum-of-parts by ≥2%
     max_group: int = 8            # SSM stack width cap (K)
+    # backbone storage mode the groups will actually run with: None =
+    # bf16, "int8" = quantized frozen backbone (models/quant).  Prices
+    # the weight-streaming floor, min_chips, the memory gate, and picks
+    # the calibrator's dtype bucket.
+    quantize: Optional[str] = None
+    # remat flag the runtimes will train with — the memory gate's
+    # activation high-water depends on it (see elastic/runtime.py for
+    # the speed/memory tradeoff discussion).
+    remat: bool = True
+    # HBM fraction the memory gate may fill (rest: fragmentation +
+    # collective buffers)
+    mem_headroom: float = 0.9
+
+    @property
+    def backbone_dtype(self) -> str:
+        return "int8" if self.quantize == "int8" else "bf16"
+
+    @property
+    def priced_hw(self) -> tp.HardwareSpec:
+        """`hw` repriced for the configured backbone storage dtype."""
+        return tp.with_backbone_dtype(self.hw, self.backbone_dtype)
 
 
 class AdapterScheduler:
@@ -84,11 +105,12 @@ class AdapterScheduler:
     # ------------------------------------------------------------ oracle
     def hw_for(self, chips: int, k: int = 1) -> tp.HardwareSpec:
         """Hardware constants used to price a K-job group on *chips* —
-        the calibrated fit when one exists, the static config
-        otherwise."""
+        the calibrated fit for the configured backbone dtype when one
+        exists, the static (dtype-repriced) config otherwise."""
         if self.calibrator is None:
-            return self.sched.hw
-        return self.calibrator.hw_for(self.cfg.name, chips, k)
+            return self.sched.priced_hw
+        return self.calibrator.hw_for(self.cfg.name, chips, k,
+                                      self.sched.backbone_dtype)
 
     def throughput(self, group: Group) -> float:
         return tp.group_throughput(self.cfg, group.specs, group.chips,
@@ -204,6 +226,16 @@ class AdapterScheduler:
             return False
         if len({j.spec.seq_len for j in g.jobs}) != 1:
             return False       # fused batch layout requires shared seq_len
+        # explicit per-group memory budget: backbone shard + per-job
+        # adapter/Adam state + activation high-water under the group's
+        # remat flag must fit per-chip HBM.  This is the K-per-device
+        # capacity gate — int8 backbones halve the dominant term, which
+        # is how quantization raises packable K.
+        if not tp.memory_feasible(self.cfg, g.specs, g.chips,
+                                  hw=self.sched.priced_hw,
+                                  remat=self.sched.remat,
+                                  headroom=self.sched.mem_headroom):
+            return False
         deltas = tp.slowdowns(self.cfg, g.specs, g.chips,
                               hw=self.hw_for(g.chips, len(g.jobs)),
                               spans_nodes=g.spans_nodes,
@@ -254,9 +286,16 @@ class AdapterScheduler:
         member stays within (margin x) its slowdown bound.  Freed chips let
         the cluster admit more jobs — the capacity story behind the paper's
         JCT gains."""
-        floor = max(tp.min_chips(self.cfg, hw=self.sched.hw), 1)
+        floor = max(tp.min_chips(self.cfg, hw=self.sched.priced_hw), 1)
 
         def ok(c: int) -> bool:
+            # shrinking concentrates the group onto fewer chips — the
+            # per-chip memory high-water must keep fitting
+            if not tp.memory_feasible(self.cfg, g.specs, c,
+                                      hw=self.sched.priced_hw,
+                                      remat=self.sched.remat,
+                                      headroom=self.sched.mem_headroom):
+                return False
             deltas = tp.slowdowns(self.cfg, g.specs, c,
                                   hw=self.hw_for(c, len(g.jobs)),
                                   spans_nodes=g.spans_nodes,

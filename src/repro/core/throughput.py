@@ -54,9 +54,26 @@ class HardwareSpec:
     # against it (payback-horizon gating) until measured stalls replace
     # it via OnlineCalibrator.observe_regroup.
     regroup_overhead: float = 30.0
+    # backbone storage bytes per frozen parameter: 2.0 = bf16, 1.0 =
+    # int8 (models/quant).  Prices BOTH the weight-streaming roofline
+    # floor (group_step_cost) and the resident HBM shard (min_chips /
+    # group_memory_bytes) — quantization halves each, which is exactly
+    # what makes it a capacity AND bandwidth lever for memory-bound
+    # fused groups.
+    backbone_bytes_per_param: float = 2.0
 
 
 V5E = HardwareSpec()
+
+_BACKBONE_BYTES = {"bf16": 2.0, "int8": 1.0}
+
+
+def with_backbone_dtype(hw: HardwareSpec, dtype: str) -> HardwareSpec:
+    """HardwareSpec repriced for a backbone storage dtype tag."""
+    bpp = _BACKBONE_BYTES[dtype]
+    if hw.backbone_bytes_per_param == bpp:
+        return hw
+    return dataclasses.replace(hw, backbone_bytes_per_param=bpp)
 
 
 # ----------------------------------------------------------- param math
@@ -269,7 +286,8 @@ def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
     lora_pad_params = sum(
         (_padded_rank(j.rank) if ragged_kernels else r_max_pad) * dims
         for j in jobs)
-    wbytes = (total_p * 2 + lora_pad_params * 2) / chips
+    wbytes = (total_p * hw.backbone_bytes_per_param
+              + lora_pad_params * 2) / chips
     t_memory = wbytes * 3 * max(1, nano_batches if kernel_fused else 1) \
         / hw.hbm_bw
     act_bytes = tokens * cfg.d_model * 2 * 12 / chips
@@ -347,13 +365,81 @@ def residual_capacity(cfg: ModelConfig, job: LoRAJobSpec, *,
 
 
 def min_chips(cfg: ModelConfig, *, hw: HardwareSpec = V5E) -> int:
-    """Smallest chip count whose HBM holds the bf16 backbone shard."""
+    """Smallest chip count whose HBM holds the backbone shard at
+    ``hw.backbone_bytes_per_param`` (2.0 bf16 / 1.0 int8)."""
     total, _ = param_counts(cfg)
-    need = total * 2 * 1.3          # +30% activations/fragmentation slack
+    # +30% activations/fragmentation slack
+    need = total * hw.backbone_bytes_per_param * 1.3
     c = 1
     while need / c > hw.hbm_capacity:
         c *= 2
     return c
+
+
+# ----------------------------------------------------------- memory model
+def group_memory_bytes(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                       chips: int, *, hw: HardwareSpec = V5E,
+                       remat: bool = True) -> float:
+    """Per-chip HBM high-water mark of one fused group step.
+
+    Three resident terms, each sharded over *chips*:
+
+      * backbone shard at ``hw.backbone_bytes_per_param`` (the tentpole
+        lever: int8 halves it);
+      * per-job adapter state at PADDED rank — f32 master weights plus
+        the two same-shaped AdamW moments (12 B/param), the only
+        trainable (and therefore optimizer-bearing) parameters;
+      * activation high-water under the group's remat flag.  With remat
+        the fused step keeps one residual per layer boundary plus the
+        live working set of the layer being recomputed (~12
+        d_model-sized intermediates); without remat every layer's
+        intermediates survive to the backward.
+
+    This is the scheduler's explicit K-per-device feasibility gate
+    (AdapterScheduler._feasible) — it replaces the old implicit
+    max_group hard cap as the binding capacity constraint.
+    """
+    assert chips >= 1
+    total_p, _ = param_counts(cfg)
+    backbone = total_p * hw.backbone_bytes_per_param / chips
+
+    dims = lora_dims_per_rank(cfg)
+    adapter_params = sum(_padded_rank(j.rank) * dims for j in jobs)
+    adapters = adapter_params * 12.0 / chips     # f32 + Adam m + Adam v
+
+    tokens = sum(j.batch_size * j.seq_len for j in jobs)
+    L = max(cfg.num_layers, 1)
+    per_tok = cfg.d_model * 2                     # bf16 activations
+    if remat:
+        acts = tokens * per_tok * (L + 12) / chips
+    else:
+        acts = tokens * per_tok * L * 12 / chips
+    return backbone + adapters + acts
+
+
+def memory_feasible(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                    chips: int, *, hw: HardwareSpec = V5E,
+                    remat: bool = True, headroom: float = 0.9) -> bool:
+    """True iff the group's per-chip high-water fits in HBM with
+    *headroom* slack left for fragmentation/collective buffers."""
+    return group_memory_bytes(cfg, jobs, chips, hw=hw, remat=remat) \
+        <= hw.hbm_capacity * headroom
+
+
+def max_feasible_k(cfg: ModelConfig, job: LoRAJobSpec, chips: int, *,
+                   hw: HardwareSpec = V5E, remat: bool = True,
+                   headroom: float = 0.9, k_cap: int = 256) -> int:
+    """Largest K such that K clones of *job* fit on *chips* — the
+    capacity headline BENCH_quant reports (int8 vs bf16)."""
+    k = 0
+    while k < k_cap:
+        jobs = [dataclasses.replace(job, job_id=f"j{i}")
+                for i in range(k + 1)]
+        if not memory_feasible(cfg, jobs, chips, hw=hw, remat=remat,
+                               headroom=headroom):
+            break
+        k += 1
+    return k
 
 
 # ----------------------------------------------------- online calibration
@@ -399,6 +485,15 @@ class OnlineCalibrator:
     XLA:CPU (DESIGN.md §9).  Per-K buckets are the online analogue of
     the paper's per-configuration micro-benchmarks.
 
+    Buckets ALSO include the backbone storage dtype ("bf16" | "int8"):
+    an int8 group runs a different machine program (fused dequant
+    epilogue, half the weight streaming) with a different analytic
+    regressor, so folding its measurements into the bf16 bucket for the
+    same (model, chips, K) would contaminate both fits.  The regressor
+    x is always priced with the dtype-matched base constants
+    (``with_backbone_dtype``), keeping each fit's frame of reference
+    self-consistent.
+
     EWMA weighting (``decay`` per observation) tracks drift — thermal
     throttling, host load, dataset-shape shifts; with at least
     ``min_obs`` observations and a well-spread x the two-parameter fit
@@ -416,8 +511,9 @@ class OnlineCalibrator:
         self.hw = hw
         self.decay = decay
         self.min_obs = max(1, int(min_obs))
-        self._buckets: Dict[Tuple[str, int, int], _CalBucket] = {}
-        self._hw_cache: Dict[Tuple[str, int, int], HardwareSpec] = {}
+        # key: (model, chips, K, backbone_dtype)
+        self._buckets: Dict[Tuple[str, int, int, str], _CalBucket] = {}
+        self._hw_cache: Dict[Tuple[str, int, int, str], HardwareSpec] = {}
         # measured regroup stalls (pause+migrate+compile+resume), EWMA
         # per base model — the transition-cost term the scheduler prices
         # payback horizons with.  One bucket per model (not per K): the
@@ -427,19 +523,24 @@ class OnlineCalibrator:
 
     # ------------------------------------------------------------- intake
     def machine_time(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
-                     chips: int, **kw) -> float:
+                     chips: int, *, backbone_dtype: str = "bf16",
+                     **kw) -> float:
         """The regressor x: analytic step time minus framework overhead,
-        priced with the UNCALIBRATED base constants."""
-        return group_step_cost(cfg, jobs, chips, hw=self.hw, **kw).total \
+        priced with the UNCALIBRATED base constants (repriced for the
+        group's backbone storage dtype)."""
+        hw = with_backbone_dtype(self.hw, backbone_dtype)
+        return group_step_cost(cfg, jobs, chips, hw=hw, **kw).total \
             - self.hw.step_overhead
 
     def observe(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
-                chips: int, measured: float, **kw):
-        """Fold one measured step time into its (model, chips, K)
-        bucket."""
+                chips: int, measured: float, *,
+                backbone_dtype: str = "bf16", **kw):
+        """Fold one measured step time into its (model, chips, K,
+        backbone dtype) bucket."""
         assert measured > 0, measured
-        x = self.machine_time(cfg, jobs, chips, **kw)
-        key = (cfg.name, int(chips), len(jobs))
+        x = self.machine_time(cfg, jobs, chips,
+                              backbone_dtype=backbone_dtype, **kw)
+        key = (cfg.name, int(chips), len(jobs), backbone_dtype)
         b = self._buckets.setdefault(key, _CalBucket())
         r = self.decay
         b.sw = b.sw * r + 1.0
@@ -457,10 +558,10 @@ class OnlineCalibrator:
         self._hw_cache.clear()
 
     # -------------------------------------------------------------- fits
-    def fit(self, model: str, chips: int,
-            k: int = 1) -> Optional[Tuple[float, float]]:
+    def fit(self, model: str, chips: int, k: int = 1,
+            backbone_dtype: str = "bf16") -> Optional[Tuple[float, float]]:
         """(alpha, beta) for the bucket, or None while uncalibrated."""
-        b = self._buckets.get((model, int(chips), int(k)))
+        b = self._buckets.get((model, int(chips), int(k), backbone_dtype))
         if b is None or b.n < self.min_obs or b.sw <= 0:
             return None
         mean_x = b.sx / b.sw
@@ -485,18 +586,19 @@ class OnlineCalibrator:
             alpha, beta = b.sxy / b.sxx, 0.0
         return (alpha, beta) if alpha > 0 else None
 
-    def _nearest_fit(self, model: str, chips: int,
-                     k: int) -> Optional[Tuple[float, float]]:
-        """Fall back to the calibrated SAME-K bucket with the nearest
-        chip count — the scheduler probes chip counts it has never run,
-        and effective constants vary slowly with scale.  Never borrow
-        across group sizes: that is exactly the composition error the
-        per-K buckets exist to avoid."""
+    def _nearest_fit(self, model: str, chips: int, k: int,
+                     backbone_dtype: str) -> Optional[Tuple[float, float]]:
+        """Fall back to the calibrated SAME-K SAME-DTYPE bucket with the
+        nearest chip count — the scheduler probes chip counts it has
+        never run, and effective constants vary slowly with scale.
+        Never borrow across group sizes or backbone dtypes: those are
+        exactly the composition/program errors the bucket key exists to
+        avoid."""
         best, best_d = None, float("inf")
-        for (m, c, kb), _ in self._buckets.items():
-            if m != model or kb != k:
+        for (m, c, kb, dt), _ in self._buckets.items():
+            if m != model or kb != k or dt != backbone_dtype:
                 continue
-            f = self.fit(m, c, kb)
+            f = self.fit(m, c, kb, dt)
             if f is None:
                 continue
             d = abs(np.log(max(c, 1) / max(chips, 1)))
@@ -505,37 +607,40 @@ class OnlineCalibrator:
         return best
 
     # ------------------------------------------------------------ oracle
-    def hw_for(self, model: str, chips: int,
-               k: int = 1) -> HardwareSpec:
-        """Calibrated `HardwareSpec` for (model, chips, K); the base
-        constants when the bucket (and every same-K same-model
-        neighbour) is still uncalibrated."""
-        key = (model, int(chips), int(k))
+    def hw_for(self, model: str, chips: int, k: int = 1,
+               backbone_dtype: str = "bf16") -> HardwareSpec:
+        """Calibrated `HardwareSpec` for (model, chips, K, dtype); the
+        dtype-repriced base constants when the bucket (and every same-K
+        same-dtype same-model neighbour) is still uncalibrated."""
+        key = (model, int(chips), int(k), backbone_dtype)
         hit = self._hw_cache.get(key)
         if hit is not None:
             return hit
-        f = self.fit(model, chips, k) or self._nearest_fit(model, chips, k)
+        base = with_backbone_dtype(self.hw, backbone_dtype)
+        f = self.fit(model, chips, k, backbone_dtype) \
+            or self._nearest_fit(model, chips, k, backbone_dtype)
         if f is None:
-            hw = self.hw
+            hw = base
         else:
             alpha, beta = f
             hw = dataclasses.replace(
-                self.hw,
-                mfu_cap=self.hw.mfu_cap / alpha,
-                hbm_bw=self.hw.hbm_bw / alpha,
-                ici_bw=self.hw.ici_bw / alpha,
-                dcn_bw=self.hw.dcn_bw / alpha,
-                launch_overhead=self.hw.launch_overhead * alpha,
-                sync_latency=self.hw.sync_latency * alpha,
+                base,
+                mfu_cap=base.mfu_cap / alpha,
+                hbm_bw=base.hbm_bw / alpha,
+                ici_bw=base.ici_bw / alpha,
+                dcn_bw=base.dcn_bw / alpha,
+                launch_overhead=base.launch_overhead * alpha,
+                sync_latency=base.sync_latency * alpha,
                 step_overhead=beta)
         self._hw_cache[key] = hw
         return hw
 
     def predict(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
-                chips: int, **kw) -> float:
+                chips: int, *, backbone_dtype: str = "bf16",
+                **kw) -> float:
         """Calibrated step-time prediction (falls back to the base oracle
         while uncalibrated)."""
-        hw = self.hw_for(cfg.name, chips, len(jobs))
+        hw = self.hw_for(cfg.name, chips, len(jobs), backbone_dtype)
         return group_step_cost(cfg, jobs, chips, hw=hw, **kw).total
 
     # ------------------------------------------------- transition pricing
@@ -566,9 +671,10 @@ class OnlineCalibrator:
             "min_obs": self.min_obs,
             "hw": dataclasses.asdict(self.hw),
             "buckets": [
-                {"model": m, "chips": c, "k": k, "sw": b.sw, "sx": b.sx,
+                {"model": m, "chips": c, "k": k, "dtype": dt,
+                 "sw": b.sw, "sx": b.sx,
                  "sy": b.sy, "sxx": b.sxx, "sxy": b.sxy, "n": b.n}
-                for (m, c, k), b in self._buckets.items()],
+                for (m, c, k, dt), b in self._buckets.items()],
             "regroup": {m: {"mean": mean, "n": n}
                         for m, (mean, n) in self._regroup.items()},
         }
@@ -588,7 +694,9 @@ class OnlineCalibrator:
         cal = cls(HardwareSpec(**d["hw"]), decay=d["decay"],
                   min_obs=d["min_obs"])
         for b in d["buckets"]:
-            cal._buckets[(b["model"], int(b["chips"]), int(b["k"]))] = \
+            key = (b["model"], int(b["chips"]), int(b["k"]),
+                   b.get("dtype", "bf16"))   # pre-quant files: all bf16
+            cal._buckets[key] = \
                 _CalBucket(sw=b["sw"], sx=b["sx"], sy=b["sy"],
                            sxx=b["sxx"], sxy=b["sxy"], n=int(b["n"]))
         for m, r in d.get("regroup", {}).items():
@@ -597,14 +705,14 @@ class OnlineCalibrator:
 
     @property
     def calibrated(self) -> bool:
-        return any(self.fit(m, c, k) is not None
-                   for m, c, k in self._buckets)
+        return any(self.fit(m, c, k, dt) is not None
+                   for m, c, k, dt in self._buckets)
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         out = {}
-        for (m, c, k), b in self._buckets.items():
-            f = self.fit(m, c, k)
-            out[f"{m}@{c}xK{k}"] = {
+        for (m, c, k, dt), b in self._buckets.items():
+            f = self.fit(m, c, k, dt)
+            out[f"{m}@{c}xK{k}:{dt}"] = {
                 "observations": b.n,
                 "alpha": f[0] if f else float("nan"),
                 "beta": f[1] if f else float("nan"),

@@ -42,6 +42,7 @@ class ElasticEngine:
                  scheduler: Optional[AdapterScheduler] = None,
                  impl: str = "ref", block_t: int = 8, lr: float = 1e-3,
                  lr_fn: Optional[Callable] = None, remat: bool = True,
+                 quantize: Optional[str] = None,
                  nano_batches: int = 1, adaptive_nano: bool = False,
                  aimd_max_n: int = 16, nano_order: str = "job",
                  weight_decay: float = 0.0, chunk_size: int = 4,
@@ -60,7 +61,7 @@ class ElasticEngine:
         # §8); migration state (JobTrainState) is mesh-agnostic, so jobs
         # move losslessly between engines of different meshes.
         self._rt_kwargs = dict(impl=impl, block_t=block_t, lr=lr,
-                               lr_fn=lr_fn, remat=remat,
+                               lr_fn=lr_fn, remat=remat, quantize=quantize,
                                nano_batches=nano_batches,
                                adaptive_nano=adaptive_nano,
                                aimd_max_n=aimd_max_n,

@@ -28,6 +28,7 @@ from repro.core.nanobatch import AIMDController
 from repro.core.ssm import SharedSuperModel
 from repro.data.pipeline import FusedBatcher, JobStream
 from repro.elastic.migrate import JobTrainState, fuse_states, unfuse_state
+from repro.models import quant
 from repro.optim import adamw
 from repro.optim.schedule import constant
 
@@ -93,7 +94,8 @@ class GroupRuntime:
                  impl: str = "ref", block_t: int = 8,
                  nano_batches: int = 1, adaptive_nano: bool = False,
                  aimd_max_n: int = 16, nano_order: str = "job",
-                 remat: bool = True, weight_decay: float = 0.0,
+                 remat: bool = True, quantize: Optional[str] = None,
+                 weight_decay: float = 0.0,
                  chunk_size: int = 4, scan_unroll: bool = False,
                  mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
@@ -127,6 +129,15 @@ class GroupRuntime:
                 f"impl={impl!r} has no shard-local VJP for exact gathered "
                 "wgrads; use impl='xla'/'pallas' or grad_sync='psum'")
         self.data_shards = D
+        # quantized frozen backbone (models/quant): int8 codes + f32
+        # per-channel scales replace the bf16 projection weights BEFORE
+        # device placement, so the device-resident shard is half-size
+        # and every fused step streams half the backbone bytes.  The
+        # fuse/unfuse/migrate contract is untouched — adapters and
+        # optimizer state never quantize.  Idempotent on pre-quantized
+        # trees (a migrated group reuses the donor's QuantTensors).
+        self.quantize = quantize
+        params = quant.quantize_params(params, quantize)
         self.ssm = SharedSuperModel(cfg, self.specs, impl=impl,
                                     block_t=block_t, data_shards=D)
         self.batcher = FusedBatcher(self.specs, cfg.vocab_size,
@@ -167,6 +178,19 @@ class GroupRuntime:
         self.steps_done: Dict[str, int] = dict(
             steps_done or {s.job_id: 0 for s in self.specs})
         self.lr_fn = lr_fn or constant(lr)
+        # remat (jax.checkpoint on each scanned segment) is the
+        # system-wide default — True everywhere (runtime, train_loop,
+        # controller, execution backend): it caps the activation
+        # high-water at ~one layer's working set + per-layer residuals,
+        # which is what lets the memory-priced scheduler pack K jobs per
+        # device, at the cost of one extra forward pass (~33% more
+        # FLOPs) in the backward.  Fused groups are memory-bound at
+        # exactly the compositions tLoRA targets, so trading spare
+        # compute for HBM is the right default; flip remat=False only
+        # for small models with chips to spare.  Numerics are identical
+        # either way (recompute, not approximation), and the scheduler's
+        # group_memory_bytes must be told the flag it prices
+        # (SchedulerConfig.remat).
         self.remat = remat
         self.weight_decay = weight_decay
         # rank-aware nano pipeline: static job order of segments within

@@ -163,6 +163,53 @@ def grouped_wgrad_pallas(x: jax.Array, g: jax.Array, tile_map: jax.Array,
     return jnp.where(seg[:, None, None] > 0, out, 0.0)
 
 
+# ------------------------------------------------------------ dequant mm
+def _dequant_mm_kernel(x_ref, w_ref, s_ref, o_ref):
+    """y = (x @ w_q) * scale with the int8 tile cast IN-REGISTER.
+
+    Per-output-channel scales commute with the contraction
+    (x @ (q * s) == (x @ q) * s[None, :]), so the tile is multiplied by
+    its ``(1, block_o)`` scale slice after the dot — a bf16 copy of the
+    weight is never materialized, in VMEM or HBM."""
+    w = w_ref[...].astype(x_ref.dtype)              # int8 -> compute dtype
+    y = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+    o_ref[...] = (y * s_ref[...]).astype(o_ref.dtype)
+
+
+def dequant_matmul_pallas(x: jax.Array, w_q: jax.Array, scale: jax.Array,
+                          *, block_t: int = 128, block_o: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """Fused dequantize-matmul for the quantized frozen backbone.
+
+    x: (T, d_in) activations; w_q: (d_in, d_out) int8; scale: (d_out,)
+    f32 per-output-channel.  Returns (T, d_out) in x.dtype.  The grid
+    tiles T and d_out only — the contraction dim stays whole per tile,
+    so every output element is one full-length f32-accumulated dot and
+    the result is bit-identical to the XLA reference expression
+    ``(x @ w_q.astype(x.dtype)) * scale``.
+    """
+    T, d_in = x.shape
+    d_out = w_q.shape[-1]
+    assert w_q.shape[0] == d_in and scale.shape == (d_out,), \
+        (x.shape, w_q.shape, scale.shape)
+    block_t = _fit_block(T, block_t)
+    block_o = _fit_block(d_out, block_o)
+    grid = (T // block_t, d_out // block_o)
+    s2 = scale.reshape(1, d_out).astype(jnp.float32)
+    return pl.pallas_call(
+        _dequant_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, block_o), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_o), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, d_out), x.dtype),
+        interpret=interpret,
+    )(x, w_q, s2)
+
+
 # ------------------------------------------------------------- grouped mm
 def _grouped_mm_kernel(tile_map_ref, x_ref, w_ref, o_ref):
     del tile_map_ref

@@ -88,6 +88,7 @@ def set_interpret(flag: bool) -> None:
     _make_pallas_sharded_fn.cache_clear()
     _make_ragged_pallas_fn.cache_clear()
     _make_ragged_pallas_sharded_fn.cache_clear()
+    _make_dequant_pallas_fn.cache_clear()
 
 
 def get_interpret() -> bool:
@@ -1036,3 +1037,68 @@ def fused_lora(x: jax.Array, A: jax.Array, B: jax.Array, ids: jax.Array,
     if impl == "ref":
         return ref_impl.fused_lora_ref(x, A, B, ids, ranks, scalings)
     raise ValueError(f"unknown fused_lora impl {impl!r}")
+
+
+# ---------------------------------------------------------- dequant mm
+@jax.checkpoint
+def _dequant_xla(x, q, s):
+    """XLA fallback: dequant folded into the dot, under ``jax.checkpoint``
+    so any dequantized intermediate is RECOMPUTED in the backward pass
+    instead of living in HBM across it (the backbone takes no gradient;
+    only dx flows, and autodiff of this expression is exactly
+    dy*scale @ q.T with q re-cast on the fly)."""
+    y = jnp.dot(x, q.astype(x.dtype), preferred_element_type=jnp.float32)
+    return (y * s.astype(jnp.float32)).astype(x.dtype)
+
+
+@functools.lru_cache(maxsize=32)
+def _make_dequant_pallas_fn(block_t: int, block_o: int):
+    """Custom-VJP closure over the Pallas dequant-matmul kernel.
+
+    The base weight is FROZEN: the backward emits float0 for the int8
+    weights, zeros for the scales, and computes dx with a second fused
+    launch — dx = (dy * scale) @ q.T, i.e. the same kernel against the
+    transposed int8 slab with unit scales (the row scaling moved onto
+    the cotangent, still never materializing a dequantized copy)."""
+    interpret = _INTERPRET
+
+    @jax.custom_vjp
+    def f(x, q, s):
+        return pk.dequant_matmul_pallas(x, q, s, block_t=block_t,
+                                        block_o=block_o,
+                                        interpret=interpret)
+
+    def fwd(x, q, s):
+        return f(x, q, s), (q, s)
+
+    def bwd(res, dy):
+        q, s = res
+        dys = (dy.astype(jnp.float32)
+               * s.astype(jnp.float32)[None, :]).astype(dy.dtype)
+        ones = jnp.ones((q.shape[0],), jnp.float32)
+        dx = pk.dequant_matmul_pallas(dys, q.T, ones, block_t=block_t,
+                                      block_o=block_o, interpret=interpret)
+        return dx, _int_zeros(q), jnp.zeros_like(s)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def dequant_matmul(x: jax.Array, q: jax.Array, scale: jax.Array,
+                   impl: str = "xla", block_t: int = 128,
+                   block_o: int = 512) -> jax.Array:
+    """y = (x @ q) * scale for an int8 per-output-channel-quantized base
+    projection (models/quant.QuantTensor storage).  x: (T, d_in); q:
+    (d_in, d_out) int8; scale: (d_out,) f32 -> (T, d_out) in x.dtype.
+
+    Both impls evaluate the SAME expression — a full-contraction dot on
+    x.dtype operands with f32 accumulation, scaled per output channel —
+    so they agree exactly; "pallas" tiles it in-register per (block_t,
+    block_o) block, "xla" leans on ``jax.checkpoint`` to keep the
+    dequant out of HBM across the backward."""
+    if impl == "pallas":
+        return _make_dequant_pallas_fn(int(block_t), int(block_o))(
+            x, q, scale)
+    if impl == "xla":
+        return _dequant_xla(x, q, scale)
+    raise ValueError(f"unknown dequant_matmul impl {impl!r}")

@@ -1,3 +1,6 @@
-from repro.models import model
-
-__all__ = ["model"]
+# No eager submodule imports: core/lora imports models.quant (qdot for
+# quantized frozen projections) while models.model imports core.lora —
+# an eager `from repro.models import model` here would close that cycle
+# before MultiLoRA exists.  `from repro.models import model as M` still
+# works everywhere via the normal submodule import machinery.
+__all__ = ["model", "quant"]

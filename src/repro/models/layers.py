@@ -10,6 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models.quant import qdot
 from repro.sharding import shard
 
 
@@ -68,12 +69,13 @@ def swiglu_init(key, d: int, d_ff: int, dtype) -> dict:
 
 
 def swiglu(params: dict, x: jax.Array) -> jax.Array:
-    g = x @ params["gate"]
-    u = x @ params["up"]
+    # qdot: fused int8 dequant when the FFN mats are QuantTensors
+    g = qdot(x, params["gate"])
+    u = qdot(x, params["up"])
     g = shard(g, "batch", "seq", "tp")
     u = shard(u, "batch", "seq", "tp")
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    out = h @ params["down"]
+    out = qdot(h, params["down"])
     return shard(out, "batch", "sp", None)
 
 
@@ -84,10 +86,10 @@ def gelu_mlp_init(key, d: int, d_ff: int, dtype) -> dict:
 
 
 def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
-    h = x @ params["up"]
+    h = qdot(x, params["up"])
     h = shard(h, "batch", "seq", "tp")
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    out = h @ params["down"]
+    out = qdot(h, params["down"])
     return shard(out, "batch", "sp", None)
 
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lora import MultiLoRA, proj
+from repro.models import quant
 from repro.models.attention import chunked_attention
 from repro.models.layers import apply_rope, dense_init, rms_norm, rms_norm_init
 from repro.sharding import shard
@@ -68,7 +69,7 @@ def _expand_attend(cfg, params, q_nope, q_rope, latent, k_rope, chunk):
     """Expand latent to per-head K/V and run chunked flash attention."""
     B, S = latent.shape[:2]
     H = cfg.num_heads
-    kv = latent @ params["w_kv_b"]
+    kv = quant.qdot(latent, params["w_kv_b"])   # fused dequant if int8
     kv = kv.reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
     k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
     k = jnp.concatenate(
@@ -145,7 +146,9 @@ def mla_block(cfg, params: dict, x: jax.Array, *, positions,
             kv_len = cache_pos + S
         new_cache = MLACache(lat, rop)
 
-        w_kv_b = params["w_kv_b"].reshape(
+        # absorbed decode works on a small dequantized f32 copy (the
+        # absorb einsums are f32 anyway; S == 1, so this is cheap)
+        w_kv_b = quant.asarray(params["w_kv_b"]).reshape(
             cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim)
         w_k = w_kv_b[..., :cfg.qk_nope_dim]          # (kvr, H, nope)
         w_v = w_kv_b[..., cfg.qk_nope_dim:]          # (kvr, H, v)

@@ -77,11 +77,19 @@ class ServeEngine:
     impl: str = "xla"                 # fused-LoRA kernel impl
     block_t: int = 8                  # token tile (128 on real TPU)
     greedy: bool = True
+    # int8 frozen backbone for serving (models/quant): halves the
+    # resident weight bytes AND the per-token weight streaming — decode
+    # is the memory-bound regime where that is ~the whole step.  None =
+    # keep the params' dtype (already-quantized trees pass through).
+    quantize: Optional[str] = None
 
     _gen_cache: Dict[tuple, Callable] = field(default_factory=dict)
 
     def __post_init__(self):
         cfg = self.cfg
+        if self.quantize is not None:
+            from repro.models import quant
+            self.params = quant.quantize_params(self.params, self.quantize)
         if not cfg.causal:
             raise ValueError("serving needs a causal decoder config")
         if cfg.family in ("audio", "vlm"):

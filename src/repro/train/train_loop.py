@@ -26,7 +26,8 @@ def train_group(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], *,
                 steps: int = 20, lr: float = 1e-3, seed: int = 0,
                 impl: str = "ref", block_t: int = 8,
                 adaptive_nano: bool = True, nano_batches: int = 1,
-                remat: bool = True, chunk_size: int = 4,
+                remat: bool = True, quantize: Optional[str] = None,
+                chunk_size: int = 4,
                 params=None, adapters=None,
                 log: Optional[Callable[[str], None]] = None) -> Dict:
     """Train a fused group for *steps* iterations on the local device.
@@ -39,7 +40,7 @@ def train_group(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec], *,
                                  lr=lr, impl=impl, block_t=block_t,
                                  seed=seed, nano_batches=nano_batches,
                                  adaptive_nano=adaptive_nano, remat=remat,
-                                 chunk_size=chunk_size)
+                                 quantize=quantize, chunk_size=chunk_size)
     report = rt.run(steps, log=log)
     return {"ssm": rt.ssm, "params": rt.params, "adapters": rt.adapters,
             "opt_state": rt.opt_state, "report": report,

@@ -1,0 +1,228 @@
+"""Quantized frozen backbone (models/quant + fused dequant kernels).
+
+Covers the int8 contract end to end: format selectivity, exact
+kernel/fallback parity, gradients through qdot, pytree transparency
+under scan, the runtime/serve quantize knobs, loss-trajectory
+closeness, and the dtype-keyed calibrator buckets.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.core import throughput as tp
+from repro.kernels import ops
+from repro.models import model as M
+from repro.models import quant
+
+CFG = get_config("tinyllama-1.1b").reduced()
+
+
+def _jobs(k, rank=4, steps=6):
+    return [LoRAJobSpec(job_id=f"j{i}", base_model=CFG.name, rank=rank,
+                        batch_size=2, seq_len=32, steps_budget=steps)
+            for i in range(k)]
+
+
+# ------------------------------------------------------------- format
+def test_quantize_params_selectivity():
+    params = M.init_model(jax.random.PRNGKey(0), CFG)
+    qp = quant.quantize_params(params, "int8")
+    assert quant.is_quantized(qp)
+    assert quant.backbone_dtype(qp) == "int8"
+    assert quant.backbone_dtype(params) == "bf16"
+    # embeddings / norms stay dense high-precision
+    assert not isinstance(qp["embed"], quant.QuantTensor)
+    leaves = jax.tree.leaves(
+        qp, is_leaf=lambda x: isinstance(x, quant.QuantTensor))
+    qts = [l for l in leaves if isinstance(l, quant.QuantTensor)]
+    assert qts, "no projection was quantized"
+    for qt in qts:
+        assert qt.q.dtype == jnp.int8
+        assert qt.scale.dtype == jnp.float32
+        assert qt.scale.shape == qt.q.shape[:-2] + qt.q.shape[-1:]
+    # idempotent: re-quantizing returns the same tree structure
+    qp2 = quant.quantize_params(qp, "int8")
+    assert jax.tree.structure(qp2) == jax.tree.structure(qp)
+    # identity mode
+    assert quant.quantize_params(params, None) is params
+    with pytest.raises(ValueError):
+        quant.quantize_params(params, "int4")
+
+
+def test_moe_expert_slabs_stay_dense():
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    qp = quant.quantize_params(M.init_model(jax.random.PRNGKey(0), cfg),
+                               "int8")
+    assert quant.is_quantized(qp)   # attention/shared-FFN leaves quantize
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "router" in node:    # a MoE ffn param dict
+                assert not isinstance(node["w_in"], quant.QuantTensor)
+                assert not isinstance(node["w_out"], quant.QuantTensor)
+                assert not isinstance(node["router"], quant.QuantTensor)
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v)
+    walk(qp)
+
+
+# ------------------------------------------------------------- kernels
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_dequant_matmul_exact_vs_reference(impl):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 48)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((48, 80)) * 0.3, jnp.float32)
+    qt = quant.quantize_array(w)
+    ref = (jnp.dot(x, qt.q.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+           * qt.scale[None, :]).astype(x.dtype)
+    y = ops.dequant_matmul(x, qt.q, qt.scale, impl=impl)
+    assert y.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_dequant_matmul_grad(impl):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 24)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((24, 40)) * 0.3, jnp.float32)
+    qt = quant.quantize_array(w)
+    wd = quant.asarray(qt)
+
+    def f(x_):
+        return (ops.dequant_matmul(x_, qt.q, qt.scale,
+                                   impl=impl) ** 2).sum()
+
+    def f_ref(x_):
+        return ((x_ @ wd) ** 2).sum()
+
+    gx = jax.grad(f)(x)
+    gx_ref = jax.grad(f_ref)(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qdot_dispatch_and_batched_shapes():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 5, 16)), jnp.float32)
+    qt = quant.quantize_array(w)
+    y_plain = quant.qdot(x, w)
+    y_quant = quant.qdot(x, qt)
+    assert y_quant.shape == y_plain.shape == (2, 5, 24)
+    np.testing.assert_allclose(np.asarray(y_quant),
+                               np.asarray(x @ quant.asarray(qt)),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        quant.set_dequant_impl("cuda")
+    assert quant.get_dequant_impl() in ("xla", "pallas")
+
+
+def test_quanttensor_scan_slicing():
+    # stacked (L, d_in, d_out) QuantTensor slices leaf-wise under scan —
+    # the segment_plan/lax.scan transparency the model relies on
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_normal((3, 8, 10)), jnp.float32)
+    qt = quant.quantize_array(w)
+    x0 = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+
+    def body(x, layer):
+        y = quant.qdot(x, layer)
+        return y[:, :8], y.sum()
+
+    _, sums = jax.lax.scan(body, x0, qt)
+    assert sums.shape == (3,)
+
+
+# ------------------------------------------------------------- training
+def test_train_group_quantized_loss_close():
+    from repro.train.train_loop import train_group
+    params = M.init_model(jax.random.PRNGKey(0), CFG)
+    kw = dict(steps=4, lr=1e-2, seed=0, impl="xla", block_t=8,
+              adaptive_nano=False, nano_batches=1, chunk_size=2)
+    res_bf = train_group(CFG, _jobs(2), params=params, **kw)
+    res_q = train_group(CFG, _jobs(2), params=params, quantize="int8", **kw)
+    assert quant.is_quantized(res_q["params"])
+    assert not quant.is_quantized(res_q["adapters"])
+    lb = np.asarray(res_bf["report"].losses)
+    lq = np.asarray(res_q["report"].losses)
+    rel = np.max(np.abs(lb - lq) / np.maximum(np.abs(lb), 1e-9))
+    assert rel < 0.05, (lb, lq)
+
+
+def test_serve_engine_quantize_knob():
+    from repro.core.ssm import SharedSuperModel
+    from repro.serve import AdapterPool, ServeEngine, ServeRequest
+    cfg = CFG
+    specs = [LoRAJobSpec("ad0", rank=4, batch_size=1)]
+    ssm = SharedSuperModel(cfg, specs, impl="xla", block_t=8)
+    params, adapters = ssm.init(jax.random.PRNGKey(0))
+    pool = AdapterPool(cfg, capacity=1, multiple=ssm.layout.multiple)
+    pool.publish_group(specs, adapters, ssm.layout)
+    eng = ServeEngine(cfg, params, pool, impl="xla", quantize="int8")
+    assert quant.is_quantized(eng.params)
+    req = ServeRequest(prompt=np.arange(1, 9, dtype=np.int32),
+                       adapter="ad0", max_new_tokens=3)
+    out = eng.serve([req])
+    assert len(out) == 1 and out[0].tokens.shape[0] <= 3
+
+
+# ------------------------------------------------------------ pricing
+def test_calibrator_buckets_keyed_by_dtype():
+    cal = tp.OnlineCalibrator(min_obs=2)
+    jobs = [LoRAJobSpec(job_id=f"j{i}", base_model=CFG.name, rank=4,
+                        batch_size=b, seq_len=64, steps_budget=10)
+            for i, b in enumerate([1, 4])]
+    # two very different machines' measurements, one per dtype
+    for b in (jobs[:1], jobs):
+        cal.observe(CFG, b, 1, 0.010, backbone_dtype="bf16")
+        cal.observe(CFG, b, 1, 0.010, backbone_dtype="bf16")
+        cal.observe(CFG, b, 1, 5.000, backbone_dtype="int8")
+        cal.observe(CFG, b, 1, 5.000, backbone_dtype="int8")
+    f16 = cal.fit(CFG.name, 1, 1, "bf16")
+    f8 = cal.fit(CFG.name, 1, 1, "int8")
+    assert f16 is not None and f8 is not None
+    assert f8[0] > f16[0] * 10      # fits never contaminated each other
+    p16 = cal.predict(CFG, jobs[:1], 1, backbone_dtype="bf16")
+    p8 = cal.predict(CFG, jobs[:1], 1, backbone_dtype="int8")
+    assert p8 > p16 * 10
+    # round-trip keeps the dtype keys
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "cal.json")
+        cal.save(path)
+        cal2 = tp.OnlineCalibrator.load(path)
+        assert cal2.fit(CFG.name, 1, 1, "int8") == f8
+        assert cal2.fit(CFG.name, 1, 1, "bf16") == f16
+
+
+def test_scheduler_memory_gate_blocks_infeasible_k():
+    from repro.core.scheduler import AdapterScheduler, Group, \
+        SchedulerConfig
+    from repro.core.jobs import JobRuntimeState
+    cfg = get_config("recurrentgemma-9b")
+    sched = AdapterScheduler(cfg, SchedulerConfig(max_group=512))
+    sched8 = AdapterScheduler(
+        cfg, SchedulerConfig(max_group=512, quantize="int8"))
+
+    def group(k, chips):
+        states = [JobRuntimeState(
+            spec=LoRAJobSpec(job_id=f"j{i}", base_model=cfg.name, rank=8,
+                             batch_size=1, seq_len=64, steps_budget=100,
+                             gpus=chips, max_slowdown=1e9))
+            for i in range(k)]
+        return Group(states, chips)
+
+    k_max16 = tp.max_feasible_k(
+        cfg, group(1, 2).specs[0], 2, hw=tp.V5E)
+    assert sched._feasible(group(k_max16, 2))
+    assert not sched._feasible(group(k_max16 + 1, 2))
+    # the same over-capacity K fits once the backbone is int8
+    assert sched8._feasible(group(k_max16 + 1, 2))

@@ -87,6 +87,67 @@ def test_min_chips_scales_with_model():
     assert big >= 16                 # 220GB bf16 / 16GB HBM
 
 
+# ----------------------------------------------- memory model (quant PR)
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(1, 7),
+       rank=st.sampled_from([2, 4, 8, 16]),
+       batch=st.sampled_from([1, 2, 4]),
+       chips=st.sampled_from([2, 4, 8]),
+       remat=st.booleans())
+def test_group_memory_monotone_in_members(k, rank, batch, chips, remat):
+    jobs = [job(rank, batch, jid=f"j{i}") for i in range(k)]
+    m_k = tp.group_memory_bytes(CFG, jobs, chips, remat=remat)
+    m_k1 = tp.group_memory_bytes(CFG, jobs + [job(rank, batch, jid="x")],
+                                 chips, remat=remat)
+    assert m_k1 >= m_k              # one more member never frees memory
+
+
+@settings(max_examples=40, deadline=None)
+@given(rank=st.sampled_from([2, 4, 8]),
+       batch=st.sampled_from([1, 2, 4]),
+       chips=st.sampled_from([2, 4, 8]),
+       remat=st.booleans())
+def test_group_memory_monotone_in_rank_and_batch(rank, batch, chips, remat):
+    base = tp.group_memory_bytes(CFG, [job(rank, batch)], chips,
+                                 remat=remat)
+    more_rank = tp.group_memory_bytes(CFG, [job(rank * 2, batch)], chips,
+                                      remat=remat)
+    more_batch = tp.group_memory_bytes(CFG, [job(rank, batch * 2)], chips,
+                                       remat=remat)
+    assert more_rank >= base        # bigger adapter + Adam state
+    assert more_batch >= base       # bigger activation high-water
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 6), batch=st.sampled_from([1, 2, 4]),
+       chips=st.sampled_from([2, 4, 8]))
+def test_int8_memory_never_exceeds_bf16(k, batch, chips):
+    jobs = [job(4, batch, jid=f"j{i}") for i in range(k)]
+    hw8 = tp.with_backbone_dtype(tp.V5E, "int8")
+    m8 = tp.group_memory_bytes(CFG, jobs, chips, hw=hw8)
+    m16 = tp.group_memory_bytes(CFG, jobs, chips)
+    assert m8 <= m16
+    # and remat never raises the high-water
+    assert tp.group_memory_bytes(CFG, jobs, chips, remat=True) <= \
+        tp.group_memory_bytes(CFG, jobs, chips, remat=False)
+
+
+def test_min_chips_int8_never_above_bf16_all_configs():
+    from repro.configs.registry import ARCH_IDS
+    hw8 = tp.with_backbone_dtype(tp.V5E, "int8")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert tp.min_chips(cfg, hw=hw8) <= tp.min_chips(cfg), arch
+
+
+def test_max_feasible_k_int8_never_below_bf16():
+    hw8 = tp.with_backbone_dtype(tp.V5E, "int8")
+    proto = job(8, 1, seq=64)
+    k16 = tp.max_feasible_k(CFG, proto, 2)
+    k8 = tp.max_feasible_k(CFG, proto, 2, hw=hw8)
+    assert k8 >= k16 >= 1
+
+
 def test_acme_csv_loader(tmp_path):
     p = tmp_path / "trace_seren.csv"
     p.write_text(
