@@ -12,6 +12,7 @@ import traceback
 MODULES = [
     "bench_controller",
     "bench_kernels",
+    "bench_pipeline",
     "bench_quant",
     "bench_serve",
     "bench_step_loop",

@@ -132,6 +132,7 @@ class ClusterController:
                  nano_order: str = "job", weight_decay: float = 0.0,
                  chunk_size: int = 4, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 pipeline_stages: int = 1,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0, seed: int = 0,
                  fault_plan: Optional[FaultPlan] = None,
@@ -183,6 +184,7 @@ class ClusterController:
             aimd_max_n=aimd_max_n, nano_order=nano_order,
             weight_decay=weight_decay, chunk_size=chunk_size,
             data_axis=data_axis, tp_mode=tp_mode,
+            pipeline_stages=pipeline_stages,
             checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, seed=seed)
         self._chunk_size = chunk_size
@@ -337,9 +339,13 @@ class ClusterController:
     def _submesh(self, device_ids: Tuple[int, ...]):
         if not device_ids:
             return self.fixed_mesh          # None in meshless mode
+        # pipeline mode: reject depths that can't tile this slice HERE,
+        # at partition time, with the divisor-naming error (launch/mesh)
+        stages = (self._engine_kwargs["pipeline_stages"]
+                  if self._engine_kwargs["tp_mode"] == "pipeline" else 1)
         return partition_mesh([len(device_ids)],
                               [self.devices[i] for i in device_ids],
-                              axis=self.data_axis)[0]
+                              axis=self.data_axis, stages=stages)[0]
 
     def _alloc_free(self, want: int) -> Tuple[int, ...]:
         """Incremental allocation (ensure_group path): up to *want* free

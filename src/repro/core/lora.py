@@ -110,6 +110,15 @@ class RankLayout:
         return tuple(pad_rank(r, self.multiple) for r in self.ranks)
 
     @cached_property
+    def is_uniform(self) -> bool:
+        """True when every job pads to the same width.  The packed
+        (d, K*rp) layout is then a free reshape away from the stacked
+        (K, d, rp) layout, so the masked kernel family applies with
+        zero padding waste — and it beats the ragged family there (no
+        rank-bucket bookkeeping to amortize)."""
+        return len(set(self.r_pads)) == 1
+
+    @cached_property
     def offsets(self) -> Tuple[int, ...]:
         out, off = [], 0
         for p in self.r_pads:
@@ -284,7 +293,27 @@ class MultiLoRA:
             solo_pos = (rp[:, None] * seq
                         + jnp.arange(seq, dtype=rp.dtype)[None, :]).reshape(-1)
             total = self.shards * self.local_rows * seq
-        if self.layout is not None:
+        if (self.layout is not None and self.layout.is_uniform
+                and self.impl in ("xla", "pallas")):
+            # Homogeneous padded widths: route to the MASKED family.
+            # The ragged kernels only win when padding waste exists to
+            # skip; with uniform r_pads their per-bucket bookkeeping is
+            # pure overhead (~0.88x of masked).  The packed (d, K*rp)
+            # pair reshapes losslessly into the stacked (K, d, rp)
+            # contract, and lanes >= the true rank stay masked via
+            # ``ranks`` — so uniform pads with differing ranks is safe.
+            rp = self.layout.r_pads[0]
+            K = self.layout.num_jobs
+            A_st = A.reshape(*A.shape[:-1], K, rp)
+            A_st = jnp.moveaxis(A_st, -2, -3)
+            B_st = B.reshape(*B.shape[:-2], K, rp, B.shape[-1])
+            out = ops.fused_lora(
+                xf, A_st.astype(x.dtype), B_st.astype(x.dtype), ids,
+                self.ranks, self.scalings, impl=self.impl,
+                block_t=self.block_t, capacity=cap, equal_segments=eq,
+                axis_name=axis, solo_pos=solo_pos, total_tokens=total,
+                full_batch=bsz == self.local_rows)
+        elif self.layout is not None:
             # solo_rows: the geometry of the SOLO-order reassembled batch
             # the sharded wgrads run under — GLOBAL per-job rows (each
             # job's shard slices concatenate back to rows_all * shards)

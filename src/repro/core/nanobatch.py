@@ -83,6 +83,26 @@ class AIMDController:
         return len(set(ns)) == 1
 
 
+def pipeline_tick_counts(nanos_per_job, stages: int):
+    """(multi-job, per-job-GPipe) tick counts for one fused pipeline
+    step over a *stages*-deep stage partition (DESIGN.md §15).
+
+    The fused schedule streams EVERY job's nano slices through the same
+    warm-up/cool-down ramp, so the pipeline fills and drains once per
+    step: ``sum(N_j) + P - 1`` ticks.  Running each job as its own
+    GPipe schedule on the same stages pays the ramp once PER JOB:
+    ``sum(N_j + P - 1)``.  The difference — ``(K - 1)(P - 1)`` ticks —
+    is the cross-job bubble-filling win the paper's multi-tenant
+    pipeline claims, and what BENCH_pipeline measures.
+    """
+    P = int(stages)
+    ns = [int(n) for n in nanos_per_job]
+    assert P >= 1 and all(n >= 1 for n in ns) and ns, (ns, P)
+    multi = sum(ns) + P - 1
+    gpipe = sum(n + P - 1 for n in ns)
+    return multi, gpipe
+
+
 def simulate_step_time(n: int, *, t_comp: float, t_comm: float,
                        launch_overhead: float = 2e-4) -> float:
     """Analytic Eq. 1 model used by tests/benchmarks to exercise AIMD

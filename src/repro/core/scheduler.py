@@ -29,10 +29,16 @@ from repro.core import throughput as tp
 
 @dataclass
 class Group:
-    """A (possibly singleton) set of co-located jobs with pooled chips."""
+    """A (possibly singleton) set of co-located jobs with pooled chips.
+
+    ``stages`` > 1 marks a group the scheduler could only fit by
+    stage-partitioning the scanned layer stack (tp_mode="pipeline",
+    DESIGN.md §15): each chip then keeps 1/stages of the stack instead
+    of a full replica, at the price of the pipeline bubble."""
     jobs: List[JobRuntimeState]
     chips: int
     spans_nodes: bool = False
+    stages: int = 1
 
     @property
     def specs(self) -> List[LoRAJobSpec]:
@@ -74,6 +80,12 @@ class SchedulerConfig:
     # HBM fraction the memory gate may fill (rest: fragmentation +
     # collective buffers)
     mem_headroom: float = 0.9
+    # residency model the memory gate prices (throughput.
+    # group_memory_bytes): "tp" = ideally tensor-sharded params (the
+    # historical gate), "dp" = the fully-manual data-parallel step's
+    # replicated params — the mode whose failures the pipeline
+    # fallback rescues
+    mem_tp_mode: str = "tp"
 
     @property
     def backbone_dtype(self) -> str:
@@ -125,6 +137,13 @@ class AdapterScheduler:
                      spans_nodes=a.spans_nodes or b.spans_nodes or spans)
 
     def _group_time(self, g: Group) -> float:
+        if g.stages > 1:
+            return tp.pipeline_step_cost(
+                self.cfg, g.specs, g.chips, stages=g.stages,
+                hw=self.hw_for(g.chips, len(g.jobs)),
+                spans_nodes=g.spans_nodes,
+                kernel_fused=self.sched.kernel_fused,
+                ragged_kernels=self.sched.ragged_kernels).total
         return tp.group_step_cost(self.cfg, g.specs, g.chips,
                                   hw=self.hw_for(g.chips, len(g.jobs)),
                                   spans_nodes=g.spans_nodes,
@@ -221,6 +240,38 @@ class AdapterScheduler:
             out.extend(news if benefit > cost else quo)
         return out
 
+    def pipeline_depth(self, g: Group) -> Optional[int]:
+        """Smallest pipeline depth P >= 2 that makes *g* fit per-chip
+        HBM when its flat placement does not, or None when no legal
+        depth rescues it.  Legal depths are divisors of the scanned
+        stack's repeat count (ssm.pipeline_legal_stages) that also
+        divide the group's chips into equal stage sub-slices — the
+        same legality the runtime enforces (launch/mesh.stage_mesh)."""
+        from repro.core.ssm import pipeline_legal_stages
+        for P in pipeline_legal_stages(self.cfg):
+            if P < 2 or g.chips % P:
+                continue
+            if tp.memory_feasible(self.cfg, g.specs, g.chips,
+                                  hw=self.sched.priced_hw,
+                                  remat=self.sched.remat,
+                                  headroom=self.sched.mem_headroom,
+                                  tp_mode="pipeline", stages=P):
+                return P
+        return None
+
+    def annotate_stages(self, g: Group) -> Group:
+        """Stamp the pipeline depth a final group must run with: 1 when
+        its flat placement fits, else the smallest rescuing depth."""
+        if tp.memory_feasible(self.cfg, g.specs, g.chips,
+                              hw=self.sched.priced_hw,
+                              remat=self.sched.remat,
+                              headroom=self.sched.mem_headroom,
+                              tp_mode=self.sched.mem_tp_mode):
+            g.stages = 1
+        else:
+            g.stages = self.pipeline_depth(g) or 1
+        return g
+
     def _feasible(self, g: Group) -> bool:
         if len(g.jobs) > self.sched.max_group:
             return False
@@ -234,8 +285,14 @@ class AdapterScheduler:
         if not tp.memory_feasible(self.cfg, g.specs, g.chips,
                                   hw=self.sched.priced_hw,
                                   remat=self.sched.remat,
-                                  headroom=self.sched.mem_headroom):
-            return False
+                                  headroom=self.sched.mem_headroom,
+                                  tp_mode=self.sched.mem_tp_mode):
+            # last resort before rejecting: stage-partition the stack.
+            # A pipeline group trades the bubble for 1/P backbone
+            # residency per chip — the configs this rescues are exactly
+            # the ones where no flat placement fits at all.
+            if self.pipeline_depth(g) is None:
+                return False
         deltas = tp.slowdowns(self.cfg, g.specs, g.chips,
                               hw=self.hw_for(g.chips, len(g.jobs)),
                               spans_nodes=g.spans_nodes,
@@ -294,7 +351,8 @@ class AdapterScheduler:
             if not tp.memory_feasible(self.cfg, g.specs, c,
                                       hw=self.sched.priced_hw,
                                       remat=self.sched.remat,
-                                      headroom=self.sched.mem_headroom):
+                                      headroom=self.sched.mem_headroom,
+                                      tp_mode=self.sched.mem_tp_mode):
                 return False
             deltas = tp.slowdowns(self.cfg, g.specs, c,
                                   hw=self.hw_for(c, len(g.jobs)),
@@ -358,7 +416,7 @@ class AdapterScheduler:
             finals = self.fit_pool(finals, pool_chips)
         if current_groups:
             finals = self.filter_transitions(finals, current_groups)
-        return finals
+        return [self.annotate_stages(g) for g in finals]
 
     def fit_pool(self, groups: List[Group], pool_chips: int
                  ) -> List[Group]:

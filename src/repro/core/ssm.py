@@ -135,6 +135,7 @@ class SharedSuperModel:
                         mesh=None, data_axis: str = "data",
                         grad_sync: str = "gather",
                         tp_mode: str = "dp",
+                        pipeline_stages: int = 1,
                         nano_order: str = "job") -> Callable:
         """Build the fused train step (grad-accumulated over nano-batches).
 
@@ -167,7 +168,14 @@ class SharedSuperModel:
         to GSPMD as partial-auto tensor parallelism driven by the
         name-driven rules + the backbone's sharding constraints —
         currently blocked on CPU XLA for scan-bearing models (see
-        DESIGN.md §8 limitations).  ``grad_sync`` picks the cross-shard
+        DESIGN.md §8 limitations); "pipeline" carves the submesh into
+        ``pipeline_stages`` stage sub-slices and runs the scanned layer
+        stack as a 1F1B-style pipeline whose microbatches are the
+        job-wise nano slices — the large-backbone path (DESIGN.md §15):
+        each stage holds 1/P of the scanned backbone + adapters + Adam
+        moments, and because the whole schedule stays a fully-manual
+        shard_map, the grad-through-scan limitation of "auto" never
+        applies.  ``grad_sync`` picks the cross-shard
         gradient strategy: "gather" (default) makes adapter grads
         bit-exact w.r.t. solo execution via the shard-local kernel
         VJPs; "psum" reduces partial wgrads with one all-reduce per
@@ -184,6 +192,12 @@ class SharedSuperModel:
         cfg, K = self.cfg, self.num_jobs
         assert nano_order in ("job", "rank_desc"), nano_order
         if mesh is not None:
+            if tp_mode == "pipeline":
+                return self._make_pipeline_step(
+                    lr_fn=lr_fn, nano_batches=nano_batches, remat=remat,
+                    weight_decay=weight_decay, steps=steps, unroll=unroll,
+                    mesh=mesh, data_axis=data_axis, grad_sync=grad_sync,
+                    stages=pipeline_stages, nano_order=nano_order)
             return self._make_sharded_step(
                 lr_fn=lr_fn, nano_batches=nano_batches, remat=remat,
                 weight_decay=weight_decay, steps=steps, unroll=unroll,
@@ -409,6 +423,270 @@ class SharedSuperModel:
 
         return stepfn
 
+    def _make_pipeline_step(self, *, lr_fn, nano_batches, remat,
+                            weight_decay, steps, unroll, mesh, data_axis,
+                            grad_sync, stages,
+                            nano_order: str = "job") -> Callable:
+        """Stage-partitioned pipeline train step (DESIGN.md §15).
+
+        The group's submesh is carved into a (stage=P, data=D) 2-D mesh;
+        the ONE scanned segment's backbone stacks, adapter slices and
+        Adam moments shard their leading layer axis over "stage" (each
+        stage holds ``repeats/P`` contiguous cycles), while everything
+        unscanned (embed, ln_f, head, frontend, head/tail segments)
+        replicates.  The batch shards rows over the data axis ONLY and
+        REPLICATES over stage, so every stage sub-slice sees identical
+        local rows — the pre/tail segments run redundantly on all
+        stages (cheap: they are a few unscanned layers) and only the
+        scanned stack pipelines.
+
+        Schedule: the N job-wise nano slices become pipeline
+        microbatches driven through T = N + P - 1 ticks; at tick t stage
+        s runs micro ``clip(t - s, 0, N-1)`` on its local cycles and
+        hands the activation to stage s+1 via ``lax.ppermute``.  With
+        K jobs contributing nanos the fill/drain bubble (P-1 ticks) is
+        paid ONCE for the whole multi-job schedule instead of once per
+        job — the multi-tenant bubble-filling win priced by
+        ``throughput.pipeline_bubble_fraction``.
+
+        Losslessness: the differentiated loss is each device's LOCAL
+        partial (psum transposes inflate cotangents by axis size — the
+        same rule the DP sharded step follows), where-masked to the
+        owning stage: CE + tail aux on the last stage, pre-segment aux
+        on stage 0, scanned aux on valid ticks.  Spurious warm-up /
+        cool-down computations (clipped micro indices) land outside the
+        collected ``outs[P-1:P-1+N]`` window, so they receive exactly
+        zero cotangent; ppermute's transpose chains the real cotangents
+        back through the stages, which keeps adapter wgrads exact under
+        grad_sync="gather" (the kernel VJPs' data-axis collectives run
+        congruently on every stage row).
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.data.pipeline import shard_permutation
+        from repro.launch.mesh import stage_mesh
+        from repro.models.layers import rms_norm
+
+        cfg, K = self.cfg, self.num_jobs
+        P_st = int(stages)
+        assert P_st >= 2, f"pipeline needs stages >= 2, got {P_st}"
+        if "stage" not in mesh.axis_names:
+            mesh = stage_mesh(mesh, P_st, axis=data_axis)
+        assert int(mesh.shape["stage"]) == P_st, (dict(mesh.shape), P_st)
+        D = int(mesh.shape[data_axis])
+        assert self.data_shards == D, \
+            (f"SSM built for data_shards={self.data_shards}, pipeline "
+             f"mesh executes {D}-way data parallel — construct "
+             f"SharedSuperModel(data_shards={D})")
+        exact = grad_sync == "gather"
+        if exact and self.impl in ("ref", "loop"):
+            raise ValueError(
+                f"impl={self.impl!r} has no shard-local VJP for exact "
+                "gathered wgrads; use impl='xla'/'pallas' or "
+                "grad_sync='psum'")
+        plan = M.segment_plan(cfg)
+        si = scanned_segment_index(cfg)
+        seg = plan[si]
+        if seg.repeats % P_st:
+            raise ValueError(
+                f"stages={P_st} does not divide the scanned stack's "
+                f"{seg.repeats} cycle(s); legal pipeline depths for "
+                f"{cfg.name}: "
+                f"{[p for p in range(1, seg.repeats + 1) if seg.repeats % p == 0]}")
+        seg_local = dataclasses.replace(seg, repeats=seg.repeats // P_st)
+        rows = self.rows_per_job()
+        rows_loc = [r // D for r in rows]
+        N = int(nano_batches)
+        g = math.gcd(*rows_loc) if len(rows_loc) > 1 else rows_loc[0]
+        assert g % N == 0, \
+            (f"nano_batches={N} must divide every job's per-shard "
+             f"rows {rows_loc}")
+        if self.impl == "pallas":
+            S_len = self.jobs[0].seq_len
+            assert all((r * S_len) % (N * self.block_t) == 0
+                       for r in rows_loc), \
+                (f"nano_batches={N} breaks rank-bucket tile alignment "
+                 f"for per-shard rows {rows_loc}")
+        perm = shard_permutation(rows, D)
+        seg_order = tuple(
+            sorted(range(K), key=lambda k: (-int(self.ranks[k]), k))
+            if nano_order == "rank_desc" else range(K))
+        # static micro-split geometry: micro i holds rows [i*r_j/N,
+        # (i+1)*r_j/N) of EVERY job (job-proportional, like the DP nano
+        # split) so each micro is itself a mini fused batch
+        idx_np = _nano_index(rows_loc, N, order=seg_order)
+        inv_np = np.argsort(idx_np)
+        B_loc = int(sum(rows_loc))
+        Bm = B_loc // N
+        ring_perm = [(i, (i + 1) % P_st) for i in range(P_st)]
+
+        def train_step(params, adapters, opt_state, batch, row_solo):
+            denom = jnp.clip(jax.lax.psum(
+                _per_job_token_counts(batch, K, causal=cfg.causal,
+                                      clip=False), data_axis), 1)
+            s_idx = jax.lax.axis_index("stage")
+            first = s_idx == 0
+            last = s_idx == P_st - 1
+
+            def nano_loss(ad, nb):
+                nb = dict(nb)
+                rp = nb.pop("_row_solo")
+                lora_full = self.lora_ctx(nb["adapter_ids"],
+                                          axis_name=data_axis,
+                                          row_solo_pos=rp,
+                                          grad_sync=grad_sync)
+                ad_segs = ad["segments"]
+                x, text_off = M.embed_inputs(cfg, params, nb)
+                B, S, d = x.shape
+                positions = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+                # ---- pre-scanned segments: full batch, every stage
+                aux_pre = jnp.zeros((), jnp.float32)
+                for i in range(si):
+                    x, _, a = M._apply_segment(
+                        cfg, plan[i], params["segments"][i], ad_segs[i],
+                        lora_full, x, positions, None, None, False, remat)
+                    aux_pre = aux_pre + a
+                # ---- micro split (activations + per-row metadata only;
+                # labels stay in original order for the tail)
+                idx = jnp.asarray(idx_np, jnp.int32)
+                x_m = jnp.take(x, idx, 0).reshape(N, Bm, S, d)
+                ids_m = jnp.take(nb["adapter_ids"], idx, 0).reshape(N, Bm)
+                rs_m = jnp.take(rp, idx, 0).reshape(N, Bm)
+                pos_m = positions[:Bm]
+                # ---- 1F1B tick loop over the scanned stack
+                p_si, ad_si = params["segments"][si], ad_segs[si]
+                recv = jnp.zeros((Bm, S, d), x.dtype)
+                aux_scan = jnp.zeros((), jnp.float32)
+                outs = []
+                for t in range(N + P_st - 1):
+                    m = jnp.clip(t - s_idx, 0, N - 1)
+                    x_in = jnp.where(first, jnp.take(x_m, m, 0), recv)
+                    lora_m = self.lora_ctx(jnp.take(ids_m, m, 0),
+                                           axis_name=data_axis,
+                                           row_solo_pos=jnp.take(rs_m, m, 0),
+                                           grad_sync=grad_sync,
+                                           nano_order=seg_order)
+                    y, _, a = M._apply_segment(
+                        cfg, seg_local, p_si, ad_si, lora_m, x_in,
+                        pos_m, None, None, False, remat)
+                    valid = (t - s_idx >= 0) & (t - s_idx <= N - 1)
+                    aux_scan = aux_scan + jnp.where(valid, a, 0.0)
+                    outs.append(y)
+                    recv = jax.lax.ppermute(y, "stage", ring_perm)
+                # last stage's valid outputs: ticks [P-1, P-1+N); undo
+                # the micro permutation back to original local row order
+                out = jnp.stack(outs[P_st - 1:P_st - 1 + N])
+                out = out.reshape(B_loc, S, d)
+                x = jnp.take(out, jnp.asarray(inv_np, jnp.int32), 0)
+                # ---- tail: computed redundantly on every stage over the
+                # reassembled buffer, loss masked to the owning stage
+                aux_tail = jnp.zeros((), jnp.float32)
+                for i in range(si + 1, len(plan)):
+                    x, _, a = M._apply_segment(
+                        cfg, plan[i], params["segments"][i], ad_segs[i],
+                        lora_full, x, positions, None, None, False, remat)
+                    aux_tail = aux_tail + a
+                x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+                logits = M._logits(cfg, params, x)
+                labels = nb["labels"]
+                if text_off:
+                    logits = logits[:, text_off:]
+                if cfg.causal:
+                    logits = logits[:, :-1]
+                    labels = labels[:, 1:]
+                mask = nb.get("loss_mask")
+                if mask is not None:
+                    mask = mask[:, -labels.shape[-1]:]
+                from repro.models.layers import cross_entropy
+                tok_loss = cross_entropy(logits, labels, mask=mask)
+                seq_loss = tok_loss.sum(axis=-1)
+                onehot = jax.nn.one_hot(nb["adapter_ids"], K,
+                                        dtype=jnp.float32)
+                per_job = (onehot.T @ seq_loss) / denom
+                # LOCAL partial, where-masked to the owning stage — no
+                # psum inside the differentiated loss
+                total = (jnp.where(last, per_job.sum() + aux_tail, 0.0)
+                         + jnp.where(first, aux_pre, 0.0) + aux_scan)
+                aux_out = jnp.where(last, aux_tail, 0.0) \
+                    + jnp.where(first, aux_pre, 0.0) + aux_scan
+                return total, {"per_job": jnp.where(last, per_job, 0.0),
+                               "aux": aux_out}
+
+            grad_fn = jax.grad(nano_loss, has_aux=True)
+            batch = dict(batch)
+            batch["_row_solo"] = row_solo
+            grads, aux = grad_fn(adapters, batch)
+            # non-scanned segments compute on every stage but their
+            # cotangents live only on the owning stage (pre -> stage 0,
+            # tail -> stage P-1): psum them so the replicated adapter
+            # slices update identically everywhere.  The scanned
+            # segment's grads are its stage-local layer shards — no
+            # stage collective.
+            grads = _stage_psum_unscanned(grads, si, "stage")
+            per_job = jax.lax.psum(aux["per_job"], ("stage", data_axis))
+            if not exact:
+                grads = jax.tree.map(
+                    lambda g: jax.lax.psum(g, data_axis), grads)
+            lr = lr_fn(opt_state.step)
+            new_adapters, new_opt = adamw.update(
+                grads, opt_state, adapters, lr=lr,
+                weight_decay=weight_decay,
+                col_jobs=self.layout.col_jobs)
+            # executed-schedule occupancy: count the (stage, tick)
+            # slots that carried a valid micro — the same mask that
+            # gates the loss — vs every slot the tick loop ran.  This
+            # is the MEASURED bubble bench_pipeline reports
+            # (1 - useful/slots): it reads the schedule the step
+            # actually executed, so it moves if the tick loop or micro
+            # assignment ever changes.
+            useful = jnp.zeros((), jnp.int32)
+            for t in range(N + P_st - 1):
+                useful = useful + ((t - s_idx >= 0)
+                                   & (t - s_idx <= N - 1)
+                                   ).astype(jnp.int32)
+            metrics = {"loss": per_job.sum(), "per_job_loss": per_job,
+                       "lr": lr,
+                       "pipe_useful_slots":
+                           jax.lax.psum(useful, "stage"),
+                       "pipe_slots":
+                           jnp.int32((N + P_st - 1) * P_st)}
+            return new_adapters, new_opt, metrics
+
+        if steps is None:
+            inner, batch_lead = train_step, ()
+        else:
+            def chunked_step(params, adapters, opt_state, batches,
+                             row_solo):
+                def body(carry, b):
+                    ad, opt = carry
+                    ad, opt, m = train_step(params, ad, opt, b, row_solo)
+                    return (ad, opt), m
+
+                (new_adapters, new_opt), metrics = jax.lax.scan(
+                    body, (adapters, opt_state), batches, unroll=unroll)
+                return new_adapters, new_opt, metrics
+
+            inner, batch_lead = chunked_step, (None,)
+
+        batch_spec = P(*batch_lead, data_axis)
+        mesh2 = mesh
+
+        def stepfn(params, adapters, opt_state, batches):
+            b_specs = jax.tree.map(lambda _: batch_spec, batches)
+            p_specs = pipeline_stage_specs(cfg, params)
+            ad_specs = pipeline_stage_specs(cfg, adapters)
+            opt_specs = adamw.AdamWState(P(), ad_specs, ad_specs)
+            fn = shard_map(inner, mesh=mesh2,
+                           in_specs=(p_specs, ad_specs, opt_specs,
+                                     b_specs, P(data_axis)),
+                           out_specs=(ad_specs, opt_specs, P()),
+                           check_rep=False)
+            return fn(params, adapters, opt_state, batches,
+                      jnp.asarray(perm, jnp.int32))
+
+        return stepfn
+
     # --------------------------------------------------------- serve steps
     def make_prefill_step(self, shape: InputShape, *, ring: bool = False,
                           with_cache: bool = True) -> Callable:
@@ -451,6 +729,59 @@ class SharedSuperModel:
 
 
 # --------------------------------------------------------------- helpers
+def scanned_segment_index(cfg: ModelConfig) -> int:
+    """Index of THE scanned segment in ``segment_plan`` — the layer
+    stack pipeline mode partitions.  Exactly one is required (the plan
+    builder emits at most one; zero means the model is too small/odd to
+    pipeline)."""
+    idx = [i for i, s in enumerate(M.segment_plan(cfg)) if s.scanned]
+    if len(idx) != 1:
+        raise ValueError(
+            f"pipeline mode needs exactly one scanned segment; "
+            f"{cfg.name} has {len(idx)}")
+    return idx[0]
+
+
+def pipeline_legal_stages(cfg: ModelConfig) -> List[int]:
+    """Legal pipeline depths for *cfg*: divisors of the scanned stack's
+    cycle count (each stage must hold a whole number of cycles)."""
+    plan = M.segment_plan(cfg)
+    idx = [i for i, s in enumerate(plan) if s.scanned]
+    if len(idx) != 1:
+        return [1]
+    r = plan[idx[0]].repeats
+    return [p for p in range(1, r + 1) if r % p == 0]
+
+
+def pipeline_stage_specs(cfg: ModelConfig, tree: dict,
+                         stage_axis: str = "stage"):
+    """PartitionSpec tree for a params/adapters-structured *tree* under
+    pipeline mode: the scanned segment's stacked leaves shard their
+    leading layer axis over *stage_axis*; every other leaf replicates.
+    Works for backbone params (QuantTensor leaves included — q and
+    scale both carry the leading layer axis in scanned stacks), adapter
+    trees, and (via tree_map) Adam moment trees."""
+    from jax.sharding import PartitionSpec as P
+    si = scanned_segment_index(cfg)
+    st, rp = P(stage_axis), P()
+    sub = lambda t, spec: jax.tree.map(lambda _: spec, t)
+    out = {k: sub(v, rp) for k, v in tree.items() if k != "segments"}
+    out["segments"] = [sub(s, st if i == si else rp)
+                       for i, s in enumerate(tree["segments"])]
+    return out
+
+
+def _stage_psum_unscanned(grads: dict, si: int, axis: str) -> dict:
+    """psum every NON-scanned segment's grads over the stage axis (their
+    cotangents live only on the owning stage); the scanned segment's
+    grads are that stage's layer shards and stay local."""
+    reduce = lambda t: jax.tree.map(lambda g: jax.lax.psum(g, axis), t)
+    out = {k: reduce(v) for k, v in grads.items() if k != "segments"}
+    out["segments"] = [seg if i == si else reduce(seg)
+                       for i, seg in enumerate(grads["segments"])]
+    return out
+
+
 def _per_job_token_counts(batch: dict, K: int, causal: bool,
                           clip: bool = True) -> jax.Array:
     """Full-batch per-job loss-token counts (denominators).
@@ -499,14 +830,7 @@ def _reshape_nano_jobwise(batch: dict, n: int, rows: Sequence[int],
     order, so the kernels' tile contract (one adapter per token tile)
     is preserved; adapter_ids ride the permutation as data.
     """
-    order = list(order) if order is not None else list(range(len(rows)))
-    assert sorted(order) == list(range(len(rows))), order
-    offs = np.concatenate([[0], np.cumsum(rows)])
-    idx = np.concatenate([
-        np.arange(offs[j] + i * (rows[j] // n),
-                  offs[j] + (i + 1) * (rows[j] // n))
-        for i in range(n) for j in order])
-    idx = jnp.asarray(idx, jnp.int32)
+    idx = jnp.asarray(_nano_index(rows, n, order=order), jnp.int32)
     R = int(sum(rows))
 
     def f(x):
@@ -517,10 +841,28 @@ def _reshape_nano_jobwise(batch: dict, n: int, rows: Sequence[int],
     return jax.tree.map(f, batch)
 
 
+def _nano_index(rows: Sequence[int], n: int,
+                order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Static row permutation of the job-proportional nano/micro split:
+    slice *i* takes rows ``[i*r_j/n, (i+1)*r_j/n)`` of every job, with
+    segments inside a slice in *order* (default: job index order).  The
+    single source of the split geometry — shared by the nano-batch
+    grad-accumulation scan AND the pipeline microbatch schedule (whose
+    tail reassembles the original order via ``np.argsort``)."""
+    order = list(order) if order is not None else list(range(len(rows)))
+    assert sorted(order) == list(range(len(rows))), order
+    offs = np.concatenate([[0], np.cumsum(rows)])
+    return np.concatenate([
+        np.arange(offs[j] + i * (rows[j] // n),
+                  offs[j] + (i + 1) * (rows[j] // n))
+        for i in range(n) for j in order])
+
+
 def valid_nano_counts(rows: int, max_n: Optional[int] = None, *,
                       seg_rows: Optional[Sequence[int]] = None,
                       seq_len: int = 1,
-                      block_t: int = 1) -> List[int]:
+                      block_t: int = 1,
+                      stages: int = 1) -> List[int]:
     """Divisors of the fused row count (legal nano-batch counts), sorted
     ascending.  O(√rows) paired enumeration — this runs inside
     ``AIMDController.__post_init__`` on every regroup and *rows* reaches
@@ -532,7 +874,13 @@ def valid_nano_counts(rows: int, max_n: Optional[int] = None, *,
     tiles ((seg_rows[j] * seq_len) % (n * block_t) == 0 for all j), or
     the static per-slice tile→(job, rank-tile) metadata cannot describe
     the slice.  *rows* should then be the gcd of ``seg_rows`` (the
-    divisibility base of the job-proportional split)."""
+    divisibility base of the job-proportional split).
+
+    ``stages`` > 1 adds the PIPELINE depth constraint: the nano slices
+    double as pipeline microbatches, so their count must cover the
+    pipeline depth (n >= stages) or the fill/drain bubble dominates the
+    schedule — and the tick loop would run more warm-up ticks than it
+    has real micros to fill them with."""
     small, large = [], []
     d = 1
     while d * d <= rows:
@@ -548,4 +896,6 @@ def valid_nano_counts(rows: int, max_n: Optional[int] = None, *,
         out = [n for n in out
                if all((r * seq_len) % (n * block_t) == 0
                       for r in seg_rows)]
+    if stages > 1:
+        out = [n for n in out if n >= stages]
     return out

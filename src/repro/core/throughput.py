@@ -321,6 +321,71 @@ def _group_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                     t_overhead, overlap=kernel_fused)
 
 
+def pipeline_bubble_fraction(stages: int, nanos: int,
+                             skew: float = 0.0) -> float:
+    """Idle fraction of a *stages*-deep pipeline schedule driving *nanos*
+    microbatches: (P-1) warm-up/cool-down ticks out of N+P-1 total.
+
+        bubble = 1 - N / ((N + P - 1) * (1 + skew))
+
+    ``skew`` >= 0 inflates every tick to the SLOWEST stage's duration
+    (per-nano imbalance: ragged job composition makes micro sizes and
+    rank work uneven) — the critical path of a synchronous tick is its
+    slowest stage, so skew converts straight into extra idle time on
+    the others.  The multi-tenant claim is this formula's N: filling
+    warm-up/cool-down slots with OTHER jobs' nanos makes N the GROUP
+    total (one shared fill/drain), while single-job GPipe pays P-1
+    bubble ticks PER JOB (core/nanobatch.pipeline_tick_counts)."""
+    P, N = int(stages), int(nanos)
+    if P <= 1 or N <= 0:
+        return max(0.0, 1.0 - 1.0 / (1.0 + max(skew, 0.0)))
+    return 1.0 - N / ((N + P - 1) * (1.0 + max(skew, 0.0)))
+
+
+def pipeline_step_cost(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
+                       chips: int, *, stages: int,
+                       hw: HardwareSpec = V5E,
+                       nano_batches: int = 4,
+                       spans_nodes: bool = False,
+                       kernel_fused: bool = True,
+                       ragged_kernels: bool = True,
+                       skew: float = 0.0) -> StepCost:
+    """Price one stage-partitioned step (tp_mode="pipeline").
+
+    The scanned stack splits into *stages* contiguous sub-slices of
+    ``chips/stages`` devices each; the group's nano slices become
+    pipeline microbatches.  At steady state every stage computes
+    concurrently on a different micro, so the machine-rate terms equal
+    the all-chips fused step inflated by the bubble factor
+    ``ticks/N = (N+P-1)/N``; on top ride the per-tick activation
+    handoffs (one micro's boundary activations cross to the next
+    stage's peer device over ICI) and a per-tick sync."""
+    P = int(stages)
+    assert chips >= 1 and P >= 1
+    if P == 1:
+        return group_step_cost(cfg, jobs, chips, hw=hw,
+                               spans_nodes=spans_nodes,
+                               kernel_fused=kernel_fused,
+                               nano_batches=nano_batches,
+                               ragged_kernels=ragged_kernels)
+    assert chips % P == 0, (chips, P)
+    N = max(int(nano_batches), P)      # micros must cover the depth
+    base = group_step_cost(cfg, jobs, chips, hw=hw,
+                           spans_nodes=spans_nodes,
+                           kernel_fused=kernel_fused,
+                           nano_batches=N,
+                           ragged_kernels=ragged_kernels)
+    ticks = N + P - 1
+    f = 1.0 / (1.0 - pipeline_bubble_fraction(P, N, skew))
+    D = chips // P
+    tokens = sum(j.batch_size * j.seq_len for j in jobs)
+    handoff = (tokens / N / D) * cfg.d_model * 2 / hw.ici_bw
+    t_comm = base.t_comm * f + ticks * (handoff + hw.sync_latency)
+    return StepCost(base.t_compute * f, base.t_compute_ideal,
+                    base.t_memory * f, t_comm, base.t_overhead,
+                    overlap=base.overlap)
+
+
 def standalone_step_time(cfg: ModelConfig, job: LoRAJobSpec, *,
                          hw: HardwareSpec = V5E,
                          kernel_fused: bool = True,
@@ -379,10 +444,11 @@ def min_chips(cfg: ModelConfig, *, hw: HardwareSpec = V5E) -> int:
 # ----------------------------------------------------------- memory model
 def group_memory_bytes(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                        chips: int, *, hw: HardwareSpec = V5E,
-                       remat: bool = True) -> float:
+                       remat: bool = True, tp_mode: str = "tp",
+                       stages: int = 1) -> float:
     """Per-chip HBM high-water mark of one fused group step.
 
-    Three resident terms, each sharded over *chips*:
+    Three resident terms:
 
       * backbone shard at ``hw.backbone_bytes_per_param`` (the tentpole
         lever: int8 halves it);
@@ -395,17 +461,42 @@ def group_memory_bytes(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
         d_model-sized intermediates); without remat every layer's
         intermediates survive to the backward.
 
+    ``tp_mode`` selects the residency model:
+
+      * "tp" (default): every param term shards over *chips* — the
+        ideal tensor-sharded residency the original gate priced;
+      * "dp": the fully-manual data-parallel step replicates backbone,
+        adapters and moments on EVERY chip — only activations shard.
+        This is the mode that stops fitting first as models grow: the
+        "DP alone cannot fit" configs pipeline mode exists to rescue;
+      * "pipeline": like "dp" within each stage sub-slice, but each
+        chip keeps only its stage's 1/*stages* slice of the scanned
+        layer stack (backbone shard + every job's adapter/moment
+        slices live with their stage — DESIGN.md §15); the embed/head
+        ends stay replicated.
+
     This is the scheduler's explicit K-per-device feasibility gate
     (AdapterScheduler._feasible) — it replaces the old implicit
     max_group hard cap as the binding capacity constraint.
     """
     assert chips >= 1
+    assert tp_mode in ("tp", "dp", "pipeline"), tp_mode
     total_p, _ = param_counts(cfg)
-    backbone = total_p * hw.backbone_bytes_per_param / chips
-
     dims = lora_dims_per_rank(cfg)
     adapter_params = sum(_padded_rank(j.rank) * dims for j in jobs)
-    adapters = adapter_params * 12.0 / chips     # f32 + Adam m + Adam v
+    if tp_mode == "tp":
+        backbone = total_p * hw.backbone_bytes_per_param / chips
+        adapters = adapter_params * 12.0 / chips  # f32 + Adam m + Adam v
+    else:
+        P = max(int(stages), 1) if tp_mode == "pipeline" else 1
+        embed = cfg.vocab_size * cfg.d_model \
+            * (1 if cfg.tie_embeddings else 2)
+        stack_frac = max(0.0, 1.0 - embed / max(total_p, 1))
+        keep = (1.0 - stack_frac) + stack_frac / P
+        backbone = total_p * keep * hw.backbone_bytes_per_param
+        # adapters target the layer-stack projections: they (and their
+        # moments) partition with their stage like the backbone shard
+        adapters = adapter_params * 12.0 * keep
 
     tokens = sum(j.batch_size * j.seq_len for j in jobs)
     L = max(cfg.num_layers, 1)
@@ -419,16 +510,19 @@ def group_memory_bytes(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
 
 def memory_feasible(cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                     chips: int, *, hw: HardwareSpec = V5E,
-                    remat: bool = True, headroom: float = 0.9) -> bool:
+                    remat: bool = True, headroom: float = 0.9,
+                    tp_mode: str = "tp", stages: int = 1) -> bool:
     """True iff the group's per-chip high-water fits in HBM with
     *headroom* slack left for fragmentation/collective buffers."""
-    return group_memory_bytes(cfg, jobs, chips, hw=hw, remat=remat) \
+    return group_memory_bytes(cfg, jobs, chips, hw=hw, remat=remat,
+                              tp_mode=tp_mode, stages=stages) \
         <= hw.hbm_capacity * headroom
 
 
 def max_feasible_k(cfg: ModelConfig, job: LoRAJobSpec, chips: int, *,
                    hw: HardwareSpec = V5E, remat: bool = True,
-                   headroom: float = 0.9, k_cap: int = 256) -> int:
+                   headroom: float = 0.9, k_cap: int = 256,
+                   tp_mode: str = "tp", stages: int = 1) -> int:
     """Largest K such that K clones of *job* fit on *chips* — the
     capacity headline BENCH_quant reports (int8 vs bf16)."""
     k = 0
@@ -436,7 +530,8 @@ def max_feasible_k(cfg: ModelConfig, job: LoRAJobSpec, chips: int, *,
         jobs = [dataclasses.replace(job, job_id=f"j{i}")
                 for i in range(k + 1)]
         if not memory_feasible(cfg, jobs, chips, hw=hw, remat=remat,
-                               headroom=headroom):
+                               headroom=headroom, tp_mode=tp_mode,
+                               stages=stages):
             break
         k += 1
     return k
@@ -511,9 +606,15 @@ class OnlineCalibrator:
         self.hw = hw
         self.decay = decay
         self.min_obs = max(1, int(min_obs))
-        # key: (model, chips, K, backbone_dtype)
-        self._buckets: Dict[Tuple[str, int, int, str], _CalBucket] = {}
-        self._hw_cache: Dict[Tuple[str, int, int, str], HardwareSpec] = {}
+        # key: (model, chips, K, backbone_dtype, pipeline stages).
+        # stages joins the key for the same reason dtype does: a
+        # P-stage pipeline step is a different machine program (tick
+        # loop + ring handoffs) with a different analytic regressor, so
+        # its measurements must not contaminate the dense-step fit.
+        self._buckets: Dict[Tuple[str, int, int, str, int],
+                            _CalBucket] = {}
+        self._hw_cache: Dict[Tuple[str, int, int, str, int],
+                             HardwareSpec] = {}
         # measured regroup stalls (pause+migrate+compile+resume), EWMA
         # per base model — the transition-cost term the scheduler prices
         # payback horizons with.  One bucket per model (not per K): the
@@ -524,23 +625,30 @@ class OnlineCalibrator:
     # ------------------------------------------------------------- intake
     def machine_time(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                      chips: int, *, backbone_dtype: str = "bf16",
-                     **kw) -> float:
+                     stages: int = 1, **kw) -> float:
         """The regressor x: analytic step time minus framework overhead,
         priced with the UNCALIBRATED base constants (repriced for the
-        group's backbone storage dtype)."""
+        group's backbone storage dtype, and through the pipeline bubble
+        model when the group runs stage-partitioned)."""
         hw = with_backbone_dtype(self.hw, backbone_dtype)
-        return group_step_cost(cfg, jobs, chips, hw=hw, **kw).total \
-            - self.hw.step_overhead
+        if int(stages) > 1:
+            cost = pipeline_step_cost(cfg, jobs, chips, stages=int(stages),
+                                      hw=hw, **kw)
+        else:
+            cost = group_step_cost(cfg, jobs, chips, hw=hw, **kw)
+        return cost.total - self.hw.step_overhead
 
     def observe(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                 chips: int, measured: float, *,
-                backbone_dtype: str = "bf16", **kw):
+                backbone_dtype: str = "bf16", stages: int = 1, **kw):
         """Fold one measured step time into its (model, chips, K,
-        backbone dtype) bucket."""
+        backbone dtype, stages) bucket."""
         assert measured > 0, measured
         x = self.machine_time(cfg, jobs, chips,
-                              backbone_dtype=backbone_dtype, **kw)
-        key = (cfg.name, int(chips), len(jobs), backbone_dtype)
+                              backbone_dtype=backbone_dtype,
+                              stages=stages, **kw)
+        key = (cfg.name, int(chips), len(jobs), backbone_dtype,
+               int(stages))
         b = self._buckets.setdefault(key, _CalBucket())
         r = self.decay
         b.sw = b.sw * r + 1.0
@@ -559,9 +667,11 @@ class OnlineCalibrator:
 
     # -------------------------------------------------------------- fits
     def fit(self, model: str, chips: int, k: int = 1,
-            backbone_dtype: str = "bf16") -> Optional[Tuple[float, float]]:
+            backbone_dtype: str = "bf16",
+            stages: int = 1) -> Optional[Tuple[float, float]]:
         """(alpha, beta) for the bucket, or None while uncalibrated."""
-        b = self._buckets.get((model, int(chips), int(k), backbone_dtype))
+        b = self._buckets.get((model, int(chips), int(k), backbone_dtype,
+                               int(stages)))
         if b is None or b.n < self.min_obs or b.sw <= 0:
             return None
         mean_x = b.sx / b.sw
@@ -587,18 +697,20 @@ class OnlineCalibrator:
         return (alpha, beta) if alpha > 0 else None
 
     def _nearest_fit(self, model: str, chips: int, k: int,
-                     backbone_dtype: str) -> Optional[Tuple[float, float]]:
-        """Fall back to the calibrated SAME-K SAME-DTYPE bucket with the
-        nearest chip count — the scheduler probes chip counts it has
-        never run, and effective constants vary slowly with scale.
-        Never borrow across group sizes or backbone dtypes: those are
-        exactly the composition/program errors the bucket key exists to
-        avoid."""
+                     backbone_dtype: str,
+                     stages: int = 1) -> Optional[Tuple[float, float]]:
+        """Fall back to the calibrated SAME-K SAME-DTYPE SAME-STAGES
+        bucket with the nearest chip count — the scheduler probes chip
+        counts it has never run, and effective constants vary slowly
+        with scale.  Never borrow across group sizes, backbone dtypes,
+        or pipeline depths: those are exactly the composition/program
+        errors the bucket key exists to avoid."""
         best, best_d = None, float("inf")
-        for (m, c, kb, dt), _ in self._buckets.items():
-            if m != model or kb != k or dt != backbone_dtype:
+        for (m, c, kb, dt, st), _ in self._buckets.items():
+            if m != model or kb != k or dt != backbone_dtype \
+                    or st != int(stages):
                 continue
-            f = self.fit(m, c, kb, dt)
+            f = self.fit(m, c, kb, dt, st)
             if f is None:
                 continue
             d = abs(np.log(max(c, 1) / max(chips, 1)))
@@ -608,17 +720,19 @@ class OnlineCalibrator:
 
     # ------------------------------------------------------------ oracle
     def hw_for(self, model: str, chips: int, k: int = 1,
-               backbone_dtype: str = "bf16") -> HardwareSpec:
-        """Calibrated `HardwareSpec` for (model, chips, K, dtype); the
-        dtype-repriced base constants when the bucket (and every same-K
-        same-dtype same-model neighbour) is still uncalibrated."""
-        key = (model, int(chips), int(k), backbone_dtype)
+               backbone_dtype: str = "bf16",
+               stages: int = 1) -> HardwareSpec:
+        """Calibrated `HardwareSpec` for (model, chips, K, dtype,
+        stages); the dtype-repriced base constants when the bucket (and
+        every same-K same-dtype same-stages same-model neighbour) is
+        still uncalibrated."""
+        key = (model, int(chips), int(k), backbone_dtype, int(stages))
         hit = self._hw_cache.get(key)
         if hit is not None:
             return hit
         base = with_backbone_dtype(self.hw, backbone_dtype)
-        f = self.fit(model, chips, k, backbone_dtype) \
-            or self._nearest_fit(model, chips, k, backbone_dtype)
+        f = self.fit(model, chips, k, backbone_dtype, stages) \
+            or self._nearest_fit(model, chips, k, backbone_dtype, stages)
         if f is None:
             hw = base
         else:
@@ -637,10 +751,15 @@ class OnlineCalibrator:
 
     def predict(self, cfg: ModelConfig, jobs: Sequence[LoRAJobSpec],
                 chips: int, *, backbone_dtype: str = "bf16",
-                **kw) -> float:
+                stages: int = 1, **kw) -> float:
         """Calibrated step-time prediction (falls back to the base oracle
         while uncalibrated)."""
-        hw = self.hw_for(cfg.name, chips, len(jobs), backbone_dtype)
+        hw = self.hw_for(cfg.name, chips, len(jobs), backbone_dtype,
+                         stages)
+        if int(stages) > 1:
+            return pipeline_step_cost(cfg, jobs, chips,
+                                      stages=int(stages), hw=hw,
+                                      **kw).total
         return group_step_cost(cfg, jobs, chips, hw=hw, **kw).total
 
     # ------------------------------------------------- transition pricing
@@ -672,9 +791,9 @@ class OnlineCalibrator:
             "hw": dataclasses.asdict(self.hw),
             "buckets": [
                 {"model": m, "chips": c, "k": k, "dtype": dt,
-                 "sw": b.sw, "sx": b.sx,
+                 "stages": st, "sw": b.sw, "sx": b.sx,
                  "sy": b.sy, "sxx": b.sxx, "sxy": b.sxy, "n": b.n}
-                for (m, c, k, dt), b in self._buckets.items()],
+                for (m, c, k, dt, st), b in self._buckets.items()],
             "regroup": {m: {"mean": mean, "n": n}
                         for m, (mean, n) in self._regroup.items()},
         }
@@ -695,7 +814,8 @@ class OnlineCalibrator:
                   min_obs=d["min_obs"])
         for b in d["buckets"]:
             key = (b["model"], int(b["chips"]), int(b["k"]),
-                   b.get("dtype", "bf16"))   # pre-quant files: all bf16
+                   b.get("dtype", "bf16"),   # pre-quant files: all bf16
+                   int(b.get("stages", 1)))  # pre-pipeline files: dense
             cal._buckets[key] = \
                 _CalBucket(sw=b["sw"], sx=b["sx"], sy=b["sy"],
                            sxx=b["sxx"], sxy=b["sxy"], n=int(b["n"]))
@@ -705,14 +825,15 @@ class OnlineCalibrator:
 
     @property
     def calibrated(self) -> bool:
-        return any(self.fit(m, c, k, dt) is not None
-                   for m, c, k, dt in self._buckets)
+        return any(self.fit(m, c, k, dt, st) is not None
+                   for m, c, k, dt, st in self._buckets)
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         out = {}
-        for (m, c, k, dt), b in self._buckets.items():
-            f = self.fit(m, c, k, dt)
-            out[f"{m}@{c}xK{k}:{dt}"] = {
+        for (m, c, k, dt, st), b in self._buckets.items():
+            f = self.fit(m, c, k, dt, st)
+            tag = f"{m}@{c}xK{k}:{dt}" + (f":P{st}" if st > 1 else "")
+            out[tag] = {
                 "observations": b.n,
                 "alpha": f[0] if f else float("nan"),
                 "beta": f[1] if f else float("nan"),

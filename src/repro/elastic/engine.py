@@ -48,6 +48,7 @@ class ElasticEngine:
                  weight_decay: float = 0.0, chunk_size: int = 4,
                  mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 pipeline_stages: int = 1,
                  checkpoint_dir=None, checkpoint_every: int = 0,
                  seed: int = 0):
         self.cfg = cfg
@@ -70,6 +71,7 @@ class ElasticEngine:
                                chunk_size=chunk_size, seed=seed,
                                mesh=mesh, data_axis=data_axis,
                                grad_sync=grad_sync, tp_mode=tp_mode,
+                               pipeline_stages=pipeline_stages,
                                checkpoint_dir=checkpoint_dir,
                                checkpoint_every=checkpoint_every)
         self._parked: Dict[str, JobTrainState] = {}   # active, not grouped

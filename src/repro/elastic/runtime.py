@@ -41,6 +41,11 @@ class TrainReport:
     per_job_losses: List[np.ndarray] = field(default_factory=list)
     step_times: List[float] = field(default_factory=list)
     nano_history: List[int] = field(default_factory=list)
+    # full metrics dict of the most recent collected chunk (host
+    # numpy) — step-mode-specific observables (e.g. the pipeline
+    # step's executed-schedule occupancy counters) surface here
+    # without widening the report schema per mode
+    last_metrics: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def steps_per_sec(self) -> float:
@@ -99,6 +104,7 @@ class GroupRuntime:
                  chunk_size: int = 4, scan_unroll: bool = False,
                  mesh=None, data_axis: str = "data",
                  grad_sync: str = "gather", tp_mode: str = "dp",
+                 pipeline_stages: int = 1,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
                  publish_pool=None, publish_every: int = 0,
@@ -110,10 +116,26 @@ class GroupRuntime:
         # in tp_mode="auto" where the rest is GSPMD tensor parallelism);
         # adapters + optimizer state replicate.  mesh=None keeps
         # single-device semantics.
-        self.mesh = mesh
         self.data_axis = data_axis
         self.grad_sync = grad_sync
         self.tp_mode = tp_mode
+        # tp_mode="pipeline": carve the group's 1-D submesh into a
+        # (stage, data) 2-D mesh ONCE, here — placement, batch sharding
+        # and the pipeline step all share the carved mesh (DESIGN.md §15)
+        if tp_mode == "pipeline":
+            if mesh is None:
+                raise ValueError("tp_mode='pipeline' needs a mesh")
+            from repro.launch.mesh import stage_mesh
+            if "stage" not in mesh.axis_names:
+                mesh = stage_mesh(mesh, pipeline_stages, axis=data_axis)
+            self.pipeline_stages = int(mesh.shape["stage"])
+            if self.pipeline_stages < 2:
+                raise ValueError(
+                    "tp_mode='pipeline' needs pipeline_stages >= 2 "
+                    f"(got {self.pipeline_stages}); use tp_mode='dp'")
+        else:
+            self.pipeline_stages = 1
+        self.mesh = mesh
         if mesh is None:
             D = 1
         elif tp_mode == "dp":
@@ -151,19 +173,38 @@ class GroupRuntime:
             from repro.data.pipeline import shard_permutation
             from repro.sharding import rules
             repl = NamedSharding(mesh, PartitionSpec())
-            # tp_mode="dp": params replicate (full-manual shard_map);
-            # "auto": the name-driven rules place them for GSPMD TP
-            self.params = jax.device_put(
-                params, repl if tp_mode == "dp"
-                else rules.runtime_param_shardings(mesh, params))
-            # copy BEFORE placing: device_put aliases when the source
-            # already has the target sharding (e.g. state exported from
-            # a runtime on the same mesh), and donation would then
-            # delete the caller's buffers
-            self.adapters = jax.device_put(
-                jax.tree.map(jnp.array, adapters), repl)
-            self.opt_state = jax.device_put(
-                jax.tree.map(jnp.array, opt_state), repl)
+            self._repl = repl
+            if tp_mode == "pipeline":
+                # each stage keeps ONLY its slice of the scanned layer
+                # stack (backbone shard + every job's adapter/moment
+                # slices) resident — the memory win pipeline mode buys
+                from repro.core.ssm import scanned_segment_index
+                self._scan_si = scanned_segment_index(cfg)
+                self._stage_sh = NamedSharding(mesh,
+                                               PartitionSpec("stage"))
+                self.params = self._put_group_tree(params)
+                self.adapters = self._put_group_tree(
+                    jax.tree.map(jnp.array, adapters))
+                self.opt_state = adamw.AdamWState(
+                    jax.device_put(jnp.array(opt_state.step), repl),
+                    self._put_group_tree(
+                        jax.tree.map(jnp.array, opt_state.mu)),
+                    self._put_group_tree(
+                        jax.tree.map(jnp.array, opt_state.nu)))
+            else:
+                # tp_mode="dp": params replicate (full-manual shard_map);
+                # "auto": the name-driven rules place them for GSPMD TP
+                self.params = jax.device_put(
+                    params, repl if tp_mode == "dp"
+                    else rules.runtime_param_shardings(mesh, params))
+                # copy BEFORE placing: device_put aliases when the source
+                # already has the target sharding (e.g. state exported
+                # from a runtime on the same mesh), and donation would
+                # then delete the caller's buffers
+                self.adapters = jax.device_put(
+                    jax.tree.map(jnp.array, adapters), repl)
+                self.opt_state = jax.device_put(
+                    jax.tree.map(jnp.array, opt_state), repl)
             self._perm = shard_permutation(self.batcher.rows_per_job(), D)
             row_axes = (tuple(mesh.axis_names) if tp_mode == "dp"
                         else data_axis)
@@ -199,7 +240,7 @@ class GroupRuntime:
         # bigger adapter-grad collectives overlap small-rank compute
         assert nano_order in ("job", "rank_desc"), nano_order
         self.nano_order = nano_order
-        if D > 1:
+        if D > 1 or self.pipeline_stages > 1:
             # legal nano counts must divide EVERY job's per-shard rows
             # (the job-aware nano split keeps per-slice composition
             # equal), and — for the ragged pallas kernels — keep every
@@ -213,17 +254,33 @@ class GroupRuntime:
                              seq_len=self.specs[0].seq_len,
                              block_t=block_t)
                         if impl == "pallas" else {})
+            if self.pipeline_stages > 1:
+                # the nano slices double as pipeline microbatches: the
+                # count must cover the depth (n >= stages) or the tick
+                # loop has more warm-up slots than micros to fill them
+                legal_kw["stages"] = self.pipeline_stages
             legal = valid_nano_counts(nano_rows,
                                       min(nano_rows, aimd_max_n),
                                       **legal_kw)
         else:
             nano_rows = self.batcher.total_rows()
             legal = None
-        self.aimd = AIMDController(rows=nano_rows, n=nano_batches,
+        self.n = nano_batches
+        if self.pipeline_stages > 1:
+            if not legal:
+                raise ValueError(
+                    f"no legal microbatch count covers pipeline depth "
+                    f"{self.pipeline_stages} for per-shard rows "
+                    f"{nano_rows} (aimd_max_n={aimd_max_n})")
+            if self.n not in legal:
+                # snap to the closest legal count; ties prefer MORE
+                # micros — a deeper split shrinks the fill/drain bubble
+                self.n = min(legal,
+                             key=lambda l: (abs(l - nano_batches), -l))
+        self.aimd = AIMDController(rows=nano_rows, n=self.n,
                                    max_n=min(nano_rows, aimd_max_n),
                                    legal=legal) \
             if adaptive_nano else None
-        self.n = nano_batches
         self.chunk_size = max(1, chunk_size)
         self.scan_unroll = scan_unroll
         self._step_cache: Dict[tuple, Callable] = {}
@@ -295,6 +352,23 @@ class GroupRuntime:
     def index_of(self, job_id: str) -> int:
         return self.job_ids.index(job_id)
 
+    def _put_group_tree(self, tree):
+        """Place a params/adapters/moments-structured tree (a dict with
+        a ``segments`` list) under this runtime's group placement.  In
+        pipeline mode the scanned segment's stacked leaves shard their
+        leading cycle axis over "stage" (each stage holds only its
+        layer slice); every other leaf — and every leaf in the other
+        modes — replicates."""
+        if self.tp_mode != "pipeline":
+            return jax.device_put(tree, self._repl)
+        out = {k: jax.device_put(v, self._repl)
+               for k, v in tree.items() if k != "segments"}
+        out["segments"] = [
+            jax.device_put(s, self._stage_sh if i == self._scan_si
+                           else self._repl)
+            for i, s in enumerate(tree["segments"])]
+        return out
+
     def _get_step(self, n: int, chunk: int, args) -> Callable:
         """Compiled chunked step for (nano_batches, chunk_len).  Adapters
         and optimizer state are donated: each chunk updates them in place
@@ -314,10 +388,12 @@ class GroupRuntime:
                                           data_axis=self.data_axis,
                                           grad_sync=self.grad_sync,
                                           tp_mode=self.tp_mode,
+                                          pipeline_stages=self.pipeline_stages,
                                           nano_order=self.nano_order)
             jitted = jax.jit(fn, donate_argnums=(1, 2))
-            if self.mesh is None or self.tp_mode == "dp":
-                # full-manual shard_map: no GSPMD axes to constrain
+            if self.mesh is None or self.tp_mode != "auto":
+                # full-manual shard_map (dp and pipeline): no GSPMD
+                # axes to constrain
                 self._step_cache[key] = jitted.lower(*args).compile()
             else:
                 # trace with the mesh active so the backbone's logical
@@ -412,6 +488,7 @@ class GroupRuntime:
         dt = (time.perf_counter() - pending.t0) / L
         losses = np.atleast_1d(np.asarray(host["loss"], np.float64))
         per_job = np.atleast_2d(np.asarray(host["per_job_loss"]))
+        rep.last_metrics = {k: np.asarray(v) for k, v in host.items()}
         rep.steps += L
         rep.losses.extend(losses.tolist())
         rep.per_job_losses.extend(per_job)
@@ -545,12 +622,10 @@ class GroupRuntime:
         nu = insert_job(self.opt_state.nu, off, r, state.nu, r_cap)
         step = self.opt_state.step.at[idx].set(int(state.opt_step))
         if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-            repl = NamedSharding(self.mesh, PartitionSpec())
-            adapters = jax.device_put(adapters, repl)
-            mu = jax.device_put(mu, repl)
-            nu = jax.device_put(nu, repl)
-            step = jax.device_put(step, repl)
+            adapters = self._put_group_tree(adapters)
+            mu = self._put_group_tree(mu)
+            nu = self._put_group_tree(nu)
+            step = jax.device_put(step, self._repl)
         self.adapters = adapters
         self.opt_state = adamw.AdamWState(step, mu, nu)
         self.steps_done[state.spec.job_id] = state.steps_done

@@ -59,8 +59,31 @@ def device_shares(weights: Sequence[float], n_devices: int) -> List[int]:
     return shares
 
 
+def legal_stage_counts(n_devices: int) -> List[int]:
+    """Stage counts that evenly tile an *n_devices* slice: its divisors."""
+    return [p for p in range(1, n_devices + 1) if n_devices % p == 0]
+
+
+def _check_stages(stages: int, n_devices: int, what: str) -> int:
+    """Validate a pipeline depth against a device slice.
+
+    Unlike the model-axis CLAMP in ``make_local_mesh`` (where a weaker
+    degree is still the same program), silently lowering a pipeline
+    depth would change which schedule the caller benchmarked/priced —
+    so the partitioner REJECTS non-divisors, naming the legal choices.
+    """
+    stages = int(stages)
+    if stages < 1:
+        raise ValueError(f"stages must be >= 1, got {stages}")
+    if n_devices % stages:
+        raise ValueError(
+            f"stages={stages} does not divide the {what} of {n_devices} "
+            f"device(s); legal stage counts: {legal_stage_counts(n_devices)}")
+    return stages
+
+
 def partition_mesh(sizes: Sequence[int], devices: Optional[Sequence] = None,
-                   axis: str = "data") -> List:
+                   axis: str = "data", stages: int = 1) -> List:
     """Partition the device pool into disjoint 1-D per-group submeshes.
 
     ``sizes[i]`` devices (consecutive in pool order, so groups that keep
@@ -68,10 +91,18 @@ def partition_mesh(sizes: Sequence[int], devices: Optional[Sequence] = None,
     ``(sizes[i],)`` mesh over *axis*.  The controller runs one
     ``ElasticEngine`` per returned submesh; disjointness is what lets
     groups execute concurrently (DESIGN.md §9).
+
+    ``stages`` > 1 asserts that every slice can later be carved into
+    that many pipeline stages (``stage_mesh``): a ValueError naming the
+    legal divisors fires HERE, at partition time, rather than deep in
+    runtime construction.  The returned submeshes stay 1-D — the
+    runtime owns the (stage, data) reshape.
     """
     devices = list(devices if devices is not None else jax.devices())
     assert all(s >= 1 for s in sizes), sizes
     assert sum(sizes) <= len(devices), (sizes, len(devices))
+    for s in sizes:
+        _check_stages(stages, int(s), "group slice")
     out, cur = [], 0
     for s in sizes:
         out.append(jax.make_mesh((int(s),), (axis,),
@@ -80,7 +111,24 @@ def partition_mesh(sizes: Sequence[int], devices: Optional[Sequence] = None,
     return out
 
 
-def make_local_mesh(model: int = 1):
+def stage_mesh(mesh, stages: int, axis: str = "data",
+               stage_axis: str = "stage"):
+    """Carve a group's 1-D submesh into a (*stage_axis*, *axis*) 2-D mesh.
+
+    The P stage sub-slices are CONSECUTIVE runs of the submesh's device
+    order (devices.reshape(P, n // P)), so each stage's activation
+    handoff peer (stage i -> i+1) is its neighbouring slice — the same
+    locality the controller's consecutive-pool partitioner preserves.
+    Rejects depths that don't divide the slice, naming legal divisors.
+    """
+    devs = list(mesh.devices.flat)
+    n = len(devs)
+    stages = _check_stages(stages, n, "group submesh")
+    return jax.make_mesh((stages, n // stages), (stage_axis, axis),
+                         devices=devs)
+
+
+def make_local_mesh(model: int = 1, stages: int = 1):
     """Tiny mesh over whatever devices exist (tests).
 
     The requested model-parallel degree is clamped to the largest
@@ -90,9 +138,19 @@ def make_local_mesh(model: int = 1):
     non-divisor would make ``n // model`` drop devices — or hit the
     degenerate ``n // model == 0``.  Clamping to a divisor always
     yields a (data, model) mesh over exactly all n devices.
+
+    ``stages`` is clamped the same way against the data slice
+    (n // model); stages > 1 yields a (stage, data, model) mesh.
     """
     n = len(jax.devices())
     model = max(1, min(model, n))
     while n % model:
         model -= 1
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    d = n // model
+    stages = max(1, min(int(stages), d))
+    while d % stages:
+        stages -= 1
+    if stages == 1:
+        return jax.make_mesh((d, model), ("data", "model"))
+    return jax.make_mesh((stages, d // stages, model),
+                         ("stage", "data", "model"))

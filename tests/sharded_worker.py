@@ -222,6 +222,84 @@ def ragged_nano_rank_desc_order():
     losses_close(r1.report.per_job_losses, p2.report.per_job_losses)
 
 
+def pipeline_parity_vs_single_submesh():
+    """Stage-partitioned execution (DESIGN.md §15): a 2-stage x 4-way
+    pipeline group over the full 8-device pool trains the SAME
+    trajectory as the single-submesh 8-way DP execution of the same
+    jobs — mixed ranks, nano slices doubling as pipeline micros, exact
+    step accounting."""
+    cfg = cfg_f32()
+    jobs = [LoRAJobSpec("pl-a", rank=4, batch_size=8, seq_len=32),
+            LoRAJobSpec("pl-b", rank=8, batch_size=8, seq_len=32)]
+    kw = dict(lr=1e-2, impl="xla", block_t=BT, remat=False, chunk_size=2)
+    # 8-way DP leaves 1 row/shard -> nano n=1; the pipeline's D=4 gives
+    # 2 rows/shard -> n=2 micros.  Nano re-granulation is lossless
+    # (Eq. 2; nano_regranulation_sharded), so trajectories still match.
+    ref = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(7),
+                                  mesh=jax.make_mesh((8,), ("data",)),
+                                  nano_batches=1, **kw)
+    ref.run(4)
+    pl = GroupRuntime.from_specs(cfg, jobs, jax.random.PRNGKey(7),
+                                 mesh=jax.make_mesh((8,), ("data",)),
+                                 tp_mode="pipeline", pipeline_stages=2,
+                                 nano_batches=2, **kw)
+    assert pl.pipeline_stages == 2 and pl.data_shards == 4
+    assert pl.n == 2                     # micros cover the depth
+    assert dict(pl.mesh.shape) == {"stage": 2, "data": 4}
+    # residency: only the scanned stack shards over "stage"
+    from repro.core.ssm import scanned_segment_index
+    si = scanned_segment_index(cfg)
+    for i, seg in enumerate(pl.adapters["segments"]):
+        for leaf in jax.tree.leaves(seg):
+            spec = leaf.sharding.spec
+            want = ("stage",) if i == si else ()
+            assert tuple(spec) == want, (i, tuple(spec))
+    pl.run(4)
+    compare(ref, pl)
+
+
+def pipeline_migration_trajectory():
+    """solo -> 2-stage pipeline group -> solo extraction is lossless:
+    the stitched trajectory equals solo-throughout, and per-job Adam
+    step accounting survives both moves (mixed ranks, P=2 x D=4)."""
+    cfg = cfg_f32()
+    job_a = LoRAJobSpec("pmig-a", rank=4, batch_size=8, seq_len=32)
+    job_b = LoRAJobSpec("pmig-b", rank=8, batch_size=8, seq_len=32)
+    k = 2
+    key = jax.random.PRNGKey(3)
+    params = M.init_model(jax.random.fold_in(key, 0), cfg)
+    k_a, k_b = jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+    kw = dict(lr=1e-2, impl="xla", block_t=BT, remat=False, chunk_size=2)
+
+    def fresh(spec, kk):
+        return JobTrainState.fresh(spec, cfg, kk, r_pad=8)
+
+    ref = GroupRuntime.from_states(cfg, params, [fresh(job_a, k_a)], **kw)
+    ref_losses = [l[0] for l in ref.run(3 * k).per_job_losses]
+
+    ra = GroupRuntime.from_states(cfg, params, [fresh(job_a, k_a)], **kw)
+    ra.run(k)
+    merged = GroupRuntime.from_states(
+        cfg, params, [ra.export(job_a.job_id), fresh(job_b, k_b)],
+        mesh=jax.make_mesh((8,), ("data",)), tp_mode="pipeline",
+        pipeline_stages=2, nano_batches=2, **kw)
+    assert np.asarray(merged.opt_state.step).tolist() == [k, 0]
+    merged.run(k)
+    back = GroupRuntime.from_states(
+        cfg, params, [merged.export(job_a.job_id)], **kw)
+    back.run(k)
+
+    got = ([l[0] for l in ra.report.per_job_losses]
+           + [l[0] for l in merged.report.per_job_losses]
+           + [l[0] for l in back.report.per_job_losses])
+    losses_close(got, ref_losses)
+    st = back.export(job_a.job_id)
+    assert st.opt_step == 3 * k
+    ref_st = ref.export(job_a.job_id)
+    state_close(st.adapter, ref_st.adapter)
+    state_close(st.mu, ref_st.mu)
+
+
 def migration_across_meshes():
     """Elastic fuse/unfuse between a single-device runtime and a 4-way
     sharded group keeps the trajectory lossless and the per-job Adam
@@ -640,6 +718,8 @@ if __name__ == "__main__":
                parity_unequal_segments, parity_psum_mode,
                parity_pallas_gather, nano_regranulation_sharded,
                ragged_mixed_rank_parity, ragged_nano_rank_desc_order,
+               pipeline_parity_vs_single_submesh,
+               pipeline_migration_trajectory,
                migration_across_meshes, gather_solo_bitexact,
                local_mesh_clamps, execution_backend_sharded,
                controller_concurrent_parity,

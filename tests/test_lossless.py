@@ -348,6 +348,90 @@ def test_mixed_rank_fusion_is_lossless_without_max_rank_padding(tiny_cfg):
     np.testing.assert_allclose(got, ref_losses, rtol=1e-5, atol=1e-6)
 
 
+_PIPELINE_LOSSLESS = r"""
+import dataclasses
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.core.jobs import LoRAJobSpec
+from repro.core.lora import pad_rank
+from repro.elastic import GroupRuntime, JobTrainState
+from repro.models import model as M
+
+BT = 8
+cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                          dtype="float32")
+small = LoRAJobSpec("small", rank=4, batch_size=8, seq_len=32)
+wide = LoRAJobSpec("wide", rank=64, batch_size=8, seq_len=32)
+k = 2
+key = jax.random.PRNGKey(5)
+params = M.init_model(jax.random.fold_in(key, 0), cfg)
+k_s, k_w = jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+kw = dict(lr=1e-2, impl="xla", block_t=BT, remat=False, chunk_size=k)
+
+def fresh(spec, kk):
+    return JobTrainState.fresh(spec, cfg, kk,
+                               r_pad=pad_rank(spec.rank, BT))
+
+# reference: small trains solo throughout (no mesh: plain device 0)
+rt_ref = GroupRuntime.from_states(cfg, params, [fresh(small, k_s)], **kw)
+ref_losses = [l[0] for l in rt_ref.run(3 * k).per_job_losses]
+
+# elastic: solo k -> fused into a P=2 pipeline group k -> solo again k
+ra = GroupRuntime.from_states(cfg, params, [fresh(small, k_s)], **kw)
+ra.run(k)
+rb = GroupRuntime.from_states(cfg, params, [fresh(wide, k_w)], **kw)
+rb.run(k)
+merged = GroupRuntime.from_states(
+    cfg, params, [ra.export("small"), rb.export("wide")],
+    mesh=jax.make_mesh((8,), ("data",)), tp_mode="pipeline",
+    pipeline_stages=2, nano_batches=2, **kw)
+assert merged.pipeline_stages == 2 and merged.n == 2
+assert np.asarray(merged.opt_state.step).tolist() == [k, k]
+merged.run(k)
+st = merged.export("small")
+# ragged contract survives the pipeline group: the rank-4 job's
+# extracted slices stay 4 wide next to the 64-wide peer
+for name, v in st.adapter.items():
+    r_axis = v.shape[-1] if name.endswith("A") else v.shape[-2]
+    assert r_axis == 4, (name, v.shape)
+assert st.opt_step == 2 * k
+solo_again = GroupRuntime.from_states(cfg, params, [st], **kw)
+solo_again.run(k)
+
+got = ([l[0] for l in ra.report.per_job_losses]
+       + [l[0] for l in merged.report.per_job_losses]
+       + [l[0] for l in solo_again.report.per_job_losses])
+np.testing.assert_allclose(got, ref_losses, rtol=1e-4, atol=1e-4)
+have, want = solo_again.export("small"), rt_ref.export("small")
+assert have.opt_step == want.opt_step == 3 * k
+for name in want.adapter:
+    a = np.asarray(have.adapter[name])
+    b = np.asarray(want.adapter[name])
+    np.testing.assert_allclose(a, b, atol=2.5e-2, rtol=0)
+    assert np.mean(np.abs(a - b) < 1e-5) > 0.85, name
+print("PIPELINE LOSSLESS OK")
+"""
+
+
+def test_pipeline_group_migration_is_lossless(forced_devices):
+    """Pipeline variant of the elastic contract (DESIGN.md §15): a
+    mixed-rank job trained solo -> merged into a stage-partitioned
+    (P=2) pipeline group -> extracted reproduces the solo-throughout
+    trajectory at the sharded float tolerance.  Runs in a forced-8-
+    device subprocess (stage 2 x data 4); the deeper multi-mesh
+    trajectory lives in tests/sharded_worker.py
+    (pipeline_migration_trajectory)."""
+    import os
+    if os.environ.get("REPRO_SKIP_SHARDED_WORKER"):
+        # devices=8 CI leg: sharded_worker already runs the pipeline
+        # trajectory under the same forced-8 subprocess budget
+        pytest.skip("REPRO_SKIP_SHARDED_WORKER set")
+    proc = forced_devices(_PIPELINE_LOSSLESS, devices=8, timeout=900)
+    assert proc.returncode == 0 and "PIPELINE LOSSLESS OK" in proc.stdout, \
+        f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-3000:]}"
+
+
 def test_impls_agree_on_train_step(setup):
     cfg, jobs, params, adapters, batches = setup
     outs = {}

@@ -6,6 +6,7 @@ pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.nanobatch import (AIMDController, optimal_nano,
+                                  pipeline_tick_counts,
                                   simulate_step_time)
 from repro.core.ssm import valid_nano_counts
 
@@ -13,6 +14,41 @@ from repro.core.ssm import valid_nano_counts
 def test_valid_nano_counts():
     assert valid_nano_counts(12) == [1, 2, 3, 4, 6, 12]
     assert valid_nano_counts(12, max_n=4) == [1, 2, 3, 4]
+
+
+def test_valid_nano_counts_stages_floor():
+    # a P-deep pipeline needs >= P micros per job to have any steady
+    # state at all; shallower granulations are filtered out
+    assert valid_nano_counts(12, stages=2) == [2, 3, 4, 6, 12]
+    assert valid_nano_counts(12, stages=4) == [4, 6, 12]
+    assert valid_nano_counts(12, stages=1) == [1, 2, 3, 4, 6, 12]
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 96), max_n=st.one_of(st.none(),
+                                                st.integers(1, 96)),
+       stages=st.integers(1, 8))
+def test_property_valid_nano_counts_stages(rows, max_n, stages):
+    base = valid_nano_counts(rows, max_n)
+    got = valid_nano_counts(rows, max_n, stages=stages)
+    # the stages filter is exactly "drop n < stages" over the base set
+    assert got == [n for n in base if stages <= 1 or n >= stages]
+    for n in got:
+        assert rows % n == 0
+
+
+def test_pipeline_tick_counts():
+    # K jobs at N micros each: fused schedule ramps once, per-job GPipe
+    # ramps K times — the (K-1)(P-1) bubble-filling win
+    multi, gpipe = pipeline_tick_counts([2, 2], stages=2)
+    assert (multi, gpipe) == (5, 6)
+    multi, gpipe = pipeline_tick_counts([4, 4, 4], stages=4)
+    assert (multi, gpipe) == (15, 21)
+    assert gpipe - multi == (3 - 1) * (4 - 1)
+    # single job: no cross-job filling possible, the two coincide
+    assert pipeline_tick_counts([8], stages=4) == (11, 11)
+    # P=1 degenerates to plain nano-batching (no ramp at all)
+    assert pipeline_tick_counts([3, 5], stages=1) == (8, 8)
 
 
 def run_controller(rows, t_comp, t_comm, steps=40, noise=0.0, seed=0):

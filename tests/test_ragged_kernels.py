@@ -207,6 +207,58 @@ def test_nano_slice_order_rank_desc_matches_job_order():
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_uniform_rank_layout_dispatches_to_masked(monkeypatch, impl):
+    """Homogeneous padded widths route MultiLoRA.apply to the MASKED
+    family (the ragged bookkeeping is pure overhead when there is no
+    padding waste to skip) — values still match the gather oracle, and
+    mixed TRUE ranks under uniform padding (4 and 8 both pad to 8)
+    stay safe via the rank mask.  Heterogeneous layouts must keep the
+    ragged family."""
+    from repro.core.lora import MultiLoRA
+    real_ragged = ops.fused_lora_ragged
+    rng = np.random.default_rng(11)
+    seq, bt = 8, 8
+    ranks = (4, 8, 8)                       # true ranks differ; pads don't
+    layout, Ap, Bp, x, ids, scal, rows = make_packed_case(
+        rng, ranks, (2, 1, 1), 32, 48, seq, bt)
+    assert layout.is_uniform
+    rk = jnp.asarray(ranks, jnp.int32)
+    Af, Bf = unpack_dense(Ap, Bp, layout)
+    want = ref.fused_lora_ref(x, Af, Bf, ids, rk, scal)
+
+    def boom(*a, **k):
+        raise AssertionError("uniform layout must not take the ragged path")
+
+    monkeypatch.setattr(ops, "fused_lora_ragged", boom)
+    B = x.shape[0] // seq
+    ctx = MultiLoRA(adapter_ids=ids.reshape(B, seq)[:, 0], ranks=rk,
+                    scalings=scal, impl=impl, block_t=bt, layout=layout,
+                    rows_all=rows)
+    y = ctx.apply(x.reshape(B, seq, -1), {"A": Ap, "B": Bp})
+    np.testing.assert_allclose(np.asarray(y).reshape(x.shape[0], -1),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    # heterogeneous widths: the ragged family must still be the one called
+    layout2, Ap2, Bp2, x2, ids2, scal2, rows2 = make_packed_case(
+        rng, (4, 64), (2, 2), 32, 48, seq, bt)
+    assert not layout2.is_uniform
+    calls = []
+
+    def spy(*a, **k):
+        calls.append(1)
+        return real_ragged(*a, **k)
+
+    monkeypatch.setattr(ops, "fused_lora_ragged", spy)
+    B2 = x2.shape[0] // seq
+    ctx2 = MultiLoRA(adapter_ids=ids2.reshape(B2, seq)[:, 0],
+                     ranks=jnp.asarray((4, 64), jnp.int32),
+                     scalings=scal2, impl=impl, block_t=bt, layout=layout2,
+                     rows_all=rows2)
+    ctx2.apply(x2.reshape(B2, seq, -1), {"A": Ap2, "B": Bp2})
+    assert calls, "heterogeneous layout must route to the ragged family"
+
+
 def test_unsharded_nano_slices_use_exact_fallback(tiny_cfg, two_jobs):
     """The unsharded nano split is CONTIGUOUS, not job-proportional: a
     divisible sub-batch must not be described by scaled static tile

@@ -30,6 +30,8 @@ SCENARIOS = [
     "nano_regranulation_sharded",
     "ragged_mixed_rank_parity",
     "ragged_nano_rank_desc_order",
+    "pipeline_parity_vs_single_submesh",
+    "pipeline_migration_trajectory",
     "migration_across_meshes",
     "gather_solo_bitexact",
     "local_mesh_clamps",
